@@ -1,0 +1,41 @@
+"""Shared benchmark utilities: timing + CSV emission.
+
+Every benchmark module exposes `run(budget: str) -> list[Row]`; run.py
+drives them all and prints `name,us_per_call,derived` CSV per row.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any
+
+import jax
+
+
+@dataclasses.dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: dict[str, Any]
+
+    def csv(self) -> str:
+        derived = ";".join(f"{k}={v}" for k, v in self.derived.items())
+        return f"{self.name},{self.us_per_call:.1f},{derived}"
+
+
+def timed(fn, *args, iters: int = 1, warmup: int = 1):
+    """Wall-clock a jax callable (block_until_ready)."""
+    out = None
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    dt = (time.perf_counter() - t0) / iters
+    return out, dt * 1e6     # µs
+
+
+def fmt(x: float, digits: int = 4) -> str:
+    return f"{x:.{digits}g}"

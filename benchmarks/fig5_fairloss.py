@@ -1,0 +1,49 @@
+"""Paper Fig. 5 (§6.3): heterogeneous fair loss tuning on long-tail
+data.  Outer variable = per-class loss weights, inner = classifier;
+agents receive heterogeneity-q splits (q ∈ {0.1, 0.5}) of an imbalanced
+(long-tail) class distribution.
+
+Reproduction targets: DAGM reaches balanced validation accuracy
+comparable to (or better than) DGTBO / DGBO / MA-DBO at both
+heterogeneity levels, at strictly lower per-round communication; runtime
+comparison favors DAGM (vector-only rounds).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (DAGMConfig, dagm_run, dgbo_run, dgtbo_run,
+                        madbo_run, make_network)
+from repro.core.problems import balanced_accuracy, fair_loss_tuning
+from .common import Row, timed
+
+
+def run(budget: str = "small") -> list[Row]:
+    n = 10
+    K = 60 if budget == "small" else 200
+    net = make_network("erdos_renyi", n, r=0.5, seed=0)
+    rows = []
+    for q in (0.1, 0.5):
+        prob = fair_loss_tuning(n, d=16, n_classes=10, m_per=40, q=q,
+                                seed=0)
+        cfg = DAGMConfig(alpha=0.1, beta=0.1, K=K, M=5, U=3)
+        res, us = timed(lambda c=cfg, p=prob: dagm_run(p, net, c), iters=1)
+        rows.append(Row(f"fig5/q={q}/DAGM", us, {
+            "balanced_acc": f"{balanced_accuracy(prob, np.asarray(res.y)):.3f}",
+            "outer_loss_last": f"{float(res.metrics['outer_obj'][-1]):.4f}",
+        }))
+        for name, runner, kw in [
+            ("DGTBO", dgtbo_run, dict(N=3)),
+            ("DGBO", dgbo_run, dict(b=3)),
+            ("MA-DBO", madbo_run, dict(U=3)),
+        ]:
+            r, us = timed(lambda rn=runner, k=kw, p=prob: rn(
+                p, net, alpha=0.1, beta=0.1, K=K, M=5, **k), iters=1)
+            rows.append(Row(f"fig5/q={q}/{name}", us, {
+                "balanced_acc":
+                    f"{balanced_accuracy(prob, np.asarray(r.y)):.3f}",
+                "outer_loss_last":
+                    f"{float(r.metrics['outer_obj'][-1]):.4f}",
+                "floats_per_round": r.comm_floats_per_round,
+            }))
+    return rows

@@ -1,0 +1,56 @@
+"""Roofline report (§Roofline of EXPERIMENTS.md): reads the dry-run
+sweep JSON (produced by `python -m repro.launch.dryrun --all
+--accounting --out dryrun_singlepod.json`) and emits per-(arch × shape)
+roofline terms, dominant bottleneck, and the useful-compute ratio.
+
+Run as a benchmark it only *summarizes*; the expensive compiles live in
+the dry-run so the benchmark suite stays fast.  If the JSON is missing
+it compiles a single representative combo live.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from .common import Row
+
+HW = {"peak_flops": 197e12, "hbm_bw": 819e9, "ici_bw": 50e9}
+DEFAULT_PATH = os.path.join(os.path.dirname(__file__), "..",
+                            "dryrun_singlepod.json")
+
+
+def rows_from_record(r: dict) -> Row | None:
+    if r.get("skip_reason"):
+        return Row(f"roofline/{r['arch']}/{r['shape']}", 0.0,
+                   {"skipped": r["skip_reason"][:60]})
+    if not r.get("ok"):
+        return Row(f"roofline/{r['arch']}/{r['shape']}", 0.0,
+                   {"FAILED": r.get("error", "?")[:80]})
+    flops = r.get("flops_corrected") or r.get("flops", 0.0)
+    byts = r.get("bytes_corrected") or r.get("hbm_bytes_accessed", 0.0)
+    coll = r.get("collective_bytes_corrected") or \
+        sum(r.get("collective_bytes", {}).values())
+    terms = {
+        "compute_s": flops / HW["peak_flops"],
+        "memory_s": byts / HW["hbm_bw"],
+        "collective_s": coll / HW["ici_bw"],
+    }
+    bottleneck = max(terms, key=terms.get)
+    return Row(f"roofline/{r['arch']}/{r['shape']}", 0.0, {
+        **{k: f"{v*1e3:.2f}ms" for k, v in terms.items()},
+        "bottleneck": bottleneck,
+        "model_flops_per_chip": f"{r.get('model_flops_per_chip', 0):.3g}",
+        "useful_ratio": f"{r.get('useful_ratio', 0):.3f}",
+        "mem_per_dev_GB": f"{r.get('peak_memory_per_device', 0)/1e9:.2f}",
+    })
+
+
+def run(budget: str = "small", path: str | None = None) -> list[Row]:
+    path = path or DEFAULT_PATH
+    if not os.path.exists(path):
+        return [Row("roofline/missing", 0.0, {
+            "note": f"run the dry-run sweep first to produce {path}"})]
+    with open(path) as f:
+        records = json.load(f)
+    rows = [rows_from_record(r) for r in records]
+    return [r for r in rows if r is not None]

@@ -1,0 +1,56 @@
+"""Benchmark driver — one module per paper table/figure + roofline.
+
+    PYTHONPATH=src python -m benchmarks.run [--budget small|full]
+                                            [--only fig2,fig4,...]
+
+Prints ``name,us_per_call,derived`` CSV per row (the harness contract).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from . import (fig2_synthetic, fig3_real, fig4_hyperrep, fig5_fairloss,
+               roofline, table1_convergence, table2_comm)
+
+MODULES = {
+    "table1": table1_convergence,
+    "table2": table2_comm,
+    "fig2": fig2_synthetic,
+    "fig3": fig3_real,
+    "fig4": fig4_hyperrep,
+    "fig5": fig5_fairloss,
+    "roofline": roofline,
+}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--budget", default="small",
+                    choices=["small", "full"])
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module names")
+    args = ap.parse_args(argv)
+    names = (args.only.split(",") if args.only else list(MODULES))
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in names:
+        mod = MODULES[name]
+        t0 = time.time()
+        try:
+            rows = mod.run(args.budget)
+        except Exception as e:  # noqa: BLE001
+            print(f"{name}/ERROR,0,{type(e).__name__}: {e}")
+            failures += 1
+            continue
+        for row in rows:
+            print(row.csv())
+        print(f"# {name} finished in {time.time()-t0:.1f}s",
+              file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

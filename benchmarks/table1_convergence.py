@@ -1,0 +1,88 @@
+"""Paper Table 1: iteration complexity of DAGM under strongly convex /
+convex / non-convex outer objectives.
+
+For each regime we run DAGM on a synthetic bilevel problem with known
+ground truth and report (a) iterations to reach the stationarity /
+suboptimality threshold ε and (b) the empirical linear/sublinear rate,
+checking the *shape* of the Table-1 claims:
+
+  strongly convex:  f(x̄_K) − f*            → linear (log 1/ε iterations)
+  convex:           f(x̂_K) − f*            → O(1/K)-ish decay
+  non-convex:       (1/K)Σ‖∇f(x̄_k)‖²       → O(1/K) average decay
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import (DAGMConfig, dagm_run, make_network,
+                        quadratic_bilevel)
+from repro.core.problems import BilevelProblem, ho_logistic
+from .common import Row, timed
+
+
+def _iters_to(trace: np.ndarray, eps: float) -> int:
+    idx = np.nonzero(trace <= eps)[0]
+    return int(idx[0]) + 1 if len(idx) else -1
+
+
+def run(budget: str = "small") -> list[Row]:
+    K = 150 if budget == "small" else 400
+    n = 16
+    net = make_network("erdos_renyi", n, r=0.5, seed=0)
+    rows = []
+
+    # All regimes start away from stationarity (x0 = 0 is near-optimal
+    # for these synthetic problems, which would hide the decay).
+    import jax
+    def far_x0(prob, scale=2.0, seed=7):
+        return jnp.broadcast_to(
+            scale * jax.random.normal(jax.random.PRNGKey(seed),
+                                      (prob.d1,)),
+            (prob.n, prob.d1)).astype(jnp.float32)
+
+    # ---- strongly convex (mu_f > 0) ----
+    prob = quadratic_bilevel(n, 4, 6, seed=0, mu_f=0.5)
+    cfg = DAGMConfig(alpha=0.08, beta=0.15, K=K, M=10, U=5)
+    res, us = timed(lambda: dagm_run(prob, net, cfg, x0=far_x0(prob)),
+                    iters=1)
+    gap = np.asarray(res.metrics["outer_obj"])
+    gap = gap - gap.min() + 1e-12
+    # empirical linear rate: fit log(gap) slope over the first half
+    half = K // 2
+    slope = np.polyfit(np.arange(half), np.log(gap[:half] + 1e-12), 1)[0]
+    rows.append(Row("table1/strongly_convex", us, {
+        "iters_to_0.1": _iters_to(gap / gap[0], 0.1),
+        "iters_to_0.01": _iters_to(gap / gap[0], 0.01),
+        "log_rate_per_iter": f"{slope:.4f}",
+        "linear_decay": bool(slope < 0),
+    }))
+
+    # ---- convex (mu_f = 0) ----
+    probc = quadratic_bilevel(n, 4, 6, seed=1, mu_f=0.0)
+    cfgc = DAGMConfig(alpha=0.08, beta=0.15, K=K, M=10, U=5)
+    resc, usc = timed(lambda: dagm_run(probc, net, cfgc,
+                                       x0=far_x0(probc)), iters=1)
+    hg = np.asarray(resc.metrics["true_hypergrad_norm_sq"])
+    rows.append(Row("table1/convex", usc, {
+        "hypergrad_sq_first": f"{hg[0]:.3e}",
+        "hypergrad_sq_last": f"{hg[-1]:.3e}",
+        "monotone_fraction": f"{np.mean(np.diff(hg) <= 1e-9):.2f}",
+        "decayed": bool(hg[-1] < 0.5 * hg[0]),
+    }))
+
+    # ---- non-convex outer (logistic HO: f non-convex in (x,y) jointly) --
+    probn = ho_logistic(n, d=8, m_per=20, seed=0)
+    cfgn = DAGMConfig(alpha=0.05, beta=0.1, K=K, M=10, U=3)
+    resn, usn = timed(lambda: dagm_run(probn, net, cfgn,
+                                       x0=far_x0(probn, scale=0.5)),
+                      iters=1)
+    hgn = np.asarray(resn.metrics["hypergrad_est_norm_sq"])
+    avg = np.cumsum(hgn) / (np.arange(K) + 1)
+    rows.append(Row("table1/nonconvex", usn, {
+        "avg_grad_sq_first": f"{avg[0]:.3e}",
+        "avg_grad_sq_last": f"{avg[-1]:.3e}",
+        "ratio_K": f"{avg[-1] / avg[0]:.3f}",
+        "decaying_avg": bool(avg[-1] < avg[0]),
+    }))
+    return rows

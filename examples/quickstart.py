@@ -1,0 +1,38 @@
+"""Quickstart: decentralized bilevel optimization with DAGM in ~40 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Sets up 16 agents on a random communication graph, builds an
+analytically solvable bilevel problem, runs Algorithm 2 (DAGM) and
+checks the hyper-gradient of the *original* (unpenalized) problem is
+driven toward zero — the paper's Theorem 7/11 guarantee.
+"""
+import numpy as np
+
+from repro.core import (DAGMConfig, dagm_run, make_network,
+                        quadratic_bilevel)
+
+# 1. the decentralized network (Metropolis weights, Assumption A checked)
+net = make_network("erdos_renyi", n=16, r=0.5, seed=0)
+print(f"network: n={net.n}, |E|={net.num_edges}, "
+      f"mixing rate sigma={net.sigma:.3f}")
+
+# 2. a bilevel problem: each agent i holds local objectives f_i, g_i
+prob = quadratic_bilevel(n=16, d1=4, d2=8, seed=0, mu_f=0.3)
+
+# 3. run DAGM (Algorithm 2): M inner DGD steps + DIHGP hyper-gradient
+cfg = DAGMConfig(alpha=0.05, beta=0.1, K=600, M=10, U=5)
+res = dagm_run(prob, net, cfg)
+
+hg = np.asarray(res.metrics["true_hypergrad_norm_sq"])
+obj = np.asarray(res.metrics["outer_obj"])
+cons = float(res.metrics["consensus_x"][-1])
+print(f"outer objective:    {obj[0]:.4f} -> {obj[-1]:.4f}")
+print(f"true ||∇Φ(x̄)||²:    {hg[0]:.2e} -> {hg[-1]:.2e}")
+print(f"consensus error:    {cons:.2e}")
+print(f"per-round comms:    {cfg.comm_vectors_per_round()} "
+      f"(vectors only — no matrices)")
+# the residual is the O(alpha + sqrt(beta)) penalty bias (Thm 7); the
+# corollaries shrink alpha, beta with K to drive it to zero
+assert hg[-1] < 0.4 * hg[0], "DAGM should drive the hyper-gradient down"
+print("OK")

@@ -1,0 +1,61 @@
+"""Minimal pytree checkpointing: params/opt-state ⇄ compressed .npz.
+
+Layout: <dir>/step_<N>.npz with flattened key paths; restore rebuilds
+into a provided template pytree (shape/dtype checked).  Good enough for
+single-host experiments and CI; a production deployment would swap in a
+tensorstore/OCDBT backend behind the same interface.
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import Any
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def _flatten(tree: Any) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(directory: str, step: int, tree: Any) -> str:
+    os.makedirs(directory, exist_ok=True)
+    path = os.path.join(directory, f"step_{step:08d}.npz")
+    tmp = path + ".tmp.npz"          # savez keeps names ending in .npz
+    np.savez_compressed(tmp, **_flatten(tree))
+    os.replace(tmp, path)
+    return path
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(directory)
+             if (m := re.fullmatch(r"step_(\d+)\.npz", f))]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, step: int, template: Any) -> Any:
+    path = os.path.join(directory, f"step_{step:08d}.npz")
+    with np.load(path) as data:
+        leaves_paths, treedef = jax.tree_util.tree_flatten_with_path(
+            template)
+        new_leaves = []
+        for path_t, leaf in leaves_paths:
+            key = "/".join(str(p) for p in path_t)
+            arr = data[key]
+            if arr.dtype.kind == "V":
+                # ml_dtypes (bfloat16, ...) round-trip through .npz as
+                # raw void records; view them back as the template dtype.
+                arr = arr.view(np.dtype(leaf.dtype))
+            if tuple(arr.shape) != tuple(leaf.shape):
+                raise ValueError(
+                    f"shape mismatch for {key}: {arr.shape} vs {leaf.shape}")
+            new_leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)

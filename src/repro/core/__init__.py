@@ -1,0 +1,19 @@
+"""Core DAGM library: the paper's contribution as composable JAX modules.
+
+Layers: mixing (network/W), problems (bilevel zoo), penalty (Lemma 3/4),
+dihgp (Algorithm 1), dagm (Algorithm 2), baselines (DGBO/DGTBO/FedNest/
+MA-DBO).
+"""
+from .mixing import (Network, make_network, mixing_rate, spectral_gap,
+                     neumann_rho, metropolis_weights, max_degree_weights,
+                     mix_apply, laplacian_apply, check_assumption_a)
+from .problems import (BilevelProblem, quadratic_bilevel, ho_regression,
+                       ho_logistic, ho_svm, ho_softmax,
+                       hyper_representation, fair_loss_tuning)
+from .penalty import (F_objective, G_objective, grad_y_G, inner_dgd_step,
+                      penalized_hessian, exact_ihgp, surrogate_hypergrad,
+                      consensus_error)
+from .dihgp import dihgp_dense, dihgp_matrix_free, B_apply
+from .dagm import DAGMConfig, DAGMResult, dagm_run, dagm_outer_step
+from .baselines import (BaselineResult, dgbo_run, dgtbo_run, fednest_run,
+                        madbo_run)

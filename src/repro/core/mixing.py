@@ -1,0 +1,263 @@
+"""Mixing matrices and network topologies (paper §3, Assumption A).
+
+The decentralized network G = (V, E) is encoded by a nonnegative,
+symmetric, doubly-stochastic mixing matrix W.  This module provides
+
+  * graph constructors (ring, 2k-regular circulant, Erdős–Rényi with a
+    connectivity ratio r, star, complete),
+  * the two weight schemes used in the paper — Metropolis weights
+    (Example 2 / Eq. 22) and maximum-degree weights (Example 1),
+  * spectral quantities: the mixing rate sigma = ||W - (1/n)11^T||
+    (Eq. 2), theta / Theta self-weight bounds (A4), and rho of Lemma 5,
+  * Assumption-A validation used by tests.
+
+Everything returns plain numpy / jnp arrays; W is small (n x n with n =
+number of agents), so it is always materialized.  The *application* of W
+to stacked per-agent states is `mix_apply` (dense) — the sharded runtime
+uses ring/circulant graphs whose W·y is computed with lax.ppermute
+instead (see repro.distributed.collectives).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Graph constructors (adjacency, no self-loops)
+# ---------------------------------------------------------------------------
+
+def ring_graph(n: int) -> np.ndarray:
+    """Cycle graph C_n; each agent talks to left+right neighbors."""
+    if n < 2:
+        raise ValueError("ring requires n >= 2")
+    adj = np.zeros((n, n), dtype=bool)
+    idx = np.arange(n)
+    adj[idx, (idx + 1) % n] = True
+    adj[(idx + 1) % n, idx] = True
+    return adj
+
+
+def circulant_graph(n: int, offsets: Sequence[int]) -> np.ndarray:
+    """2k-regular circulant: agent i adjacent to i +/- o for o in offsets."""
+    adj = np.zeros((n, n), dtype=bool)
+    idx = np.arange(n)
+    for o in offsets:
+        o = int(o) % n
+        if o == 0:
+            continue
+        adj[idx, (idx + o) % n] = True
+        adj[(idx + o) % n, idx] = True
+    return adj
+
+
+def complete_graph(n: int) -> np.ndarray:
+    adj = np.ones((n, n), dtype=bool)
+    np.fill_diagonal(adj, False)
+    return adj
+
+
+def star_graph(n: int) -> np.ndarray:
+    """Star: node 0 is the center (the federated/parameter-server topology)."""
+    adj = np.zeros((n, n), dtype=bool)
+    adj[0, 1:] = True
+    adj[1:, 0] = True
+    return adj
+
+
+def erdos_renyi_graph(n: int, r: float, seed: int = 0) -> np.ndarray:
+    """Random connected graph with connectivity ratio r (paper uses r=0.5).
+
+    Edges are sampled iid Bernoulli(r); a ring is superimposed to
+    guarantee connectivity (standard practice, keeps W well defined).
+    """
+    rng = np.random.default_rng(seed)
+    upper = rng.random((n, n)) < r
+    adj = np.triu(upper, 1)
+    adj = adj | adj.T
+    adj |= ring_graph(n)
+    np.fill_diagonal(adj, False)
+    return adj
+
+
+def is_connected(adj: np.ndarray) -> bool:
+    n = adj.shape[0]
+    seen = np.zeros(n, dtype=bool)
+    stack = [0]
+    seen[0] = True
+    while stack:
+        i = stack.pop()
+        for j in np.nonzero(adj[i])[0]:
+            if not seen[j]:
+                seen[j] = True
+                stack.append(int(j))
+    return bool(seen.all())
+
+
+# ---------------------------------------------------------------------------
+# Weight schemes
+# ---------------------------------------------------------------------------
+
+def metropolis_weights(adj: np.ndarray) -> np.ndarray:
+    """Metropolis weights, paper Example 2 / Eq. (22).
+
+    w_ij = 1 / (1 + max(deg i, deg j)) on edges; self-weights make rows
+    sum to one.  Symmetric + doubly stochastic by construction.
+    """
+    n = adj.shape[0]
+    deg = adj.sum(axis=1)
+    W = np.zeros((n, n), dtype=np.float64)
+    ii, jj = np.nonzero(adj)
+    W[ii, jj] = 1.0 / (1.0 + np.maximum(deg[ii], deg[jj]))
+    W[np.arange(n), np.arange(n)] = 1.0 - W.sum(axis=1)
+    return W
+
+
+def max_degree_weights(adj: np.ndarray) -> np.ndarray:
+    """Maximum-degree weights, paper Example 1: uniform 1/n on edges."""
+    n = adj.shape[0]
+    deg = adj.sum(axis=1)
+    W = adj.astype(np.float64) / n
+    W[np.arange(n), np.arange(n)] = 1.0 - deg / n
+    return W
+
+
+def uniform_averaging(n: int) -> np.ndarray:
+    """W = (1/n) 11^T — the 'centralized' limit (complete graph, sigma=0)."""
+    return np.full((n, n), 1.0 / n)
+
+
+# ---------------------------------------------------------------------------
+# Spectral quantities + Assumption A checks
+# ---------------------------------------------------------------------------
+
+def mixing_rate(W: np.ndarray) -> float:
+    """sigma = ||W - (1/n)11^T||_2 = max(|lambda_2|, |lambda_n|)  (Eq. 2)."""
+    n = W.shape[0]
+    M = W - np.full((n, n), 1.0 / n)
+    return float(np.linalg.norm(M, 2))
+
+
+def self_weight_bounds(W: np.ndarray) -> tuple[float, float]:
+    """(theta, Theta) of Assumption A4: theta <= w_ii <= Theta."""
+    d = np.diag(W)
+    return float(d.min()), float(d.max())
+
+
+def neumann_rho(W: np.ndarray, beta: float, mu_g: float) -> float:
+    """rho = 2(1-theta) / (2(1-Theta) + beta*mu_g)  (Lemma 5)."""
+    theta, Theta = self_weight_bounds(W)
+    return 2.0 * (1.0 - theta) / (2.0 * (1.0 - Theta) + beta * mu_g)
+
+
+def spectral_gap(W: np.ndarray) -> float:
+    return 1.0 - mixing_rate(W)
+
+
+def check_assumption_a(W: np.ndarray, adj: np.ndarray | None = None,
+                       atol: float = 1e-10) -> None:
+    """Raise AssertionError unless W satisfies Assumption A1–A4."""
+    n = W.shape[0]
+    assert W.shape == (n, n)
+    assert np.all(W >= -atol), "W must be nonnegative"
+    assert np.allclose(W, W.T, atol=atol), "W must be symmetric"
+    assert np.allclose(W.sum(axis=1), 1.0, atol=atol), "rows must sum to 1"
+    assert np.allclose(W.sum(axis=0), 1.0, atol=atol), "cols must sum to 1"
+    if adj is not None:
+        off = ~np.eye(n, dtype=bool)
+        assert np.all((np.abs(W) > atol)[off] <= adj[off]), \
+            "A1: w_ij != 0 only on edges"
+    # A3: null(I - W) = span(1)  <=> eigenvalue 1 has multiplicity one
+    evals = np.linalg.eigvalsh(W)
+    assert np.sum(np.abs(evals - 1.0) < 1e-8) == 1, \
+        "A3: eigenvalue 1 must be simple (graph connected)"
+    assert evals.min() > -1.0 + 1e-12, "eigenvalues must lie in (-1, 1]"
+    theta, Theta = self_weight_bounds(W)
+    assert 0.0 < theta <= Theta <= 1.0, "A4: 0 < theta <= w_ii <= Theta <= 1"
+
+
+# ---------------------------------------------------------------------------
+# Topology bundle
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Network:
+    """A validated decentralized network: adjacency + mixing matrix."""
+    adj: np.ndarray
+    W: np.ndarray
+    name: str = "network"
+
+    @property
+    def n(self) -> int:
+        return self.W.shape[0]
+
+    @property
+    def sigma(self) -> float:
+        return mixing_rate(self.W)
+
+    @property
+    def theta_bounds(self) -> tuple[float, float]:
+        return self_weight_bounds(self.W)
+
+    def neighbors(self, i: int) -> np.ndarray:
+        return np.nonzero(self.adj[i])[0]
+
+    def W_jnp(self, dtype=jnp.float32) -> jnp.ndarray:
+        return jnp.asarray(self.W, dtype=dtype)
+
+    @property
+    def num_edges(self) -> int:
+        return int(self.adj.sum()) // 2
+
+
+def make_network(kind: str, n: int, *, weights: str = "metropolis",
+                 r: float = 0.5, offsets: Sequence[int] = (1,),
+                 seed: int = 0) -> Network:
+    """Factory: kind in {ring, circulant, erdos_renyi, complete, star,
+    uniform}; weights in {metropolis, max_degree}."""
+    if kind == "ring":
+        adj = ring_graph(n)
+    elif kind == "circulant":
+        adj = circulant_graph(n, offsets)
+    elif kind == "erdos_renyi":
+        adj = erdos_renyi_graph(n, r, seed)
+    elif kind == "complete":
+        adj = complete_graph(n)
+    elif kind == "star":
+        adj = star_graph(n)
+    elif kind == "uniform":
+        adj = complete_graph(n)
+        W = uniform_averaging(n)
+        check_assumption_a(W, adj)
+        return Network(adj=adj, W=W, name=f"uniform-{n}")
+    else:
+        raise ValueError(f"unknown graph kind {kind!r}")
+    if not is_connected(adj):
+        raise ValueError(f"{kind} graph with n={n} is not connected")
+    if weights == "metropolis":
+        W = metropolis_weights(adj)
+    elif weights == "max_degree":
+        W = max_degree_weights(adj)
+    else:
+        raise ValueError(f"unknown weight scheme {weights!r}")
+    check_assumption_a(W, adj)
+    return Network(adj=adj, W=W, name=f"{kind}-{weights}-{n}")
+
+
+# ---------------------------------------------------------------------------
+# Applying W to stacked per-agent states
+# ---------------------------------------------------------------------------
+
+def mix_apply(W: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """(W ⊗ I_d) y for stacked y of shape (n, d) [or (n, ...)]: W @ y."""
+    flat = y.reshape(y.shape[0], -1)
+    out = W.astype(flat.dtype) @ flat
+    return out.reshape(y.shape)
+
+
+def laplacian_apply(W: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """((I - W) ⊗ I_d) y — the penalty-gradient mixing term."""
+    return y - mix_apply(W, y)

@@ -1,0 +1,109 @@
+"""Penalized consensus reformulation (paper Lemma 3 / Eq. (4)).
+
+For stacked variables x ∈ R^{n×d1}, y ∈ R^{n×d2} and mixing matrix W:
+
+    F(x, y̌*(x)) = (1/2α) xᵀ(I−Ẃ)x + 1ᵀ f(x, y̌*(x))          (4a)
+    G(x, y)      = (1/2β) yᵀ(I−W)y + 1ᵀ g(x, y)               (4b)
+
+with the extended matrices Ẃ = W⊗I_{d1}, W = W⊗I_{d2} applied to the
+stacked (n, d) layout via `mixing.mix_apply`.  This module provides the
+penalized objectives, their gradients (Lemma 4 / Eq. (6)), the surrogate
+hyper-gradient of Eq. (7), and the exact penalized Hessian H of Eq. (8)
+(reference tier, materialized) used to unit-test DIHGP.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .mixing import laplacian_apply, mix_apply
+from .problems import BilevelProblem
+
+Array = jnp.ndarray
+
+
+def penalty_quadratic(W: Array, z: Array) -> Array:
+    """(1/2) zᵀ((I−W)⊗I)z  for stacked z of shape (n, d)."""
+    return 0.5 * jnp.vdot(z, laplacian_apply(W, z))
+
+
+def G_objective(prob: BilevelProblem, W: Array, beta: float,
+                x: Array, y: Array) -> Array:
+    """Penalized inner objective G(x, y) of Eq. (4b)."""
+    return penalty_quadratic(W, y) / beta + jnp.sum(prob.g_stacked(x, y))
+
+
+def F_objective(prob: BilevelProblem, W: Array, alpha: float,
+                x: Array, y: Array) -> Array:
+    """Penalized outer objective F(x, y) of Eq. (4a) evaluated at y."""
+    return penalty_quadratic(W, x) / alpha + jnp.sum(prob.f_stacked(x, y))
+
+
+def grad_y_G(prob: BilevelProblem, W: Array, beta: float,
+             x: Array, y: Array) -> Array:
+    """q = ∇_y G = (1/β)(I−W)y + ∇_y g(x,y)  (stacked (n,d2)); Eq. (16a)."""
+    return laplacian_apply(W, y) / beta + prob.grad_y_g(x, y)
+
+
+def inner_dgd_step(prob: BilevelProblem, W: Array, beta: float,
+                   x: Array, y: Array) -> Array:
+    """One decentralized GD step on the inner problem, Eq. (15)–(16):
+       y⁺ = y − β q = W y − β ∇_y g(x, y).  Neighbor-only communication."""
+    return mix_apply(W, y) - beta * prob.grad_y_g(x, y)
+
+
+def penalized_hessian(prob: BilevelProblem, W: Array, beta: float,
+                      x: Array, y: Array) -> Array:
+    """H = (I−W)⊗I_{d2} + β·blockdiag(∇²_y g_i)  ∈ R^{nd2×nd2}  (Eq. 8).
+
+    Reference tier only (materializes nd2 × nd2)."""
+    n, d2 = y.shape
+    Wl = jnp.kron(jnp.eye(n, dtype=y.dtype) - W.astype(y.dtype),
+                  jnp.eye(d2, dtype=y.dtype))
+    Hg = prob.hess_yy_g(x, y)                      # (n, d2, d2)
+    blocks = jax.scipy.linalg.block_diag(*[Hg[i] for i in range(n)])
+    return Wl + beta * blocks
+
+
+def surrogate_hypergrad(prob: BilevelProblem, W: Array, alpha: float,
+                        beta: float, x: Array, y: Array, h: Array) -> Array:
+    """∇̃F of Eq. (7) given an (approximate) IHGP h  (stacked (n,d1)):
+
+       ∇̃F = (1/α)(I−Ẃ)x + ∇_x f(x,y) + β ∇²_xy g(x,y) · h
+    """
+    return laplacian_apply(W, x) / alpha + prob.grad_x_f(x, y) \
+        + beta * prob.cross_xy_g_times(x, y, h)
+
+
+def exact_ihgp(prob: BilevelProblem, W: Array, beta: float,
+               x: Array, y: Array) -> Array:
+    """h = −H^{-1} ∇_y f  (Eq. 8), via dense solve.  Reference tier."""
+    n, d2 = y.shape
+    H = penalized_hessian(prob, W, beta, x, y)
+    p = prob.grad_y_f(x, y).reshape(n * d2)
+    return (-jnp.linalg.solve(H, p)).reshape(n, d2)
+
+
+def exact_penalized_inner(prob: BilevelProblem, W: Array, beta: float,
+                          x: Array, y0: Array, iters: int = 2000) -> Array:
+    """y̌*(x): minimize G(x, ·) to high precision (reference/testing).
+
+    Gradient descent on G with a safe step 1/L_G (power-iteration bound
+    on the local curvature): the paper's own step β (Eq. 15/16) need not
+    satisfy Eq. (20) for arbitrary test problems, and this helper must
+    converge regardless so tests can compare against the true y̌*."""
+    from .dihgp import estimate_curvature_bound
+    hvp = lambda v: prob.hvp_yy_g(x, y0, v)
+    c = float(jnp.max(estimate_curvature_bound(hvp, y0.shape, iters=30)))
+    # L_G ≤ λmax(I−W)/β + L_g ≤ 2/β + c
+    t = 1.0 / (2.0 / beta + c)
+    def body(y, _):
+        return y - t * grad_y_G(prob, W, beta, x, y), None
+    y, _ = jax.lax.scan(body, y0, None, length=iters)
+    return y
+
+
+def consensus_error(z: Array) -> Array:
+    """‖z − z̄‖² / n — distance of the stack from its mean (diagnostic)."""
+    zbar = jnp.mean(z, axis=0, keepdims=True)
+    return jnp.sum((z - zbar) ** 2) / z.shape[0]

@@ -1,0 +1,449 @@
+"""Bilevel problem zoo (paper §6 + analytically solvable quadratics).
+
+A decentralized bilevel problem (paper Eq. (1)/(3)) is described by
+per-agent objectives
+
+    f_i(x_i, y_i; data_i)   (outer / validation)
+    g_i(x_i, y_i; data_i)   (inner / training, strongly convex in y)
+
+Reference-tier convention: x is stacked (n, d1), y is stacked (n, d2) —
+flat vectors per agent.  Problems whose natural parameters are pytrees
+(MLPs) ravel them.  `data` is a pytree whose leaves carry a leading agent
+axis n; `f` and `g` receive the per-agent slice.
+
+Provided problems
+-----------------
+* `quadratic_bilevel`      — closed-form y*(x) and hyper-gradient; the
+                             ground truth for DIHGP/DAGM unit tests.
+* `ho_regression`          — paper §6.1: regularized linear regression,
+                             g_i = train MSE + y^T diag(exp(x)) y,
+                             f_i = validation MSE.        (Fig. 2)
+* `ho_logistic`            — logistic loss variant.       (§6.1)
+* `ho_svm`                 — smoothed-hinge SVM variant.  (Fig. 3b)
+* `ho_softmax`             — softmax/CE variant.          (Fig. 3a)
+* `hyper_representation`   — paper §6.2: 2-layer MLP, outer = hidden
+                             layer, inner = output head.  (Fig. 4)
+* `fair_loss_tuning`       — paper §6.3: outer = per-class loss weights,
+                             inner = classifier params.   (Fig. 5)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class BilevelProblem:
+    """Per-agent bilevel objectives with stacked helpers."""
+    name: str
+    n: int
+    d1: int
+    d2: int
+    f: Callable[[Array, Array, Any], Array]   # (x_i, y_i, data_i) -> scalar
+    g: Callable[[Array, Array, Any], Array]
+    data: Any                                 # leaves: (n, ...)
+    mu_g: float                               # strong-convexity lb of g in y
+    # optional analytic pieces (quadratic problem only)
+    y_star: Callable[[Array], Array] | None = None       # (n,d1)->(n,d2)
+    hypergrad: Callable[[Array], Array] | None = None    # exact grad of
+    #                                   (1/n) sum_i f_i(x, y*(x)) wrt shared x
+
+    # ---- stacked conveniences (vmapped over the agent axis) ----
+    def f_stacked(self, x: Array, y: Array) -> Array:
+        return jax.vmap(self.f)(x, y, self.data)
+
+    def g_stacked(self, x: Array, y: Array) -> Array:
+        return jax.vmap(self.g)(x, y, self.data)
+
+    def grad_y_g(self, x: Array, y: Array) -> Array:
+        return jax.vmap(jax.grad(self.g, argnums=1))(x, y, self.data)
+
+    def grad_x_f(self, x: Array, y: Array) -> Array:
+        return jax.vmap(jax.grad(self.f, argnums=0))(x, y, self.data)
+
+    def grad_y_f(self, x: Array, y: Array) -> Array:
+        return jax.vmap(jax.grad(self.f, argnums=1))(x, y, self.data)
+
+    def hess_yy_g(self, x: Array, y: Array) -> Array:
+        """(n, d2, d2) local Hessians — reference tier only."""
+        return jax.vmap(jax.hessian(self.g, argnums=1))(x, y, self.data)
+
+    def hvp_yy_g(self, x: Array, y: Array, v: Array) -> Array:
+        """Stacked HVP: (∇²_y g_i) v_i, matrix-free (jvp of grad)."""
+        def one(xi, yi, di, vi):
+            gy = lambda yy: jax.grad(self.g, argnums=1)(xi, yy, di)
+            return jax.jvp(gy, (yi,), (vi,))[1]
+        return jax.vmap(one)(x, y, self.data, v)
+
+    def cross_xy_g_times(self, x: Array, y: Array, h: Array) -> Array:
+        """Stacked (∇²_xy g_i) h_i ∈ R^{d1}, matrix-free."""
+        def one(xi, yi, di, hi):
+            inner = lambda xx: jnp.vdot(
+                jax.grad(self.g, argnums=1)(xx, yi, di), hi)
+            return jax.grad(inner)(xi)
+        return jax.vmap(one)(x, y, self.data, h)
+
+    def mean_outer_at(self, xbar: Array, ybar_star: Array) -> Array:
+        """(1/n) Σ_i f_i(x̄, ȳ) — the consensus objective tracked in Thm 7."""
+        xs = jnp.broadcast_to(xbar, (self.n,) + xbar.shape)
+        ys = jnp.broadcast_to(ybar_star, (self.n,) + ybar_star.shape)
+        return jnp.mean(self.f_stacked(xs, ys))
+
+
+# ---------------------------------------------------------------------------
+# 1. Quadratic bilevel with closed forms (ground truth for tests)
+# ---------------------------------------------------------------------------
+
+def quadratic_bilevel(n: int, d1: int, d2: int, *, seed: int = 0,
+                      mu_g: float = 1.0, mu_f: float = 0.1,
+                      kappa: float = 5.0) -> BilevelProblem:
+    """g_i(x,y) = 1/2 yᵀA_i y − (P_i x + b_i)ᵀ y,
+       f_i(x,y) = 1/2 ||y − c_i||² + mu_f/2 ||x||².
+
+    A_i ≻ 0 with spectrum in [mu_g, kappa·mu_g].  Closed forms:
+       y*_i(x) = A_i^{-1}(P_i x + b_i)
+    For shared x, Φ(x) = (1/n)Σ f_i(x, ȳ*(x)) where the *consensus* inner
+    solution is ȳ*(x) = Ā^{-1}(P̄ x + b̄) with Ā = (1/n)ΣA_i etc. (the
+    inner problem averages g_i).  ∇Φ = mu_f x + Jᵀ(ȳ*(x) − c̄eff)…, we
+    just return the autodiff-exact hypergradient for testing.
+    """
+    rng = np.random.default_rng(seed)
+
+    def rand_spd(k):
+        Q, _ = np.linalg.qr(rng.standard_normal((d2, d2)))
+        ev = np.linspace(mu_g, kappa * mu_g, d2)
+        return (Q * ev) @ Q.T
+
+    A = np.stack([rand_spd(i) for i in range(n)])           # (n,d2,d2)
+    P = rng.standard_normal((n, d2, d1)) / np.sqrt(d1)
+    b = rng.standard_normal((n, d2))
+    c = rng.standard_normal((n, d2))
+    data = {"A": jnp.asarray(A), "P": jnp.asarray(P),
+            "b": jnp.asarray(b), "c": jnp.asarray(c)}
+
+    def g(x_i, y_i, d):
+        return 0.5 * y_i @ d["A"] @ y_i - (d["P"] @ x_i + d["b"]) @ y_i
+
+    def f(x_i, y_i, d):
+        return 0.5 * jnp.sum((y_i - d["c"]) ** 2) + 0.5 * mu_f * jnp.sum(x_i ** 2)
+
+    Abar = jnp.asarray(A.mean(0))
+    Pbar = jnp.asarray(P.mean(0))
+    bbar = jnp.asarray(b.mean(0))
+    cbar = jnp.asarray(c.mean(0))
+
+    def y_star_consensus(x):           # shared x -> consensus inner argmin
+        return jnp.linalg.solve(Abar, Pbar @ x + bbar)
+
+    def phi(x):                        # true outer objective at consensus
+        y = y_star_consensus(x)
+        return 0.5 * jnp.mean(jnp.sum((y[None] - data["c"]) ** 2, -1)) \
+            + 0.5 * mu_f * jnp.sum(x ** 2)
+
+    def y_star_stacked(x):             # per-agent local solutions (Eq. 3b)
+        return jax.vmap(lambda Ai, Pi, bi, xi: jnp.linalg.solve(
+            Ai, Pi @ xi + bi))(data["A"], data["P"], data["b"], x)
+
+    return BilevelProblem(
+        name="quadratic", n=n, d1=d1, d2=d2, f=f, g=g, data=data,
+        mu_g=mu_g, y_star=y_star_stacked, hypergrad=jax.grad(phi))
+
+
+# ---------------------------------------------------------------------------
+# Synthetic datasets for the HO experiments (no internet: generated)
+# ---------------------------------------------------------------------------
+
+def _split_agents(Z, b, n):
+    m = (Z.shape[0] // n) * n
+    return (Z[:m].reshape(n, -1, Z.shape[1]), b[:m].reshape(n, -1))
+
+
+def synthetic_regression_data(n: int, d: int, m_per: int, *, seed: int = 0,
+                              noise: float = 0.25):
+    """Paper §6.1 synthetic: z ~ N(0,I), targets from a true signal."""
+    rng = np.random.default_rng(seed)
+    y_true = rng.standard_normal(d)
+    Z = rng.standard_normal((n * m_per * 2, d))
+    eps = rng.standard_normal(n * m_per * 2)
+    b = Z @ y_true + noise * np.abs(Z @ y_true) + eps
+    Ztr, btr = _split_agents(Z[: n * m_per], b[: n * m_per], n)
+    Zv, bv = _split_agents(Z[n * m_per:], b[n * m_per:], n)
+    return ({"Ztr": jnp.asarray(Ztr, jnp.float32),
+             "btr": jnp.asarray(btr, jnp.float32),
+             "Zval": jnp.asarray(Zv, jnp.float32),
+             "bval": jnp.asarray(bv, jnp.float32)}, y_true)
+
+
+def synthetic_classification_data(n: int, d: int, m_per: int, n_classes: int,
+                                  *, seed: int = 0, long_tail: bool = False,
+                                  q: float | None = None,
+                                  margin: float = 2.0):
+    """Gaussian-cluster classification (MNIST-like stand-in, offline).
+
+    If `long_tail`, class c has ~ N0 * 0.5^c samples (imbalanced, §6.3).
+    If `q` is given, agents are split with heterogeneity level q per the
+    paper's §6.3 protocol: agent i gets q·100% of its 'own' class i (mod
+    C), topped up uniformly from the remainder.
+    """
+    rng = np.random.default_rng(seed)
+    means = rng.standard_normal((n_classes, d)) * margin
+    total = n * m_per * 2
+    if long_tail:
+        raw = np.array([0.5 ** c for c in range(n_classes)])
+        counts = np.maximum((raw / raw.sum() * total).astype(int), 8)
+    else:
+        counts = np.full(n_classes, total // n_classes)
+    Zs, bs = [], []
+    for c in range(n_classes):
+        Zs.append(means[c] + rng.standard_normal((counts[c], d)))
+        bs.append(np.full(counts[c], c))
+    Z = np.concatenate(Zs); lab = np.concatenate(bs)
+
+    if q is None:
+        perm = rng.permutation(len(Z))
+        Z, lab = Z[perm], lab[perm]
+    else:
+        # heterogeneity-q split (§6.3): per-agent class-c share q
+        per_agent = len(Z) // n
+        own, rest = [], []
+        for i in range(n):
+            c = i % n_classes
+            idx = np.nonzero(lab == c)[0]
+            take = min(int(q * per_agent), len(idx))
+            own.append(idx[:take])
+        used = np.concatenate(own) if own else np.array([], int)
+        mask = np.ones(len(Z), bool); mask[used] = False
+        pool = rng.permutation(np.nonzero(mask)[0])
+        ptr = 0; order = []
+        for i in range(n):
+            sel = list(own[i])
+            need = per_agent - len(sel)
+            sel += list(pool[ptr:ptr + need]); ptr += need
+            order += sel
+        order = np.asarray(order)
+        Z, lab = Z[order], lab[order]
+
+    m = (len(Z) // (2 * n))
+    half = n * m
+    Ztr = Z[:half].reshape(n, m, d); ltr = lab[:half].reshape(n, m)
+    Zv = Z[half:2 * half].reshape(n, m, d); lv = lab[half:2 * half].reshape(n, m)
+    return {"Ztr": jnp.asarray(Ztr, jnp.float32), "ltr": jnp.asarray(ltr),
+            "Zval": jnp.asarray(Zv, jnp.float32), "lval": jnp.asarray(lv)}
+
+
+# ---------------------------------------------------------------------------
+# 2. Hyper-parameter optimization problems (§6.1)
+# ---------------------------------------------------------------------------
+# Inner:  g_i(x, y) = loss(y; D_i^tr) + yᵀ diag(exp(x)) y      (paper §6.1)
+# Outer:  f_i(x, y) = loss(y; D_i^val)
+
+def _reg(x_i, y_i):
+    return jnp.sum(jnp.exp(x_i) * y_i * y_i)
+
+
+def ho_regression(n: int, d: int, m_per: int = 30, *, seed: int = 0
+                  ) -> BilevelProblem:
+    data, _ = synthetic_regression_data(n, d, m_per, seed=seed)
+
+    def g(x_i, y_i, di):
+        r = di["Ztr"] @ y_i - di["btr"]
+        return jnp.mean(r * r) + _reg(x_i, y_i)
+
+    def f(x_i, y_i, di):
+        r = di["Zval"] @ y_i - di["bval"]
+        return jnp.mean(r * r)
+
+    return BilevelProblem("ho_regression", n, d, d, f, g, data, mu_g=0.0)
+
+
+def ho_logistic(n: int, d: int, m_per: int = 30, *, seed: int = 0
+                ) -> BilevelProblem:
+    data = synthetic_classification_data(n, d, m_per, 2, seed=seed)
+    sign = lambda l: 2.0 * l.astype(jnp.float32) - 1.0
+
+    def loss(y_i, Z, lab):
+        return jnp.mean(jnp.logaddexp(0.0, -sign(lab) * (Z @ y_i)))
+
+    def g(x_i, y_i, di):
+        return loss(y_i, di["Ztr"], di["ltr"]) + _reg(x_i, y_i)
+
+    def f(x_i, y_i, di):
+        return loss(y_i, di["Zval"], di["lval"])
+
+    return BilevelProblem("ho_logistic", n, d, d, f, g, data, mu_g=0.0)
+
+
+def ho_svm(n: int, d: int, m_per: int = 30, *, seed: int = 0,
+           smooth: float = 0.5, margin: float = 2.0) -> BilevelProblem:
+    """SVM with a smoothed hinge (quadratic in the [0, smooth] region) so
+    Assumption B's differentiability holds; smooth→0 recovers the hinge."""
+    data = synthetic_classification_data(n, d, m_per, 2, seed=seed + 1,
+                                         margin=margin)
+    sign = lambda l: 2.0 * l.astype(jnp.float32) - 1.0
+
+    def smoothed_hinge(z):
+        # 0 for z>=1; quadratic for 1-smooth<z<1; linear below
+        t = 1.0 - z
+        return jnp.where(t <= 0, 0.0,
+                         jnp.where(t < smooth, t * t / (2 * smooth),
+                                   t - smooth / 2))
+
+    def loss(y_i, Z, lab):
+        return jnp.mean(smoothed_hinge(sign(lab) * (Z @ y_i)))
+
+    def g(x_i, y_i, di):
+        return loss(y_i, di["Ztr"], di["ltr"]) + _reg(x_i, y_i)
+
+    def f(x_i, y_i, di):
+        return loss(y_i, di["Zval"], di["lval"])
+
+    return BilevelProblem("ho_svm", n, d, d, f, g, data, mu_g=0.0)
+
+
+def ho_softmax(n: int, d: int, n_classes: int = 10, m_per: int = 30, *,
+               seed: int = 0) -> BilevelProblem:
+    """Softmax regression; y packs (W: d×C, u: C) -> d2 = (d+1)·C."""
+    data = synthetic_classification_data(n, d, m_per, n_classes, seed=seed)
+    d2 = (d + 1) * n_classes
+
+    def unpack(y_i):
+        Wm = y_i[: d * n_classes].reshape(d, n_classes)
+        u = y_i[d * n_classes:]
+        return Wm, u
+
+    def ce(y_i, Z, lab):
+        Wm, u = unpack(y_i)
+        logits = Z @ Wm + u
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        true = jnp.take_along_axis(logits, lab[:, None], axis=-1)[:, 0]
+        return jnp.mean(lse - true)
+
+    def g(x_i, y_i, di):
+        return ce(y_i, di["Ztr"], di["ltr"]) + _reg(x_i, y_i)
+
+    def f(x_i, y_i, di):
+        return ce(y_i, di["Zval"], di["lval"])
+
+    return BilevelProblem("ho_softmax", n, d2, d2, f, g, data, mu_g=0.0)
+
+
+# ---------------------------------------------------------------------------
+# 3. Hyper-representation learning (§6.2, Fig. 4)
+# ---------------------------------------------------------------------------
+
+def hyper_representation(n: int, d: int = 28, hidden: int = 200,
+                         n_classes: int = 10, m_per: int = 30, *,
+                         seed: int = 0, ridge: float = 1e-2
+                         ) -> BilevelProblem:
+    """2-layer MLP: outer x = hidden layer (d·hidden + hidden), inner
+    y = output head (hidden·C + C).  Paper: 157k outer / 2010 inner with
+    d=784; we default to d=28 for CI speed (benchmarks scale it up)."""
+    data = synthetic_classification_data(n, d, m_per, n_classes, seed=seed)
+    d1 = d * hidden + hidden
+    d2 = hidden * n_classes + n_classes
+
+    def backbone(x_i, Z):
+        W1 = x_i[: d * hidden].reshape(d, hidden)
+        b1 = x_i[d * hidden:]
+        return jax.nn.relu(Z @ W1 + b1)
+
+    def head_ce(y_i, Hfeat, lab):
+        W2 = y_i[: hidden * n_classes].reshape(hidden, n_classes)
+        b2 = y_i[hidden * n_classes:]
+        logits = Hfeat @ W2 + b2
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        true = jnp.take_along_axis(logits, lab[:, None], axis=-1)[:, 0]
+        return jnp.mean(lse - true)
+
+    def g(x_i, y_i, di):
+        return head_ce(y_i, backbone(x_i, di["Ztr"]), di["ltr"]) \
+            + 0.5 * ridge * jnp.sum(y_i * y_i)
+
+    def f(x_i, y_i, di):
+        return head_ce(y_i, backbone(x_i, di["Zval"]), di["lval"])
+
+    return BilevelProblem("hyper_representation", n, d1, d2, f, g, data,
+                          mu_g=ridge)
+
+
+def hyperrep_accuracy(prob: BilevelProblem, x: Array, y: Array) -> float:
+    """Mean validation accuracy across agents for hyper_representation."""
+    di = prob.data
+    d = di["Zval"].shape[-1]
+    hidden = (prob.d1) // (d + 1)
+    C = prob.d2 // (hidden + 1)
+
+    def acc_one(x_i, y_i, Z, lab):
+        W1 = x_i[: d * hidden].reshape(d, hidden); b1 = x_i[d * hidden:]
+        Hf = jax.nn.relu(Z @ W1 + b1)
+        W2 = y_i[: hidden * C].reshape(hidden, C); b2 = y_i[hidden * C:]
+        pred = jnp.argmax(Hf @ W2 + b2, axis=-1)
+        return jnp.mean((pred == lab).astype(jnp.float32))
+
+    return float(jnp.mean(jax.vmap(acc_one)(
+        x, y, di["Zval"], di["lval"])))
+
+
+# ---------------------------------------------------------------------------
+# 4. Heterogeneous fair loss tuning (§6.3, Fig. 5)
+# ---------------------------------------------------------------------------
+
+def fair_loss_tuning(n: int, d: int = 28, n_classes: int = 10,
+                     m_per: int = 30, *, q: float = 0.5, seed: int = 0,
+                     ridge: float = 1e-2) -> BilevelProblem:
+    """Outer x ∈ R^C = per-class loss weights (softplus-activated); inner
+    y = linear classifier.  f_i = class-balanced validation CE; g_i =
+    x-weighted train CE on the long-tail heterogeneous split."""
+    data = synthetic_classification_data(
+        n, d, m_per, n_classes, seed=seed, long_tail=True, q=q)
+    d2 = (d + 1) * n_classes
+
+    def logits_of(y_i, Z):
+        Wm = y_i[: d * n_classes].reshape(d, n_classes)
+        return Z @ Wm + y_i[d * n_classes:]
+
+    def per_ex_ce(y_i, Z, lab):
+        lg = logits_of(y_i, Z)
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        true = jnp.take_along_axis(lg, lab[:, None], axis=-1)[:, 0]
+        return lse - true
+
+    def g(x_i, y_i, di):
+        w = jax.nn.softplus(x_i)[di["ltr"]]
+        return jnp.mean(w * per_ex_ce(y_i, di["Ztr"], di["ltr"])) \
+            + 0.5 * ridge * jnp.sum(y_i * y_i)
+
+    def f(x_i, y_i, di):
+        # class-balanced: average of per-class mean losses
+        ce = per_ex_ce(y_i, di["Zval"], di["lval"])
+        onehot = jax.nn.one_hot(di["lval"], n_classes)
+        per_class = (onehot * ce[:, None]).sum(0) / (onehot.sum(0) + 1e-6)
+        present = (onehot.sum(0) > 0).astype(jnp.float32)
+        return (per_class * present).sum() / present.sum()
+
+    return BilevelProblem("fair_loss_tuning", n, n_classes, d2, f, g, data,
+                          mu_g=ridge)
+
+
+def balanced_accuracy(prob: BilevelProblem, y: Array) -> float:
+    di = prob.data
+    d = di["Zval"].shape[-1]
+    C = prob.d1
+
+    def acc_one(y_i, Z, lab):
+        Wm = y_i[: d * C].reshape(d, C)
+        pred = jnp.argmax(Z @ Wm + y_i[d * C:], axis=-1)
+        onehot = jax.nn.one_hot(lab, C)
+        correct = (pred == lab).astype(jnp.float32)
+        per_class = (onehot * correct[:, None]).sum(0) / (onehot.sum(0) + 1e-6)
+        present = (onehot.sum(0) > 0).astype(jnp.float32)
+        return (per_class * present).sum() / present.sum()
+
+    return float(jnp.mean(jax.vmap(acc_one)(y, di["Zval"], di["lval"])))

@@ -1,0 +1,2 @@
+from .synthetic import (TokenDataConfig, token_batches, make_token_batch,
+                        lm_batch_spec)

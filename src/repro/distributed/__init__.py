@@ -1,0 +1,2 @@
+from .sharding import (ShardingRules, make_rules, use_rules, shard,
+                       current_rules, tree_param_sharding)

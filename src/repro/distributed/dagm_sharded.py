@@ -1,0 +1,181 @@
+"""Pod-scale DAGM: the paper's Algorithm 2 as a shard_map program.
+
+Agents = slices of the mesh "data" axis (and "pod" × "data" multi-pod).
+Each agent holds a *pytree* copy of the inner variable y (e.g. model
+parameters) and the outer variable x (e.g. loss weights / regularizers),
+plus its local data shard.  All cross-agent communication is
+`lax.ppermute` neighbor exchange over a circulant graph (see
+collectives.ring_mix) — vectors only, never matrices, exactly the
+paper's communication pattern.
+
+The inner Hessian-vector products use jvp-of-grad (matrix-free), and
+DIHGP uses the scalar-preconditioned splitting of repro.core.dihgp
+(D̃ = (β·c + 2(1−w_ii))I), so nothing larger than a parameter pytree is
+ever materialized or communicated.
+
+`dagm_sharded_step` is written against per-agent local views (it runs
+*inside* shard_map); `make_sharded_dagm` wires it into a jitted global
+step for a given mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax import shard_map
+
+from .collectives import (RingWeights, ring_laplacian, ring_mix, taxpy,
+                          tdot, tnorm, tscale, tsub, tadd)
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedDAGMConfig:
+    alpha: float = 1e-2
+    beta: float = 1e-2
+    M: int = 5                 # inner DGD steps per outer step
+    U: int = 3                 # Neumann order
+    curvature: float = 4.0     # c ≥ λmax(∇²_y g_i) bound (scalar precond)
+    axis: str | tuple = "data"  # agent mesh axis; a tuple (e.g.
+    #                             ("pod", "data")) rings the agents over
+    #                             the flattened product of those axes —
+    #                             the cross-pod ring of the multi-pod
+    #                             DAGM dry-run
+    comm_dtype: str = "f32"    # "bf16" = compressed gossip (§Perf variant)
+    mix_every: int = 1         # j > 1: gossip only every j-th inner step
+    #                            (local-updates variant, cf. FedNest [77];
+    #                            §Perf — cuts inner comm by ~j)
+    unroll_loops: bool = False  # Python-unroll the M/U loops so AOT
+    #                             cost_analysis counts every iteration
+    #                             (fori_loop bodies are counted once);
+    #                             used by the dagm_dryrun accounting
+
+    @property
+    def comm_jnp_dtype(self):
+        return jnp.bfloat16 if self.comm_dtype == "bf16" else None
+
+
+def dagm_local_round(g_fn: Callable, f_fn: Callable,
+                     cfg: ShardedDAGMConfig, w: RingWeights,
+                     x: Pytree, y: Pytree, batch: Pytree):
+    """One DAGM outer round from a single agent's perspective.
+
+    g_fn(x, y, batch) -> scalar local inner loss  (strongly-convex-ish)
+    f_fn(x, y, batch) -> scalar local outer loss
+    Must be called inside shard_map over cfg.axis.
+    Returns (x⁺, y⁺, metrics).
+    """
+    axis = cfg.axis
+    beta, alpha = cfg.beta, cfg.alpha
+
+    grad_y_g = jax.grad(g_fn, argnums=1)
+    grad_x_f = jax.grad(f_fn, argnums=0)
+    grad_y_f = jax.grad(f_fn, argnums=1)
+
+    cd = cfg.comm_jnp_dtype
+
+    # ---- inner loop: y ← W y − β ∇_y g  (Eq. 15/16), M rounds ----
+    def inner(t, yy):
+        if cfg.unroll_loops:
+            do_mix = (int(t) % cfg.mix_every) == cfg.mix_every - 1
+            mixed = ring_mix(yy, axis, w, cd) if do_mix else yy
+        elif cfg.mix_every > 1:
+            mixed = jax.lax.cond(
+                t % cfg.mix_every == cfg.mix_every - 1,
+                lambda z: ring_mix(z, axis, w, cd), lambda z: z, yy)
+        else:
+            mixed = ring_mix(yy, axis, w, cd)
+        return taxpy(-beta, grad_y_g(x, yy, batch), mixed)
+    if cfg.unroll_loops:
+        for t in range(cfg.M):
+            y = inner(t, y)
+    else:
+        y = jax.lax.fori_loop(0, cfg.M, inner, y)
+
+    # ---- DIHGP (Alg. 1, scalar-preconditioned, matrix-free) ----
+    def hvp(v):
+        return jax.jvp(lambda yy: grad_y_g(x, yy, batch), (y,), (v,))[1]
+
+    d_scalar = beta * cfg.curvature + 2.0 * (1.0 - w.w_self)
+
+    def H_apply(hh):
+        lap = ring_laplacian(hh, axis, w, cd)
+        return taxpy(beta, hvp(hh), lap)
+
+    p = grad_y_f(x, y, batch)
+    h = tscale(-1.0 / d_scalar, p)
+    def dihgp_iter(_, hh):
+        bh = tsub(tscale(d_scalar, hh), H_apply(hh))   # B̃ h
+        return tscale(1.0 / d_scalar, tsub(bh, p))
+    if cfg.unroll_loops:
+        for _ in range(cfg.U):
+            h = dihgp_iter(0, h)
+    else:
+        h = jax.lax.fori_loop(0, cfg.U, dihgp_iter, h)
+
+    # ---- outer hyper-gradient (Eq. 17b) and step ----
+    def cross(xx):
+        return tdot(jax.grad(g_fn, argnums=1)(xx, y, batch), h)
+    cross_term = jax.grad(cross)(x)
+
+    d_dir = taxpy(beta, cross_term, grad_x_f(x, y, batch))
+    x_new = taxpy(-alpha, d_dir, ring_mix(x, axis, w, cd))  # Ẃx − α(...)
+
+    metrics = {
+        "outer_loss": f_fn(x, y, batch),
+        "inner_loss": g_fn(x, y, batch),
+        "hypergrad_norm": tnorm(d_dir),
+        "consensus_x": tnorm(ring_laplacian(x, cfg.axis, w)),
+    }  # consensus metric uses full-precision exchange (diagnostic)
+    return x_new, y, metrics
+
+
+def make_sharded_dagm(g_fn: Callable, f_fn: Callable,
+                      cfg: ShardedDAGMConfig, mesh: Mesh,
+                      x_spec=None, y_spec=None, batch_spec=None,
+                      manual_axes=None, jit_step: bool = True):
+    """Jitted global DAGM step over `mesh`.
+
+    Global layout: x and y pytrees carry a leading agent axis of size
+    n_agents = mesh size of cfg.axis (sharded 1-per-agent); batch leaves
+    carry a leading agent axis likewise.
+
+    `manual_axes` (default: {cfg.axis}) are the mesh axes shard_map
+    handles manually; every other mesh axis (e.g. "model") is *auto* —
+    GSPMD tensor-parallelizes the per-agent computation over it, so the
+    paper's agent-parallel ring composes with model parallelism inside
+    each agent (DESIGN.md §2: model-parallel sharding lives inside an
+    agent).
+    """
+    ax = cfg.axis
+    ax_names = ax if isinstance(ax, tuple) else (ax,)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n = 1
+    for a in ax_names:
+        n *= sizes[a]
+    w = RingWeights.metropolis_ring(n)
+    xs = x_spec if x_spec is not None else P(ax)
+    ys = y_spec if y_spec is not None else P(ax)
+    bs = batch_spec if batch_spec is not None else P(ax)
+    manual = frozenset(manual_axes) if manual_axes is not None         else frozenset(ax_names)
+
+    def local_step(x, y, batch):
+        # strip the (size-1) leading agent axis inside the shard
+        squeeze = lambda t: jax.tree.map(lambda a: a[0], t)
+        expand = lambda t: jax.tree.map(lambda a: a[None], t)
+        x1, y1, m = dagm_local_round(g_fn, f_fn, cfg, w,
+                                     squeeze(x), squeeze(y), squeeze(batch))
+        m = jax.tree.map(lambda s: jax.lax.pmean(s, ax), m)
+        return expand(x1), expand(y1), m
+
+    kw = {}
+    if manual != frozenset(mesh.axis_names):
+        kw["axis_names"] = manual
+    step = shard_map(local_step, mesh=mesh, in_specs=(xs, ys, bs),
+                     out_specs=(xs, ys, P()), check_vma=False, **kw)
+    return (jax.jit(step) if jit_step else step), w

@@ -1,0 +1,114 @@
+"""Logical-axis sharding rules → NamedSharding / PartitionSpec.
+
+Model code annotates parameters and activations with *logical* axis names
+("batch", "vocab", "ffn", "heads", ...).  A `ShardingRules` object maps
+those to mesh axes for a given (ArchConfig, mesh) pair, implementing the
+scheme in DESIGN.md §5:
+
+  batch   → ("pod", "data")      (or ("data",) single-pod)
+  vocab   → "model"              (vocab padded to /256 so it divides)
+  ffn     → "model"              (d_ff, mamba d_inner, rwkv dims)
+  heads   → "model" iff num_heads % model_size == 0 else replicated
+  kv_heads→ "model" iff num_kv_heads % model_size == 0 else replicated
+  experts → None (TP-inside-expert default) or "model" (expert-parallel
+            opt-in layout, used in EXPERIMENTS §Perf)
+  seq     → None by default; "data" for the sequence-sharded long_500k
+            decode cache (batch=1 cannot shard over data)
+
+Rules are installed in a module-level context (`use_rules`); `shard(x,
+*logical_axes)` is a no-op when no rules are installed, so single-device
+CPU tests run the exact same model code.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+_state = threading.local()
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    mesh: Mesh
+    table: dict  # logical name -> mesh axis name | tuple | None
+
+    def resolve(self, *logical: str | None) -> P:
+        return P(*[self.table.get(a) if a is not None else None
+                   for a in logical])
+
+    def named(self, *logical: str | None) -> NamedSharding:
+        return NamedSharding(self.mesh, self.resolve(*logical))
+
+
+def make_rules(cfg: ArchConfig, mesh: Mesh, *,
+               expert_parallel: bool = False,
+               seq_shard_cache: bool = False,
+               fsdp: bool = True) -> ShardingRules:
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    model = "model" if "model" in axes else None
+    msize = axes.get("model", 1)
+    batch = tuple(a for a in ("pod", "data") if a in axes) or None
+
+    def if_div(k: int):
+        return model if (model and k and k % msize == 0) else None
+
+    kv = if_div(cfg.num_kv_heads)
+    # A single PartitionSpec may use each mesh axis once: when KV heads
+    # already shard over `model` (e.g. zamba2 kv=32), the cache sequence
+    # axis must stay replicated; seq-sharding is the fallback for
+    # GQA/MQA archs whose kv count does not divide the model axis.
+    table = {
+        "batch": batch,
+        "vocab": model,
+        "ffn": model,
+        "embed": None,
+        "heads": if_div(cfg.num_heads),
+        "kv_heads": kv,
+        "rwkv_heads": if_div(cfg.d_model // max(cfg.rwkv_head_size, 1))
+        if cfg.attn_free else None,
+        "experts": (model if expert_parallel else None),
+        "cache_seq": (model if seq_shard_cache and kv is None else None),
+        "fsdp": ("data" if fsdp and "data" in axes else None),
+        "frames": None,
+    }
+    return ShardingRules(mesh=mesh, table=table)
+
+
+@contextlib.contextmanager
+def use_rules(rules: ShardingRules | None):
+    prev = getattr(_state, "rules", None)
+    _state.rules = rules
+    try:
+        yield
+    finally:
+        _state.rules = prev
+
+
+def current_rules() -> ShardingRules | None:
+    return getattr(_state, "rules", None)
+
+
+def shard(x, *logical: str | None):
+    """with_sharding_constraint under the installed rules (no-op if none).
+
+    Pass one logical axis name (or None) per array dimension."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    if x.ndim != len(logical):
+        raise ValueError(f"rank {x.ndim} vs {len(logical)} logical axes")
+    return jax.lax.with_sharding_constraint(x, rules.named(*logical))
+
+
+def tree_param_sharding(param_axes, rules: ShardingRules):
+    """Map a pytree of logical-axis tuples to NamedShardings."""
+    return jax.tree.map(
+        lambda axes: rules.named(*axes), param_axes,
+        is_leaf=lambda t: isinstance(t, tuple))

@@ -1,0 +1,3 @@
+"""Pallas TPU kernels for the perf-critical compute hot-spots, each with
+a pure-jnp oracle in ref.py and a jit wrapper in ops.py."""
+from .ops import use_pallas, ring_laplacian, attention, wkv

@@ -1,0 +1,59 @@
+"""Pallas TPU kernel for the paper's hot communication/compute primitive:
+the banded circulant mixing mat-vec  (I − W)·Y  on stacked per-agent
+state Y ∈ R^{n×d}  (DAGM inner step Eq. 16, DIHGP B·h of Eq. 14).
+
+W is the ring/circulant Metropolis matrix (w_self on the diagonal,
+w_edge at offsets ±1), so each output tile needs its own tile plus one
+row of halo from each neighboring agent tile — the same neighbor-only
+data movement the algorithm performs across chips, here expressed across
+VMEM tiles within a chip.
+
+Tiling: grid (n/bn, d/bd); each program reads three (bn, bd) agent tiles
+(previous / current / next, wraparound index_map) and writes one.
+Pure VPU (elementwise FMA) — deliberately memory-bound; the roofline
+check in tests asserts bytes-moved ≈ 4×nd×dtype (3 reads + 1 write,
+halo-amortized).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(prev_ref, cur_ref, nxt_ref, out_ref, *, w_self: float,
+            w_edge: float):
+    cur = cur_ref[...]
+    up = jnp.concatenate([prev_ref[-1:, :], cur[:-1, :]], axis=0)
+    down = jnp.concatenate([cur[1:, :], nxt_ref[:1, :]], axis=0)
+    mixed = w_self * cur + w_edge * (up + down)
+    out_ref[...] = cur - mixed
+
+
+@functools.partial(jax.jit, static_argnames=("w_self", "w_edge", "bn",
+                                             "bd", "interpret"))
+def ring_laplacian_matvec(y: jnp.ndarray, *, w_self: float, w_edge: float,
+                          bn: int = 8, bd: int = 128,
+                          interpret: bool = True) -> jnp.ndarray:
+    """(I − W)·Y for ring W; y: (n, d) with n % bn == 0, d % bd == 0."""
+    n, d = y.shape
+    assert n % bn == 0 and d % bd == 0, (n, d, bn, bd)
+    gn, gd = n // bn, d // bd
+
+    grid_spec = pl.GridSpec(
+        grid=(gn, gd),
+        in_specs=[
+            pl.BlockSpec((bn, bd), lambda i, j: ((i - 1) % gn, j)),
+            pl.BlockSpec((bn, bd), lambda i, j: (i, j)),
+            pl.BlockSpec((bn, bd), lambda i, j: ((i + 1) % gn, j)),
+        ],
+        out_specs=pl.BlockSpec((bn, bd), lambda i, j: (i, j)),
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, w_self=w_self, w_edge=w_edge),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, d), y.dtype),
+        interpret=interpret,
+    )(y, y, y)

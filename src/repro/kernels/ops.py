@@ -1,0 +1,49 @@
+"""Jit'd public entry points for the Pallas kernels.
+
+`use_pallas(True)` switches the hot paths from the pure-jnp oracles
+(CPU default / dry-run path) to the Pallas kernels (TPU target;
+`interpret=True` executes them on CPU for validation).  Tests sweep
+shapes/dtypes through both and assert allclose.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import ref
+from .flash_attention import flash_attention
+from .mixing_matvec import ring_laplacian_matvec
+from .rwkv6_scan import rwkv6_scan
+
+_USE_PALLAS = False
+_INTERPRET = True        # flip to False on real TPU hardware
+
+
+def use_pallas(enabled: bool, interpret: bool = True) -> None:
+    global _USE_PALLAS, _INTERPRET
+    _USE_PALLAS = enabled
+    _INTERPRET = interpret
+
+
+def ring_laplacian(y, w_self: float, w_edge: float):
+    """(I−W)Y for ring W — DAGM/DIHGP mixing primitive; y (n, d)."""
+    if _USE_PALLAS and y.ndim == 2 and y.shape[0] % 8 == 0 \
+            and y.shape[1] % 128 == 0:
+        return ring_laplacian_matvec(y, w_self=w_self, w_edge=w_edge,
+                                     interpret=_INTERPRET)
+    return ref.ring_laplacian_ref(y, w_self, w_edge)
+
+
+def attention(q, k, v, *, causal: bool = True, window: int = 0):
+    """Softmax attention (same-head-count q/k/v)."""
+    if _USE_PALLAS and q.shape[1] % 128 == 0:
+        return flash_attention(q, k, v, causal=causal, window=window,
+                               interpret=_INTERPRET)
+    return ref.attention_ref(q, k, v, causal=causal, window=window)
+
+
+def wkv(r, k, v, logw, u, *, chunk: int = 64):
+    """RWKV6 WKV mix."""
+    if _USE_PALLAS and r.shape[1] % chunk == 0:
+        return rwkv6_scan(r, k, v, logw, u, chunk=chunk,
+                          interpret=_INTERPRET).astype(jnp.float32)
+    return ref.rwkv6_ref(r, k, v, logw, u)[0]

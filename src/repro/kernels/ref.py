@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground
+truth used by tests and by the model code's XLA fallback path)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def ring_laplacian_ref(y: jnp.ndarray, w_self: float, w_edge: float,
+                       hops: int = 1) -> jnp.ndarray:
+    """(I − W)·Y for a circulant 2·hops-regular graph; y: (n, d).
+
+    W row: w_self on diag, w_edge at offsets ±1..±hops (wraparound)."""
+    out = (1.0 - w_self) * y
+    for o in range(1, hops + 1):
+        out = out - w_edge * (jnp.roll(y, o, axis=0)
+                              + jnp.roll(y, -o, axis=0))
+    return out
+
+
+def attention_ref(q, k, v, *, causal: bool = True,
+                  window: int = 0) -> jnp.ndarray:
+    """Plain softmax attention; q/k/v: (B, S, H, hd) (same H)."""
+    B, S, H, hd = q.shape
+    scores = jnp.einsum("bshd,bthd->bhst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(hd)
+    if causal:
+        qi = jnp.arange(S)[:, None]
+        kj = jnp.arange(S)[None, :]
+        m = kj <= qi
+        if window:
+            m &= (qi - kj) < window
+        scores = jnp.where(m[None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhst,bthd->bshd", w, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def rwkv6_ref(r, k, v, logw, u, S0=None):
+    """Exact WKV recurrence (same as models/ssm.rwkv_wkv_scan).
+
+    r/k/v/logw: (B, T, H, hd); u: (H, hd); S0: (B, H, hd, hd) or None.
+    Returns (out (B,T,H,hd) f32, S_T)."""
+    B, T, H, hd = r.shape
+    if S0 is None:
+        S0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+
+    def step(S, inp):
+        rt, kt, vt, lwt = inp
+        kv = kt[..., :, None] * vt[..., None, :]
+        out = jnp.einsum("bhk,bhkv->bhv", rt, S + u[:, :, None] * kv)
+        S = jnp.exp(lwt)[..., None] * S + kv
+        return S, out
+
+    xs = tuple(jnp.moveaxis(a.astype(jnp.float32), 1, 0)
+               for a in (r, k, v, logw))
+    S, out = jax.lax.scan(step, S0, xs)
+    return jnp.moveaxis(out, 0, 1), S

@@ -1,0 +1,30 @@
+"""Production mesh factory.
+
+Single pod: (data=16, model=16) = 256 chips (TPU v5e-256 slice).
+Multi-pod: (pod=2, data=16, model=16) = 512 chips, where the "pod" axis
+crosses the DCN/ICI boundary.  Defined as a *function* so importing this
+module never touches jax device state (the dry-run sets
+--xla_force_host_platform_device_count=512 before any jax import).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Small mesh over whatever devices exist (CPU tests / examples)."""
+    n = len(jax.devices())
+    assert n % model == 0
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+# Hardware constants for the roofline analysis (TPU v5e per chip)
+PEAK_FLOPS_BF16 = 197e12       # FLOP/s
+HBM_BW = 819e9                 # bytes/s
+ICI_BW = 50e9                  # bytes/s per link

@@ -1,0 +1,2 @@
+"""Model zoo: composable model definitions for the assigned archs."""
+from .model_zoo import Model, build_model

@@ -1,0 +1,275 @@
+"""Transformer building blocks (pure functions + explicit param pytrees).
+
+Parameters are nested dicts of jnp arrays; every init function can also
+run in *abstract* mode (key=None) in which case it returns the pytree of
+logical sharding axes instead (single source of truth for param layout —
+see repro.distributed.sharding).
+
+Conventions:
+  x:        (B, S, D) activations
+  q:        (B, S, H, hd);  k/v: (B, S, Hkv, hd)
+  KV cache: {"k": (B, C, Hkv, hd), "v": ..., "pos": ()} with C = cache len
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+
+Params = Any
+
+
+class Maker:
+    """Dual-mode parameter factory: arrays (key given) or logical axes."""
+
+    def __init__(self, key, dtype=jnp.float32):
+        self.key = key
+        self.dtype = dtype
+
+    @property
+    def abstract(self) -> bool:
+        return self.key is None
+
+    def split(self) -> "Maker":
+        if self.abstract:
+            return self
+        self.key, sub = jax.random.split(self.key)
+        return Maker(sub, self.dtype)
+
+    def __call__(self, shape, axes, *, scale=None, init="normal"):
+        assert len(shape) == len(axes), (shape, axes)
+        if self.abstract:
+            return tuple(axes)
+        self.key, sub = jax.random.split(self.key)
+        if init == "zeros":
+            return jnp.zeros(shape, self.dtype)
+        if init == "ones":
+            return jnp.ones(shape, self.dtype)
+        if scale is None:
+            fan_in = shape[0] if len(shape) > 1 else shape[0]
+            scale = 1.0 / math.sqrt(max(fan_in, 1))
+        return (scale * jax.random.normal(sub, shape, jnp.float32)
+                ).astype(self.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms / RoPE / embedding
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(mk: Maker, d: int) -> Params:
+    return {"scale": mk((d,), (None,), init="ones")}
+
+
+def rmsnorm(p: Params, x, eps: float = 1e-5):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), -1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def head_rmsnorm(scale, x, eps: float = 1e-5):
+    """qk-norm: RMS over head_dim of (B, S, H, hd)."""
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), -1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope(x, positions, theta: float = 10_000.0):
+    """Rotary embedding on (B, S, H, hd); positions (B, S) or (S,)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (B,S,half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def init_embedding(mk: Maker, vocab: int, d: int) -> Params:
+    return {"table": mk((vocab, d), ("vocab", "fsdp"), scale=0.02)}
+
+
+def embed(p: Params, tokens):
+    out = jnp.take(p["table"], tokens, axis=0)
+    return shard(out, "batch", None, None)
+
+
+def logits_out(p: Params, x):
+    out = jnp.einsum("bsd,vd->bsv", x, p["table"])
+    return shard(out, "batch", None, "vocab")
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, optional qk-norm, RoPE, causal / sliding-window / full)
+# ---------------------------------------------------------------------------
+
+def init_attention(mk: Maker, cfg) -> Params:
+    d, H, Hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, \
+        cfg.resolved_head_dim
+    p = {
+        "wq": mk((d, H, hd), ("fsdp", "heads", None)),
+        "wk": mk((d, Hkv, hd), ("fsdp", "kv_heads", None)),
+        "wv": mk((d, Hkv, hd), ("fsdp", "kv_heads", None)),
+        "wo": mk((H, hd, d), ("heads", None, "fsdp")),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = mk((hd,), (None,), init="ones")
+        p["k_norm"] = mk((hd,), (None,), init="ones")
+    return p
+
+
+ATTN_Q_CHUNK = 256          # q-block for memory-efficient attention
+ATTN_CHUNK_THRESHOLD = 4096  # chunk whenever S exceeds this
+
+
+def _sdpa(q, k, v, mask, dtype):
+    """Reference scaled-dot-product attention with GQA broadcast.
+
+    q: (B,S,H,hd)  k/v: (B,T,Hkv,hd)  mask: broadcastable (B,1,1,S,T)."""
+    B, S, H, hd = q.shape
+    Hkv = k.shape[2]
+    group = H // Hkv
+    qg = q.reshape(B, S, Hkv, group, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(hd)
+    if mask is not None:               # broadcastable to (B,Hkv,g,S,T)
+        scores = jnp.where(mask, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", w, v.astype(jnp.float32))
+    return out.reshape(B, S, H, hd).astype(dtype)
+
+
+def sdpa_with_spec(q, k, v, dtype, *, causal: bool, window: int = 0,
+                   kv_valid: int | None = None):
+    """SDPA with a *structured* mask (never materializes S×T for long S).
+
+    For S > ATTN_CHUNK_THRESHOLD the query axis is processed in chunks
+    of ATTN_Q_CHUNK via lax.map — the memory-efficient attention
+    schedule (O(bq·T) live scores instead of O(S·T)); the Pallas flash
+    kernel is the TPU-native version of the same idea.
+    """
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+
+    def mask_for(q0, bq):
+        if not causal and not window and kv_valid is None:
+            return None
+        qi = q0 + jnp.arange(bq)[:, None]
+        kj = jnp.arange(T)[None, :]
+        m = jnp.ones((bq, T), jnp.bool_)
+        if causal:
+            m &= kj <= qi
+        if window:
+            m &= (qi - kj) < window
+        if kv_valid is not None:
+            m &= kj < kv_valid
+        return m[None, None]                       # (1,1,bq,T)
+
+    if S <= ATTN_CHUNK_THRESHOLD or S % ATTN_Q_CHUNK:
+        return _sdpa(q, k, v, mask_for(0, S), dtype)
+
+    bq = ATTN_Q_CHUNK
+    nq = S // bq
+    q_chunks = jnp.moveaxis(q.reshape(B, nq, bq, H, hd), 1, 0)
+
+    def one(args):
+        qc, idx = args
+        return _sdpa(qc, k, v, mask_for(idx * bq, bq), dtype)
+
+    out = jax.lax.map(one, (q_chunks, jnp.arange(nq)))
+    return jnp.moveaxis(out, 0, 1).reshape(B, S, H, hd)
+
+
+def attention(p: Params, x, cfg, *, positions, causal=True,
+              kv_override=None, cache=None, prefill=False):
+    """Full attention layer.  Returns (out, new_cache).
+
+    * train: cache is None → keys/values from x, structured
+      causal(+window) mask.
+    * prefill: cache given, pos==0, S <= C → KV written at slot 0..S-1,
+      causal(+window) mask over cache slots (q-chunked for long S).
+    * decode: cache = {"k","v","pos"}; x is (B,1,D); new KV written at
+      pos % C (rolling when the cache is shorter than the stream).
+    * cross-attention: kv_override = encoder output (B,T,D); no cache
+      update, no mask, no rope.
+    """
+    B, S, D = x.shape
+    H, hd = cfg.num_heads, cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    q = shard(q, "batch", None, "heads", None)
+    src = x if kv_override is None else kv_override
+    k = jnp.einsum("bsd,dhk->bshk", src, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", src, p["wv"])
+    if cfg.qk_norm:
+        q = head_rmsnorm(p["q_norm"], q)
+        k = head_rmsnorm(p["k_norm"], k)
+    if kv_override is None:            # self-attention: rope q and k
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+
+    if cache is not None:
+        C = cache["k"].shape[1]
+        pos = cache["pos"]             # scalar int32: tokens seen so far
+        if prefill and S > C:
+            # SWA cache shorter than the prompt (e.g. mixtral 4096-window
+            # cache, 32k prefill): attend over the full fresh KV with the
+            # causal+window mask, then retain only the last C tokens,
+            # laid out at their rolling slots (abs position % C) so the
+            # decode path's age arithmetic stays valid.
+            out = sdpa_with_spec(q, k, v, x.dtype, causal=True,
+                                 window=cfg.sliding_window)
+            shift = (S - C) % C        # static: S, C are Python ints
+            k_last = jax.lax.slice_in_dim(k, S - C, S, axis=1)
+            v_last = jax.lax.slice_in_dim(v, S - C, S, axis=1)
+            ck = jnp.roll(k_last.astype(cache["k"].dtype), shift, axis=1)
+            cv = jnp.roll(v_last.astype(cache["v"].dtype), shift, axis=1)
+            new_cache = {"k": ck, "v": cv, "pos": pos + S}
+            out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+            return shard(out, "batch", None, None), new_cache
+        slot = jnp.mod(pos, C)         # rolling write for SWA caches
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+        new_cache = {"k": ck, "v": cv, "pos": pos + S}
+        if prefill:                    # pos == 0, S <= C, slots = abs pos
+            out = sdpa_with_spec(q, ck, cv, x.dtype, causal=True,
+                                 window=cfg.sliding_window, kv_valid=S)
+        else:                          # decode: S == 1, rolling ages
+            kj = jnp.arange(C)
+            age = jnp.mod(slot - kj, C)            # 0 = newest
+            valid = age <= jnp.minimum(pos, C - 1)
+            if cfg.sliding_window:
+                valid &= age < cfg.sliding_window
+            out = _sdpa(q, ck, cv, valid[None, None, None, :], x.dtype)
+    else:
+        new_cache = {"k": k, "v": v, "pos": jnp.asarray(S, jnp.int32)}
+        out = sdpa_with_spec(q, k, v, x.dtype, causal=causal,
+                             window=cfg.sliding_window if causal else 0)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return shard(out, "batch", None, None), new_cache
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(mk: Maker, d: int, d_ff: int) -> Params:
+    return {
+        "wg": mk((d, d_ff), ("fsdp", "ffn")),
+        "wu": mk((d, d_ff), ("fsdp", "ffn")),
+        "wd": mk((d_ff, d), ("ffn", "fsdp")),
+    }
+
+
+def mlp(p: Params, x):
+    h = jax.nn.silu(x @ p["wg"]) * (x @ p["wu"])
+    h = shard(h, "batch", None, "ffn")
+    return shard(h @ p["wd"], "batch", None, None)

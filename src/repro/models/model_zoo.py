@@ -1,0 +1,142 @@
+"""Model facade: one `Model` object per architecture family, uniform
+init/loss/prefill/decode API used by the launcher, dry-run, smoke tests
+and the DAGM LM trainer.
+
+Batch conventions:
+  train:   {"tokens": (B,S) i32, "labels": (B,S) i32}  (+ "frames" audio)
+  prefill: {"tokens": (B,S)}                           (+ "frames" audio)
+  decode:  {"tokens": (B,1)} + cache pytree
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from . import transformer as tf
+from . import whisper as wp
+
+Params = Any
+
+AUX_LOSS_WEIGHT = 0.01
+
+
+def cross_entropy(logits, labels, vocab_size: int):
+    """Mean next-token CE; ignores labels < 0; masks vocab padding."""
+    V = logits.shape[-1]
+    if V > vocab_size:
+        pad = jnp.arange(V) >= vocab_size
+        logits = jnp.where(pad[None, None], -1e30, logits)
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    true = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum((lse - true) * mask) / jnp.maximum(mask.sum(), 1.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+
+    # ---- params ----
+    def init(self, key, dtype=jnp.float32) -> Params:
+        if self.cfg.encoder_decoder:
+            return wp.init_whisper(self.cfg, key, dtype)
+        return tf.init_lm(self.cfg, key, dtype)
+
+    def param_axes(self):
+        if self.cfg.encoder_decoder:
+            return wp.whisper_param_axes(self.cfg)
+        return tf.param_axes(self.cfg)
+
+    def param_count(self, dtype=jnp.float32) -> int:
+        import math
+        shapes = jax.eval_shape(
+            lambda k: self.init(k, dtype), jax.random.PRNGKey(0))
+        # math.prod over Python ints: stacked-layer leaves exceed 2^31
+        # elements (e.g. yi-9b (48, 4096, 11008)), which overflows the
+        # int32 jnp.prod path.
+        return sum(math.prod(l.shape) for l in jax.tree.leaves(shapes))
+
+    # ---- losses / steps ----
+    def loss(self, params: Params, batch, *, remat: bool = False,
+             unroll: bool = False):
+        cfg = self.cfg
+        if cfg.encoder_decoder:
+            enc = wp.encode(params, cfg, batch["frames"], remat=remat,
+                            unroll=unroll)
+            logits = wp.decode_tokens(params, cfg, batch["tokens"],
+                                      enc_out=enc, remat=remat,
+                                      unroll=unroll)
+            return cross_entropy(logits, batch["labels"], cfg.vocab_size), {}
+        logits, aux = tf.forward(params, cfg, batch["tokens"], remat=remat,
+                                 unroll=unroll)
+        ce = cross_entropy(logits, batch["labels"], cfg.vocab_size)
+        loss = ce + (AUX_LOSS_WEIGHT * aux if cfg.num_experts else 0.0)
+        return loss, {"ce": ce, "aux": aux}
+
+    def prefill(self, params: Params, batch, cache_dtype=jnp.float32,
+                cache_len: int | None = None, unroll: bool = False):
+        """Full-sequence forward building the serving cache (sized
+        `cache_len`, default = prompt length).  Returns (last-token
+        logits (B,V), cache)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        C = cache_len or S
+        assert C >= S, "prefill requires cache_len >= prompt length"
+        if cfg.encoder_decoder:
+            enc = wp.encode(params, cfg, batch["frames"])
+            xkv = wp.cross_kv(params, cfg, enc)
+            cache = wp.whisper_init_cache(cfg, B, C, cache_dtype)
+            logits, new_cache = wp.decode_tokens(
+                params, cfg, tokens, xkv=xkv, cache=cache,
+                pos=jnp.zeros((), jnp.int32), prefill=True, unroll=unroll)
+            new_cache["xkv"] = xkv
+            return logits[:, -1], new_cache
+        cache = self.init_cache(B, C, cache_dtype)
+        logits, new_cache, _ = tf.forward(
+            params, cfg, tokens, cache=cache,
+            pos=jnp.zeros((), jnp.int32), prefill=True, unroll=unroll)
+        return logits[:, -1], new_cache
+
+    def decode_step(self, params: Params, tokens, cache,
+                    unroll: bool = False):
+        """One-token decode.  tokens (B,1); returns (logits (B,V), cache)."""
+        cfg = self.cfg
+        if cfg.encoder_decoder:
+            logits, new_cache = wp.decode_tokens(
+                params, cfg, tokens, xkv=cache["xkv"],
+                cache={"blocks": cache["blocks"]}, pos=cache["pos"],
+                unroll=unroll)
+            new_cache["xkv"] = cache["xkv"]
+            return logits[:, -1], new_cache
+        logits, new_cache, _ = tf.forward(
+            params, cfg, tokens, cache={k: v for k, v in cache.items()
+                                        if k != "pos"},
+            pos=cache["pos"], unroll=unroll)
+        return logits[:, -1], new_cache
+
+    def init_cache(self, batch: int, cache_len: int, dtype=jnp.float32,
+                   window_override: int = 0):
+        cfg = self.cfg
+        if window_override:
+            cfg = dataclasses.replace(cfg, sliding_window=window_override)
+        if cfg.encoder_decoder:
+            cache = wp.whisper_init_cache(cfg, batch, cache_len, dtype)
+            hd = cfg.resolved_head_dim
+            cache["xkv"] = {
+                "k": jnp.zeros((cfg.num_layers, batch, cfg.encoder_frames,
+                                cfg.num_kv_heads, hd), dtype),
+                "v": jnp.zeros((cfg.num_layers, batch, cfg.encoder_frames,
+                                cfg.num_kv_heads, hd), dtype)}
+            return cache
+        return tf.init_cache(cfg, batch, cache_len, dtype)
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    return Model(cfg)

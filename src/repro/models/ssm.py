@@ -1,0 +1,264 @@
+"""Sequence mixers without attention: RWKV6 ("Finch") and Mamba2 (SSD).
+
+Both are linear recurrences with data-dependent decay, computed with an
+exact `lax.scan` over time (vectorized over batch/heads).  The TPU-target
+chunked formulation lives in repro.kernels.rwkv6_scan (the scan here is
+its oracle).  Single-token `*_decode` variants advance the recurrent
+state by one step for the serving path.
+
+RWKV6 time-mix (per head, state S ∈ R^{hd×hd}):
+    S_t = diag(w_t) S_{t-1} + k_tᵀ v_t
+    o_t = r_t (S_{t-1} + diag(u) k_tᵀ v_t)
+with per-channel data-dependent decay w_t = exp(-exp(w̃_t)) ∈ (0,1).
+
+Mamba2 SSD (per head, state S ∈ R^{hd×N}):
+    S_t = a_t S_{t-1} + (Δ_t x_t) ⊗ B_t ,   a_t = exp(-Δ_t e^{A_log})
+    y_t = S_t C_t + D x_t
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from .layers import Maker, Params, rmsnorm
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+SCAN_CHUNK = 256
+
+
+def chunked_scan(step, S0, xs, chunk: int = SCAN_CHUNK):
+    """lax.scan over time in checkpointed chunks.
+
+    Plain scan AD stores the carry at *every* step (8+ GB/layer at 4k
+    tokens); chunking stores only chunk-boundary states and recomputes
+    inside the chunk on backward — the standard SSD memory trade.
+    Falls back to plain scan when T doesn't divide."""
+    T = jax.tree.leaves(xs)[0].shape[0]
+    if T % chunk or T <= chunk:
+        return jax.lax.scan(step, S0, xs)
+    nc = T // chunk
+    xs_c = jax.tree.map(
+        lambda a: a.reshape((nc, chunk) + a.shape[1:]), xs)
+
+    @jax.checkpoint
+    def chunk_body(S, xc):
+        return jax.lax.scan(step, S, xc)
+
+    S, ys = jax.lax.scan(chunk_body, S0, xs_c)
+    ys = jax.tree.map(
+        lambda a: a.reshape((T,) + a.shape[2:]), ys)
+    return S, ys
+
+
+def token_shift(x, prev=None):
+    """x_{t-1} along seq; position 0 sees `prev` (decode carry) or zeros."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    else:
+        prev = prev[:, None, :]
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _ddlerp(x, xprev, mu, w1, w2):
+    """RWKV6 data-dependent lerp: mix = mu + tanh((x+(xp-x)mu_x) W1) W2."""
+    dyn = jnp.tanh((x + (xprev - x) * mu["base"]) @ w1) @ w2
+    m = mu["mix"] + dyn
+    return x + (xprev - x) * m
+
+
+# ---------------------------------------------------------------------------
+# RWKV6
+# ---------------------------------------------------------------------------
+
+RWKV_LORA = 32
+
+
+def init_rwkv_time_mix(mk: Maker, cfg) -> Params:
+    d = cfg.d_model
+    hd = cfg.rwkv_head_size
+    H = d // hd
+    lo = RWKV_LORA
+
+    def mix():
+        return {"base": mk((d,), (None,), scale=0.5),
+                "mix": mk((d,), (None,), scale=0.5)}
+
+    return {
+        "mu_r": mix(), "mu_k": mix(), "mu_v": mix(), "mu_w": mix(),
+        "mu_g": mix(),
+        "lora_w1": mk((d, lo), (None, None)),
+        "lora_w2": mk((lo, d), (None, None)),
+        "wr": mk((d, d), ("fsdp", "rwkv_heads")),
+        "wk": mk((d, d), ("fsdp", "rwkv_heads")),
+        "wv": mk((d, d), ("fsdp", "rwkv_heads")),
+        "wg": mk((d, d), ("fsdp", "rwkv_heads")),
+        "wo": mk((d, d), ("rwkv_heads", "fsdp")),
+        "w_base": mk((d,), (None,), scale=0.5),
+        "decay_w1": mk((d, lo * 2), (None, None)),
+        "decay_w2": mk((lo * 2, d), (None, None)),
+        "u": mk((H, hd), ("rwkv_heads", None), scale=0.5),
+        "ln_x": mk((d,), (None,), init="ones"),
+    }
+
+
+def _rwkv_proj(p, x, xprev):
+    """Shared r/k/v/g/decay projections for train and decode paths."""
+    lw1, lw2 = p["lora_w1"], p["lora_w2"]
+    r = _ddlerp(x, xprev, p["mu_r"], lw1, lw2) @ p["wr"]
+    k = _ddlerp(x, xprev, p["mu_k"], lw1, lw2) @ p["wk"]
+    v = _ddlerp(x, xprev, p["mu_v"], lw1, lw2) @ p["wv"]
+    g = jax.nn.silu(_ddlerp(x, xprev, p["mu_g"], lw1, lw2) @ p["wg"])
+    xw = _ddlerp(x, xprev, p["mu_w"], lw1, lw2)
+    dyn = jnp.tanh(xw @ p["decay_w1"]) @ p["decay_w2"]
+    # log-decay in [-exp(4), -exp(-8)] ⊂ (-55, 0): stable, still spans
+    # "remember ~everything" to "forget immediately"
+    logw = -jnp.exp(jnp.clip(p["w_base"] + dyn, -8.0, 4.0))
+    return r, k, v, g, logw
+
+
+def rwkv_wkv_scan(r, k, v, logw, u, S0):
+    """Exact WKV recurrence.  r/k/v: (B,T,H,hd); logw: (B,T,H,hd);
+    u: (H,hd); S0: (B,H,hd,hd) → (out (B,T,H,hd), S_T)."""
+    def step(S, inp):
+        rt, kt, vt, lwt = inp                       # (B,H,hd)
+        kv = kt[..., :, None] * vt[..., None, :]    # (B,H,hd,hd)
+        out = jnp.einsum("bhk,bhkv->bhv", rt, S + u[:, :, None] * kv)
+        S = jnp.exp(lwt)[..., None] * S + kv
+        return S, out
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (r, k, v, logw))
+    S, out = chunked_scan(step, S0, xs)
+    return jnp.moveaxis(out, 0, 1), S
+
+
+def rwkv_time_mix(p: Params, x, cfg, state=None):
+    """x: (B,T,D). state: None (train) or {"x": (B,D), "S": (B,H,hd,hd)}.
+    Returns (out, new_state)."""
+    B, T, D = x.shape
+    hd = cfg.rwkv_head_size
+    H = D // hd
+    prev_x = None if state is None else state["x"]
+    xprev = token_shift(x, prev_x)
+    r, k, v, g, logw = _rwkv_proj(p, x, xprev)
+    heads = lambda z: z.reshape(B, T, H, hd)
+    r, k, v, logw = heads(r), heads(k), heads(v), heads(logw)
+    r = shard(r, "batch", None, "rwkv_heads", None)
+    S0 = jnp.zeros((B, H, hd, hd), jnp.float32) if state is None \
+        else state["S"]
+    out, S = rwkv_wkv_scan(r.astype(jnp.float32), k.astype(jnp.float32),
+                           v.astype(jnp.float32), logw,
+                           p["u"].astype(jnp.float32), S0)
+    out = out.reshape(B, T, D).astype(x.dtype)
+    out = rmsnorm({"scale": p["ln_x"]}, out)        # per-channel group norm
+    out = (out * g) @ p["wo"]
+    new_state = {"x": x[:, -1], "S": S}
+    return shard(out, "batch", None, None), new_state
+
+
+def init_rwkv_channel_mix(mk: Maker, cfg) -> Params:
+    d, F = cfg.d_model, cfg.d_ff
+    return {
+        "mu_k": mk((d,), (None,), scale=0.5),
+        "mu_r": mk((d,), (None,), scale=0.5),
+        "wk": mk((d, F), ("fsdp", "ffn")),
+        "wv": mk((F, d), ("ffn", "fsdp")),
+        "wr": mk((d, d), ("fsdp", None)),
+    }
+
+
+def rwkv_channel_mix(p: Params, x, state=None):
+    prev_x = None if state is None else state["x"]
+    xprev = token_shift(x, prev_x)
+    xk = x + (xprev - x) * p["mu_k"]
+    xr = x + (xprev - x) * p["mu_r"]
+    k = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    k = shard(k, "batch", None, "ffn")
+    out = jax.nn.sigmoid(xr @ p["wr"]) * (k @ p["wv"])
+    return shard(out, "batch", None, None), {"x": x[:, -1]}
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD)
+# ---------------------------------------------------------------------------
+
+def mamba_dims(cfg):
+    d_inner = 2 * cfg.d_model
+    H = d_inner // cfg.mamba_head_dim
+    return d_inner, H, cfg.ssm_state
+
+
+def init_mamba2(mk: Maker, cfg) -> Params:
+    d = cfg.d_model
+    d_inner, H, N = mamba_dims(cfg)
+    K = cfg.conv_kernel
+    return {
+        "in_z": mk((d, d_inner), ("fsdp", "ffn")),
+        "in_x": mk((d, d_inner), ("fsdp", "ffn")),
+        "in_B": mk((d, N), (None, None)),
+        "in_C": mk((d, N), (None, None)),
+        "in_dt": mk((d, H), (None, "ffn")),
+        "dt_bias": mk((H,), ("ffn",), init="zeros"),
+        "A_log": mk((H,), ("ffn",), scale=0.5),
+        "D": mk((H,), ("ffn",), init="ones"),
+        "conv": mk((K, d_inner), (None, "ffn"), scale=0.5),
+        "out": mk((d_inner, d), ("ffn", "fsdp")),
+    }
+
+
+def causal_conv1d(x, w, prev=None):
+    """Depthwise causal conv: x (B,T,C), w (K,C); prev (B,K-1,C) carry."""
+    K = w.shape[0]
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1]).repeat(K - 1, axis=1)
+    xp = jnp.concatenate([prev, x], axis=1)          # (B, T+K-1, C)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K))
+    return out, xp[:, -(K - 1):]                     # (out, new carry)
+
+
+def mamba_ssd_scan(xh, Bm, Cm, dt, a_log, S0):
+    """xh: (B,T,H,hd); Bm/Cm: (B,T,N); dt: (B,T,H); S0: (B,H,hd,N)."""
+    def step(S, inp):
+        xt, bt, ct, dtt = inp                        # (B,H,hd),(B,N),(B,H)
+        at = jnp.exp(-dtt * jnp.exp(a_log))          # (B,H)
+        upd = (dtt[..., None] * xt)[..., None] * bt[:, None, None, :]
+        S = at[..., None, None] * S + upd            # (B,H,hd,N)
+        yt = jnp.einsum("bhkn,bn->bhk", S, ct)
+        return S, yt
+
+    xs = (jnp.moveaxis(xh, 1, 0), jnp.moveaxis(Bm, 1, 0),
+          jnp.moveaxis(Cm, 1, 0), jnp.moveaxis(dt, 1, 0))
+    S, y = chunked_scan(step, S0, xs)
+    return jnp.moveaxis(y, 0, 1), S
+
+
+def mamba2(p: Params, x, cfg, state=None):
+    """x: (B,T,D). state: None or {"conv": (B,K-1,d_inner),
+    "S": (B,H,hd,N)}.  Returns (out, new_state)."""
+    B, T, D = x.shape
+    d_inner, H, N = mamba_dims(cfg)
+    hd = cfg.mamba_head_dim
+    z = jax.nn.silu(x @ p["in_z"])
+    xin = x @ p["in_x"]
+    conv_prev = None if state is None else state["conv"]
+    xin, conv_carry = causal_conv1d(xin, p["conv"], conv_prev)
+    xin = jax.nn.silu(xin)
+    xin = shard(xin, "batch", None, "ffn")
+    Bm = x @ p["in_B"]                               # (B,T,N)
+    Cm = x @ p["in_C"]
+    dt = jax.nn.softplus(x @ p["in_dt"] + p["dt_bias"])   # (B,T,H)
+    xh = xin.reshape(B, T, H, hd)
+    S0 = jnp.zeros((B, H, hd, N), jnp.float32) if state is None \
+        else state["S"]
+    y, S = mamba_ssd_scan(xh.astype(jnp.float32), Bm.astype(jnp.float32),
+                          Cm.astype(jnp.float32), dt.astype(jnp.float32),
+                          p["A_log"].astype(jnp.float32), S0)
+    y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = (y.reshape(B, T, d_inner).astype(x.dtype)) * z
+    out = y @ p["out"]
+    return shard(out, "batch", None, None), \
+        {"conv": conv_carry, "S": S}

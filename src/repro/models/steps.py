@@ -1,0 +1,82 @@
+"""Step functions: training (grad-accumulation + remat + optimizer) and
+serving (prefill / one-token decode).  These are what the launcher jits
+and the dry-run lowers.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import Optimizer, apply_updates, clip_by_global_norm
+from repro.distributed.sharding import shard
+from .model_zoo import Model
+
+
+def make_train_step(model: Model, optimizer: Optimizer, *,
+                    microbatches: int = 1, clip_norm: float = 1.0,
+                    remat: bool = True, unroll: bool = False):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics).  With microbatches > 1, the global batch is split on the
+    leading axis and gradients are accumulated in f32 (sequential scan —
+    the standard memory/time trade)."""
+
+    def loss_fn(params, mb):
+        loss, metrics = model.loss(params, mb, remat=remat, unroll=unroll)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            def split(x):
+                B = x.shape[0]
+                x = x.reshape(microbatches, B // microbatches,
+                              *x.shape[1:])
+                return shard(x, None, "batch", *([None] * (x.ndim - 2)))
+            mbs = jax.tree.map(split, batch)
+
+            def accum(carry, mb):
+                g_acc, l_acc = carry
+                (l, m), g = grad_fn(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + l), m
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            (grads, loss), metrics = jax.lax.scan(
+                accum, (g0, jnp.zeros((), jnp.float32)), mbs)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss / microbatches
+            metrics = jax.tree.map(lambda m: m.mean(), metrics)
+
+        grads = clip_by_global_norm(grads, clip_norm)
+        updates, new_opt = optimizer.update(grads, opt_state, params)
+        new_params = apply_updates(params, updates)
+        out_metrics = {"loss": loss, **{f"aux/{k}": v
+                                        for k, v in metrics.items()}}
+        return new_params, new_opt, out_metrics
+
+    return train_step
+
+
+def make_prefill_step(model: Model, cache_dtype=jnp.float32,
+                      unroll: bool = False):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, cache_dtype=cache_dtype,
+                             unroll=unroll)
+    return prefill_step
+
+
+def make_decode_step(model: Model, unroll: bool = False):
+    def decode_step(params, tokens, cache):
+        return model.decode_step(params, tokens, cache, unroll=unroll)
+    return decode_step
+
+
+def sample_greedy(logits):
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)

@@ -1,0 +1,310 @@
+"""Generic decoder-only LM stack covering dense / GQA / MoE / RWKV6 /
+Mamba2 / Zamba2-hybrid families (whisper's enc-dec lives in whisper.py).
+
+Layers are *stacked* (leading L axis) and applied with `lax.scan` so the
+88-layer configs lower to a single While op (fast compile, small HLO).
+Zamba2's shared attention block (one weight set invoked every k layers
+with per-invocation input projectors) is applied in a segment loop.
+
+Caches (decode path) are pytrees with a leading layer axis, threaded
+through the layer scan as xs/ys.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import shard
+from .layers import (Maker, Params, attention, embed,
+                     init_attention, init_embedding, init_mlp,
+                     init_rmsnorm, logits_out, mlp, rmsnorm)
+from .moe import init_moe, moe
+from .ssm import (init_mamba2, init_rwkv_channel_mix, init_rwkv_time_mix,
+                  mamba2, mamba_dims, rwkv_channel_mix, rwkv_time_mix)
+
+AUX_LOSS_WEIGHT = 0.01
+
+
+# ---------------------------------------------------------------------------
+# Per-layer block init / apply
+# ---------------------------------------------------------------------------
+
+def block_kind(cfg: ArchConfig) -> str:
+    if cfg.attn_free:
+        return "rwkv6"
+    if cfg.shared_attn_every:
+        return "mamba2"
+    return "attn"
+
+
+def init_block(mk: Maker, cfg: ArchConfig) -> Params:
+    kind = block_kind(cfg)
+    if kind == "attn":
+        ffn = init_moe(mk, cfg) if cfg.num_experts else \
+            init_mlp(mk, cfg.d_model, cfg.d_ff)
+        return {"ln1": init_rmsnorm(mk, cfg.d_model),
+                "attn": init_attention(mk, cfg),
+                "ln2": init_rmsnorm(mk, cfg.d_model),
+                "ffn": ffn}
+    if kind == "rwkv6":
+        return {"ln1": init_rmsnorm(mk, cfg.d_model),
+                "tm": init_rwkv_time_mix(mk, cfg),
+                "ln2": init_rmsnorm(mk, cfg.d_model),
+                "cm": init_rwkv_channel_mix(mk, cfg)}
+    if kind == "mamba2":
+        return {"ln": init_rmsnorm(mk, cfg.d_model),
+                "mamba": init_mamba2(mk, cfg)}
+    raise ValueError(kind)
+
+
+def empty_block_cache(cfg: ArchConfig, batch: int, cache_len: int, dtype):
+    """Per-layer cache template (no leading L axis)."""
+    kind = block_kind(cfg)
+    if kind == "attn":
+        C = min(cache_len, cfg.sliding_window) if cfg.sliding_window \
+            else cache_len
+        hd = cfg.resolved_head_dim
+        return {"k": jnp.zeros((batch, C, cfg.num_kv_heads, hd), dtype),
+                "v": jnp.zeros((batch, C, cfg.num_kv_heads, hd), dtype)}
+    if kind == "rwkv6":
+        hd = cfg.rwkv_head_size
+        H = cfg.d_model // hd
+        return {"tm_x": jnp.zeros((batch, cfg.d_model), dtype),
+                "S": jnp.zeros((batch, H, hd, hd), jnp.float32),
+                "cm_x": jnp.zeros((batch, cfg.d_model), dtype)}
+    if kind == "mamba2":
+        d_inner, H, N = mamba_dims(cfg)
+        return {"conv": jnp.zeros((batch, cfg.conv_kernel - 1, d_inner),
+                                  dtype),
+                "S": jnp.zeros((batch, H, cfg.mamba_head_dim, N),
+                               jnp.float32)}
+    raise ValueError(kind)
+
+
+def block_apply(p: Params, h, cfg: ArchConfig, *, positions,
+                cache=None, pos=None, prefill=False):
+    """Apply one block.  Returns (h, new_cache, aux_loss)."""
+    kind = block_kind(cfg)
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "attn":
+        att_cache = None if cache is None else \
+            {"k": cache["k"], "v": cache["v"], "pos": pos}
+        a, new_kv = attention(p["attn"], rmsnorm(p["ln1"], h), cfg,
+                              positions=positions, cache=att_cache,
+                              prefill=prefill)
+        h = h + a
+        hn = rmsnorm(p["ln2"], h)
+        if cfg.num_experts:
+            f, aux = moe(p["ffn"], hn, cfg)
+        else:
+            f = mlp(p["ffn"], hn)
+        h = h + f
+        new_cache = None if cache is None else \
+            {"k": new_kv["k"], "v": new_kv["v"]}
+        return h, new_cache, aux
+    if kind == "rwkv6":
+        tm_state = None if cache is None else \
+            {"x": cache["tm_x"], "S": cache["S"]}
+        a, tm_new = rwkv_time_mix(p["tm"], rmsnorm(p["ln1"], h), cfg,
+                                  tm_state)
+        h = h + a
+        cm_state = None if cache is None else {"x": cache["cm_x"]}
+        f, cm_new = rwkv_channel_mix(p["cm"], rmsnorm(p["ln2"], h),
+                                     cm_state)
+        h = h + f
+        new_cache = None if cache is None else \
+            {"tm_x": tm_new["x"], "S": tm_new["S"], "cm_x": cm_new["x"]}
+        return h, new_cache, aux
+    if kind == "mamba2":
+        st = None if cache is None else cache
+        m, new_st = mamba2(p["mamba"], rmsnorm(p["ln"], h), cfg, st)
+        return h + m, (None if cache is None else new_st), aux
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Model init
+# ---------------------------------------------------------------------------
+
+def init_lm(cfg: ArchConfig, key, dtype=jnp.float32) -> Params:
+    """Concrete params (key given) or logical-axes tree (key=None)."""
+    mk = Maker(key, dtype)
+    if mk.abstract:
+        block = init_block(Maker(None), cfg)
+        blocks = jax.tree.map(lambda axes: (None,) + axes, block,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    else:
+        keys = jax.random.split(jax.random.fold_in(key, 0xB10C),
+                                cfg.num_layers)
+        blocks = jax.vmap(
+            lambda k: init_block(Maker(k, dtype), cfg))(keys)
+    p = {
+        "embed": init_embedding(mk, cfg.padded_vocab, cfg.d_model),
+        "blocks": blocks,
+        "final_norm": init_rmsnorm(mk, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = init_embedding(mk, cfg.padded_vocab, cfg.d_model)
+    if cfg.shared_attn_every:            # zamba2 shared attention block
+        n_inv = len(cfg.shared_attn_positions())
+        def init_shared(m):
+            return {"ln": init_rmsnorm(m, cfg.d_model),
+                    "attn": init_attention(m, cfg),
+                    "ln2": init_rmsnorm(m, cfg.d_model),
+                    "mlp": init_mlp(m, cfg.d_model, cfg.d_ff)}
+        p["shared"] = init_shared(mk)
+        if mk.abstract:
+            p["shared_proj"] = (None, "fsdp", None)
+        else:
+            p["shared_proj"] = mk((n_inv, cfg.d_model, cfg.d_model),
+                                  (None, "fsdp", None))
+    return p
+
+
+def param_axes(cfg: ArchConfig):
+    return init_lm(cfg, key=None)
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def _shared_attn_apply(p, h, cfg, inv_idx, *, positions, cache=None,
+                       pos=None, prefill=False):
+    """Zamba2 shared block: per-invocation projector + shared attn+mlp."""
+    sp = p["shared"]
+    proj = p["shared_proj"][inv_idx]
+    hin = rmsnorm(sp["ln"], h @ proj)
+    att_cache = None if cache is None else \
+        {"k": cache["k"][inv_idx], "v": cache["v"][inv_idx], "pos": pos}
+    a, new_kv = attention(sp["attn"], hin, cfg, positions=positions,
+                          cache=att_cache, prefill=prefill)
+    hin = hin + a
+    hin = hin + mlp(sp["mlp"], rmsnorm(sp["ln2"], hin))
+    new_cache = None
+    if cache is not None:
+        new_cache = {"k": cache["k"].at[inv_idx].set(new_kv["k"]),
+                     "v": cache["v"].at[inv_idx].set(new_kv["v"])}
+    return h + hin, new_cache
+
+
+def forward(params: Params, cfg: ArchConfig, tokens, *, cache=None,
+            pos=None, remat: bool = False, prefill: bool = False,
+            unroll: bool = False):
+    """Shared forward.  tokens (B, S) int32.
+
+    * cache=None: full-sequence forward → (logits (B,S,V), aux_loss).
+    * cache given: stateful step (decode S=1, or chunked prefill) →
+      (logits, new_cache, aux).
+    """
+    B, S = tokens.shape
+    h = embed(params["embed"], tokens) * (cfg.d_model ** 0.5)
+    h = h.astype(params["final_norm"]["scale"].dtype)
+    if cache is None:
+        positions = jnp.arange(S)[None, :].repeat(B, 0)
+    else:
+        positions = (pos + jnp.arange(S))[None, :].repeat(B, 0)
+
+    aux_total = jnp.zeros((), jnp.float32)
+
+    if cfg.shared_attn_every:
+        # zamba2: segment loop (38 small blocks + shared invocations)
+        new_block_caches = []
+        shared_cache = None if cache is None else cache["shared"]
+        shared_pos = cfg.shared_attn_positions()
+        def apply_remat(lp, hh):
+            def inner(p_, h_):
+                h2, _, a = block_apply(p_, h_, cfg, positions=positions)
+                return h2, a
+            return jax.checkpoint(inner)(lp, hh)
+
+        for i in range(cfg.num_layers):
+            lp = jax.tree.map(lambda a: a[i], params["blocks"])
+            lcache = None if cache is None else \
+                jax.tree.map(lambda a: a[i], cache["blocks"])
+            if remat and cache is None:
+                h, aux = apply_remat(lp, h)
+                nc = None
+            else:
+                h, nc, aux = block_apply(lp, h, cfg, positions=positions,
+                                         cache=lcache, pos=pos,
+                                         prefill=prefill)
+            aux_total += aux
+            if cache is not None:
+                new_block_caches.append(nc)
+            if i in shared_pos:
+                inv = shared_pos.index(i)
+                h, shared_cache = _shared_attn_apply(
+                    params, h, cfg, inv, positions=positions,
+                    cache=shared_cache, pos=pos, prefill=prefill)
+        new_cache = None
+        if cache is not None:
+            stacked = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                   *new_block_caches)
+            new_cache = {"blocks": stacked, "shared": shared_cache,
+                         "pos": pos + S}
+    else:
+        def body(carry, xs):
+            h, aux = carry
+            if cache is None:
+                lp = xs
+                h2, _, a = block_apply(lp, h, cfg, positions=positions)
+                return (h2, aux + a), None
+            lp, lcache = xs
+            h2, nc, a = block_apply(lp, h, cfg, positions=positions,
+                                    cache=lcache, pos=pos,
+                                    prefill=prefill)
+            return (h2, aux + a), nc
+
+        if remat:
+            body = jax.checkpoint(body)
+
+        def scan_or_unroll(body, carry, xs):
+            if not unroll:
+                return jax.lax.scan(body, carry, xs)
+            ys = []
+            for i in range(cfg.num_layers):
+                carry, y = body(carry, jax.tree.map(lambda a: a[i], xs))
+                ys.append(y)
+            stacked = None if ys[0] is None else \
+                jax.tree.map(lambda *zs: jnp.stack(zs), *ys)
+            return carry, stacked
+
+        if cache is None:
+            (h, aux_total), _ = scan_or_unroll(body, (h, aux_total),
+                                               params["blocks"])
+            new_cache = None
+        else:
+            (h, aux_total), new_blocks = scan_or_unroll(
+                body, (h, aux_total), (params["blocks"], cache["blocks"]))
+            new_cache = {"blocks": new_blocks, "pos": pos + S}
+
+    if prefill:
+        h = h[:, -1:]          # serving prefill only needs the last token
+    h = rmsnorm(params["final_norm"], h)
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = logits_out(table, h)
+    if cache is None:
+        return logits, aux_total
+    return logits, new_cache, aux_total
+
+
+def init_cache(cfg: ArchConfig, batch: int, cache_len: int,
+               dtype=jnp.float32):
+    """Decode cache pytree with leading layer axis + scalar pos."""
+    one = empty_block_cache(cfg, batch, cache_len, dtype)
+    blocks = jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (cfg.num_layers,) + a.shape).copy(),
+        one)
+    cache = {"blocks": blocks, "pos": jnp.zeros((), jnp.int32)}
+    if cfg.shared_attn_every:
+        n_inv = len(cfg.shared_attn_positions())
+        hd = cfg.resolved_head_dim
+        C = cache_len
+        cache["shared"] = {
+            "k": jnp.zeros((n_inv, batch, C, cfg.num_kv_heads, hd), dtype),
+            "v": jnp.zeros((n_inv, batch, C, cfg.num_kv_heads, hd), dtype)}
+    return cache

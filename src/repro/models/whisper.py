@@ -1,0 +1,192 @@
+"""Whisper-style encoder–decoder transformer backbone.
+
+The mel-spectrogram + conv feature extractor is a STUB per the brief:
+`input_specs()` supplies precomputed frame embeddings of shape
+(B, encoder_frames, d_model).  This module implements everything after
+that: sinusoidal positions, the encoder self-attention stack, and the
+decoder (causal self-attention + cross-attention + MLP) with KV caches
+for serving.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from .layers import (Maker, Params, attention, embed,
+                     init_attention, init_embedding, init_mlp,
+                     init_rmsnorm, logits_out, mlp, rmsnorm)
+
+
+def sinusoidal_positions(length: int, d: int) -> np.ndarray:
+    pos = np.arange(length)[:, None]
+    dim = np.arange(d // 2)[None, :]
+    ang = pos / (10_000 ** (2 * dim / d))
+    return np.concatenate([np.sin(ang), np.cos(ang)], axis=-1)
+
+
+def init_enc_layer(mk: Maker, cfg) -> Params:
+    return {"ln1": init_rmsnorm(mk, cfg.d_model),
+            "attn": init_attention(mk, cfg),
+            "ln2": init_rmsnorm(mk, cfg.d_model),
+            "mlp": init_mlp(mk, cfg.d_model, cfg.d_ff)}
+
+
+def init_dec_layer(mk: Maker, cfg) -> Params:
+    return {"ln1": init_rmsnorm(mk, cfg.d_model),
+            "self_attn": init_attention(mk, cfg),
+            "ln_x": init_rmsnorm(mk, cfg.d_model),
+            "cross_attn": init_attention(mk, cfg),
+            "ln2": init_rmsnorm(mk, cfg.d_model),
+            "mlp": init_mlp(mk, cfg.d_model, cfg.d_ff)}
+
+
+def init_whisper(cfg: ArchConfig, key, dtype=jnp.float32) -> Params:
+    mk = Maker(key, dtype)
+    if mk.abstract:
+        enc = jax.tree.map(lambda a: (None,) + a,
+                           init_enc_layer(Maker(None), cfg),
+                           is_leaf=lambda t: isinstance(t, tuple))
+        dec = jax.tree.map(lambda a: (None,) + a,
+                           init_dec_layer(Maker(None), cfg),
+                           is_leaf=lambda t: isinstance(t, tuple))
+    else:
+        ek = jax.random.split(jax.random.fold_in(key, 1), cfg.encoder_layers)
+        dk = jax.random.split(jax.random.fold_in(key, 2), cfg.num_layers)
+        enc = jax.vmap(lambda k: init_enc_layer(Maker(k, dtype), cfg))(ek)
+        dec = jax.vmap(lambda k: init_dec_layer(Maker(k, dtype), cfg))(dk)
+    return {
+        "embed": init_embedding(mk, cfg.padded_vocab, cfg.d_model),
+        "enc_layers": enc,
+        "enc_norm": init_rmsnorm(mk, cfg.d_model),
+        "dec_layers": dec,
+        "dec_norm": init_rmsnorm(mk, cfg.d_model),
+        "unembed": init_embedding(mk, cfg.padded_vocab, cfg.d_model),
+    }
+
+
+def whisper_param_axes(cfg: ArchConfig):
+    return init_whisper(cfg, key=None)
+
+
+def encode(params: Params, cfg: ArchConfig, frames, remat: bool = False,
+           unroll: bool = False):
+    """frames: (B, F, D) stub frontend output → encoder states."""
+    B, F, D = frames.shape
+    pe = jnp.asarray(sinusoidal_positions(F, D), frames.dtype)
+    h = frames + pe[None]
+    positions = jnp.arange(F)[None, :].repeat(B, 0)
+
+    def body(h, lp):
+        a, _ = attention(lp["attn"], rmsnorm(lp["ln1"], h), cfg,
+                         positions=positions, causal=False)
+        h = h + a
+        h = h + mlp(lp["mlp"], rmsnorm(lp["ln2"], h))
+        return h, None
+
+    if remat:
+        body = jax.checkpoint(body)
+    if unroll:
+        for i in range(cfg.encoder_layers):
+            h, _ = body(h, jax.tree.map(lambda a: a[i],
+                                        params["enc_layers"]))
+    else:
+        h, _ = jax.lax.scan(body, h, params["enc_layers"])
+    return rmsnorm(params["enc_norm"], h)
+
+
+def cross_kv(params: Params, cfg: ArchConfig, enc_out):
+    """Precompute per-decoder-layer cross-attention K/V from encoder."""
+    def body(_, lp):
+        ca = lp["cross_attn"]
+        k = jnp.einsum("bsd,dhk->bshk", enc_out, ca["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", enc_out, ca["wv"])
+        return None, {"k": k, "v": v}
+    _, kv = jax.lax.scan(body, None, params["dec_layers"])
+    return kv                                    # leaves (L, B, F, H, hd)
+
+
+def _cross_attend(lp, h, cfg, kv):
+    """Cross-attention with precomputed KV (no mask, no rope)."""
+    ca = lp["cross_attn"]
+    q = jnp.einsum("bsd,dhk->bshk", rmsnorm(lp["ln_x"], h), ca["wq"])
+    from .layers import sdpa_with_spec
+    out = sdpa_with_spec(q, kv["k"], kv["v"], h.dtype, causal=False)
+    return jnp.einsum("bshk,hkd->bsd", out, ca["wo"])
+
+
+def decode_tokens(params: Params, cfg: ArchConfig, tokens, enc_out=None,
+                  *, xkv=None, cache=None, pos=None, prefill=False,
+                  remat: bool = False, unroll: bool = False):
+    """Decoder forward.  Either enc_out or precomputed xkv must be given.
+
+    cache=None → teacher-forced full sequence (training);
+    cache given → incremental decode, returns (logits, new_cache)."""
+    B, S = tokens.shape
+    h = embed(params["embed"], tokens) * (cfg.d_model ** 0.5)
+    h = h.astype(params["dec_norm"]["scale"].dtype)
+    if xkv is None:
+        xkv = cross_kv(params, cfg, enc_out)
+    if cache is None:
+        positions = jnp.arange(S)[None, :].repeat(B, 0)
+    else:
+        positions = (pos + jnp.arange(S))[None, :].repeat(B, 0)
+
+    def body(h, xs):
+        if cache is None:
+            lp, kv = xs
+            a, _ = attention(lp["self_attn"], rmsnorm(lp["ln1"], h), cfg,
+                             positions=positions)
+            nc = None
+        else:
+            lp, kv, lcache = xs
+            att_cache = {"k": lcache["k"], "v": lcache["v"], "pos": pos}
+            a, new_kv = attention(lp["self_attn"], rmsnorm(lp["ln1"], h),
+                                  cfg, positions=positions,
+                                  cache=att_cache, prefill=prefill)
+            nc = {"k": new_kv["k"], "v": new_kv["v"]}
+        h = h + a
+        h = h + _cross_attend(lp, h, cfg, kv)
+        h = h + mlp(lp["mlp"], rmsnorm(lp["ln2"], h))
+        return h, nc
+
+    def scan_or_unroll(body, carry, xs):
+        if not unroll:
+            return jax.lax.scan(body, carry, xs)
+        ys = []
+        for i in range(cfg.num_layers):
+            carry, y = body(carry, jax.tree.map(lambda a: a[i], xs))
+            ys.append(y)
+        stacked = None if ys[0] is None else \
+            jax.tree.map(lambda *zs: jnp.stack(zs), *ys)
+        return carry, stacked
+
+    if cache is None:
+        if remat:
+            body = jax.checkpoint(body)
+        h, _ = scan_or_unroll(body, h, (params["dec_layers"], xkv))
+        new_cache = None
+    else:
+        h, new_blocks = scan_or_unroll(
+            body, h, (params["dec_layers"], xkv, cache["blocks"]))
+        new_cache = {"blocks": new_blocks, "pos": pos + S}
+
+    if prefill:
+        h = h[:, -1:]          # serving prefill only needs the last token
+    h = rmsnorm(params["dec_norm"], h)
+    logits = logits_out(params["unembed"], h)
+    if cache is None:
+        return logits
+    return logits, new_cache
+
+
+def whisper_init_cache(cfg: ArchConfig, batch: int, cache_len: int,
+                       dtype=jnp.float32):
+    hd = cfg.resolved_head_dim
+    blocks = {
+        "k": jnp.zeros((cfg.num_layers, batch, cache_len,
+                        cfg.num_kv_heads, hd), dtype),
+        "v": jnp.zeros((cfg.num_layers, batch, cache_len,
+                        cfg.num_kv_heads, hd), dtype)}
+    return {"blocks": blocks, "pos": jnp.zeros((), jnp.int32)}

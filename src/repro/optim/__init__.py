@@ -1,0 +1,3 @@
+from .optimizers import (Optimizer, adamw, sgd, apply_updates,
+                         clip_by_global_norm, global_norm,
+                         cosine_schedule, constant_schedule)

@@ -1,0 +1,86 @@
+"""DAGM (Algorithm 2) behaviour: convergence, consensus, backends."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (DAGMConfig, dagm_run, make_network,
+                        quadratic_bilevel)
+from repro.core.dagm import dagm_comm_bytes
+from repro.core.problems import ho_logistic
+
+
+@pytest.fixture(scope="module")
+def net():
+    return make_network("erdos_renyi", 12, r=0.5, seed=0)
+
+
+@pytest.fixture(scope="module")
+def prob():
+    return quadratic_bilevel(12, 3, 5, seed=0, mu_f=0.4)
+
+
+def test_dagm_reduces_true_hypergradient(net, prob):
+    cfg = DAGMConfig(alpha=0.05, beta=0.1, K=300, M=10, U=5)
+    # Start far from stationarity: DAGM converges to an O(α + √β)-biased
+    # neighbourhood of the true optimum (Thm 7), so the near-stationary
+    # default x0 = 0 cannot exhibit the decrease.
+    import jax
+    x0 = jnp.broadcast_to(
+        2.0 * jax.random.normal(jax.random.PRNGKey(3), (prob.d1,)),
+        (prob.n, prob.d1))
+    res = dagm_run(prob, net, cfg, x0=x0)
+    hg = np.asarray(res.metrics["true_hypergrad_norm_sq"])
+    assert hg[-1] < 0.05 * hg[0]
+    assert np.isfinite(hg).all()
+
+
+def test_dagm_consensus(net, prob):
+    cfg = DAGMConfig(alpha=0.05, beta=0.1, K=150, M=10, U=5)
+    res = dagm_run(prob, net, cfg)
+    assert float(res.metrics["consensus_x"][-1]) < 1e-2
+    # all agents close to the mean
+    x = np.asarray(res.x)
+    assert np.abs(x - x.mean(0)).max() < 0.2
+
+
+def test_backends_agree(net, prob):
+    """dense DIHGP vs exact inverse vs matrix-free give close iterates."""
+    runs = {}
+    for backend, U in [("dense", 30), ("exact", 0), ("matrix_free", 80)]:
+        cfg = DAGMConfig(alpha=0.05, beta=0.1, K=30, M=10, U=U,
+                         dihgp=backend)
+        runs[backend] = np.asarray(dagm_run(prob, net, cfg).x)
+    np.testing.assert_allclose(runs["dense"], runs["exact"], atol=2e-3)
+    np.testing.assert_allclose(runs["matrix_free"], runs["exact"],
+                               atol=2e-3)
+
+
+def test_larger_U_is_more_accurate(net, prob):
+    """Per-iteration accuracy improves with the Neumann order (the U
+    trade-off discussed after Algorithm 2)."""
+    ref = np.asarray(dagm_run(prob, net, DAGMConfig(
+        alpha=0.05, beta=0.1, K=20, M=10, U=0, dihgp="exact")).x)
+    errs = []
+    for U in (0, 2, 8):
+        x = np.asarray(dagm_run(prob, net, DAGMConfig(
+            alpha=0.05, beta=0.1, K=20, M=10, U=U)).x)
+        errs.append(np.abs(x - ref).max())
+    assert errs[0] > errs[1] > errs[2]
+
+
+def test_nonconvex_runs_finite(net):
+    prob = ho_logistic(12, d=6, m_per=15, seed=0)
+    cfg = DAGMConfig(alpha=0.05, beta=0.1, K=60, M=5, U=3)
+    res = dagm_run(prob, net, cfg)
+    obj = np.asarray(res.metrics["outer_obj"])
+    assert np.isfinite(obj).all()
+    assert obj[-1] < obj[0]
+
+
+def test_comm_accounting(net, prob):
+    cfg = DAGMConfig(K=10, M=7, U=3)
+    v = cfg.comm_vectors_per_round()
+    assert v == {"inner_d2": 7, "dihgp_d2": 3, "outer_d1": 1}
+    b = dagm_comm_bytes(cfg, net, d1=3, d2=5, bytes_per=4)
+    per_round = (7 * 5 + 3 * 5 + 3) * 2 * net.num_edges * 4
+    assert b == 10 * per_round

@@ -1,0 +1,101 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret
+mode executes the kernel body on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.mixing_matvec import ring_laplacian_matvec
+from repro.kernels.rwkv6_scan import rwkv6_scan
+from repro.kernels import ref
+
+
+@pytest.mark.parametrize("n,d,bn,bd", [(16, 128, 8, 128), (32, 256, 8, 128),
+                                       (8, 384, 4, 128), (64, 128, 16, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_mixing_matvec_sweep(n, d, bn, bd, dtype):
+    y = jax.random.normal(jax.random.PRNGKey(n + d), (n, d)).astype(dtype)
+    out = ring_laplacian_matvec(y, w_self=1 / 3, w_edge=1 / 3, bn=bn,
+                                bd=bd)
+    want = ref.ring_laplacian_ref(y.astype(jnp.float32), 1 / 3, 1 / 3)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("S,bq,bk", [(128, 64, 64), (256, 128, 64),
+                                     (256, 64, 128)])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 32),
+                                           (False, 0)])
+def test_flash_attention_sweep(S, bq, bk, causal, window):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(S + bq), 3)
+    B, H, hd = 2, 2, 64
+    q = jax.random.normal(k1, (B, S, H, hd))
+    k = jax.random.normal(k2, (B, S, H, hd))
+    v = jax.random.normal(k3, (B, S, H, hd))
+    out = flash_attention(q, k, v, causal=causal, window=window, bq=bq,
+                          bk=bk)
+    want = ref.attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_bf16():
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    B, S, H, hd = 1, 128, 2, 64
+    q, k, v = (jax.random.normal(ks[i], (B, S, H, hd), jnp.bfloat16)
+               for i in range(3))
+    out = flash_attention(q, k, v, bq=64, bk=64)
+    want = ref.attention_ref(q.astype(jnp.float32),
+                             k.astype(jnp.float32),
+                             v.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want), atol=3e-2, rtol=3e-2)
+
+
+@pytest.mark.parametrize("T,chunk", [(64, 16), (128, 32), (96, 32)])
+@pytest.mark.parametrize("hd", [16, 32])
+def test_rwkv6_scan_sweep(T, chunk, hd):
+    ks = jax.random.split(jax.random.PRNGKey(T + hd), 5)
+    B, H = 2, 2
+    r, k, v = (0.5 * jax.random.normal(ks[i], (B, T, H, hd))
+               for i in range(3))
+    logw = -jnp.exp(jnp.clip(jax.random.normal(ks[3], (B, T, H, hd)),
+                             -8, 2))
+    u = 0.5 * jax.random.normal(ks[4], (H, hd))
+    out = rwkv6_scan(r, k, v, logw, u, chunk=chunk)
+    want, _ = ref.rwkv6_ref(r, k, v, logw, u)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_rwkv6_scan_state_continuity():
+    """Chunk boundaries carry state exactly: kernel(T) == kernel run as
+    the oracle over two halves."""
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    B, T, H, hd = 1, 64, 1, 16
+    r, k, v = (0.5 * jax.random.normal(ks[i], (B, T, H, hd))
+               for i in range(3))
+    logw = -jnp.exp(jnp.clip(jax.random.normal(ks[3], (B, T, H, hd)),
+                             -8, 2))
+    u = 0.5 * jax.random.normal(ks[4], (H, hd))
+    out = rwkv6_scan(r, k, v, logw, u, chunk=16)
+    o1, S = ref.rwkv6_ref(r[:, :32], k[:, :32], v[:, :32], logw[:, :32], u)
+    o2, _ = ref.rwkv6_ref(r[:, 32:], k[:, 32:], v[:, 32:], logw[:, 32:],
+                          u, S0=S)
+    want = jnp.concatenate([o1, o2], axis=1)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_ops_dispatch():
+    from repro.kernels import ops
+    y = jax.random.normal(jax.random.PRNGKey(0), (16, 128))
+    ops.use_pallas(True)
+    try:
+        a = ops.ring_laplacian(y, 1 / 3, 1 / 3)
+    finally:
+        ops.use_pallas(False)
+    b = ops.ring_laplacian(y, 1 / 3, 1 / 3)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)

@@ -1,0 +1,74 @@
+"""Unit tests: network topologies and mixing matrices (Assumption A)."""
+import numpy as np
+import pytest
+
+from repro.core import mixing as mx
+
+
+@pytest.mark.parametrize("kind", ["ring", "erdos_renyi", "complete",
+                                  "star", "circulant"])
+@pytest.mark.parametrize("weights", ["metropolis", "max_degree"])
+def test_assumption_a(kind, weights):
+    net = mx.make_network(kind, 12, weights=weights, offsets=(1, 2),
+                          seed=3)
+    mx.check_assumption_a(net.W, net.adj)
+    assert 0.0 < net.sigma < 1.0
+
+
+def test_uniform_w_is_centralized_limit():
+    net = mx.make_network("uniform", 8)
+    assert net.sigma < 1e-8
+
+
+def test_metropolis_example_2_values():
+    # ring: every node has degree 2 -> edge weight 1/3, self 1/3
+    net = mx.make_network("ring", 6)
+    assert np.allclose(net.W[0, 1], 1 / 3)
+    assert np.allclose(np.diag(net.W), 1 / 3)
+
+
+def test_max_degree_example_1_values():
+    net = mx.make_network("ring", 6, weights="max_degree")
+    assert np.allclose(net.W[0, 1], 1 / 6)          # 1/n on edges
+    assert np.allclose(np.diag(net.W), 1 - 2 / 6)   # 1 - deg/n
+
+
+def test_spectral_gap_ordering():
+    """Denser graphs mix faster: sigma(complete) < sigma(ring)."""
+    ring = mx.make_network("ring", 16)
+    er = mx.make_network("erdos_renyi", 16, r=0.5, seed=0)
+    comp = mx.make_network("complete", 16)
+    assert comp.sigma < er.sigma < ring.sigma
+
+
+def test_mix_apply_preserves_consensus():
+    import jax.numpy as jnp
+    net = mx.make_network("erdos_renyi", 10, r=0.5, seed=1)
+    z = jnp.ones((10, 4)) * 2.5
+    out = mx.mix_apply(net.W_jnp(), z)
+    np.testing.assert_allclose(np.asarray(out), 2.5, rtol=1e-6)
+    lap = mx.laplacian_apply(net.W_jnp(), z)
+    np.testing.assert_allclose(np.asarray(lap), 0.0, atol=1e-6)
+
+
+def test_neumann_rho_below_one():
+    net = mx.make_network("erdos_renyi", 10, r=0.5, seed=1)
+    # Lemma 5's closed form rho = 2(1-θ)/(2(1-Θ)+βμ_g) is < 1 whenever
+    # β·μ_g > 2(Θ-θ); the *actual* spectral norm of D^{-1/2}BD^{-1/2}
+    # is always < 1 (D−B = H ≻ 0), which test_b_matrix_psd et al. cover.
+    theta, Theta = net.theta_bounds
+    mu_g = 1.0
+    beta = (2.0 * (Theta - theta) + 0.5) / mu_g
+    rho = mx.neumann_rho(net.W, beta=beta, mu_g=mu_g)
+    assert 0.0 < rho < 1.0
+    # and the bound degrades monotonically as beta shrinks
+    assert mx.neumann_rho(net.W, beta=beta / 2, mu_g=mu_g) > rho
+
+
+def test_disconnected_rejected():
+    with pytest.raises(AssertionError):
+        adj = np.zeros((4, 4), dtype=bool)
+        adj[0, 1] = adj[1, 0] = True
+        adj[2, 3] = adj[3, 2] = True        # two components
+        W = mx.metropolis_weights(adj)
+        mx.check_assumption_a(W, adj)

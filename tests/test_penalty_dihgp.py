@@ -1,0 +1,111 @@
+"""Penalized reformulation (Lemma 3/4) + DIHGP (Algorithm 1, Lemmas 5/6)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (B_apply, dihgp_dense, dihgp_matrix_free,
+                        exact_ihgp, make_network, quadratic_bilevel)
+from repro.core.dihgp import estimate_curvature_bound
+from repro.core.penalty import (G_objective, exact_penalized_inner,
+                                grad_y_G, inner_dgd_step, penalized_hessian)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    n, d1, d2, beta = 8, 3, 5, 0.3
+    net = make_network("erdos_renyi", n, r=0.5, seed=2)
+    prob = quadratic_bilevel(n, d1, d2, seed=0)
+    x = 0.1 * jnp.ones((n, d1))
+    y = 0.05 * jnp.ones((n, d2))
+    return net, prob, x, y, beta
+
+
+def test_penalized_hessian_structure(setup):
+    net, prob, x, y, beta = setup
+    H = np.asarray(penalized_hessian(prob, net.W_jnp(), beta, x, y))
+    assert np.allclose(H, H.T, atol=1e-5)
+    assert np.linalg.eigvalsh(H).min() > 0          # PD under B5
+    # graph sparsity: block (i,j) nonzero only on edges (Eq. 8 remark)
+    n, d2 = y.shape
+    for i in range(n):
+        for j in range(n):
+            blk = H[i * d2:(i + 1) * d2, j * d2:(j + 1) * d2]
+            if i != j and not net.adj[i, j]:
+                assert np.abs(blk).max() < 1e-8
+
+
+def test_hessian_splitting_identity(setup):
+    """H = D − B (Eq. 9): check via matvec identities."""
+    net, prob, x, y, beta = setup
+    W = net.W_jnp()
+    H = penalized_hessian(prob, W, beta, x, y)
+    n, d2 = y.shape
+    v = jax.random.normal(jax.random.PRNGKey(0), (n, d2))
+    Hv = (H @ v.reshape(-1)).reshape(n, d2)
+    # D v = (beta hess + 2(1 - w_ii)) v  computed blockwise
+    diag_w = jnp.diag(W)
+    Dv = beta * prob.hvp_yy_g(x, y, v) \
+        + 2.0 * (1.0 - diag_w)[:, None] * v
+    Bv = B_apply(W, v)
+    np.testing.assert_allclose(np.asarray(Hv), np.asarray(Dv - Bv),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_b_matrix_psd(setup):
+    net, _, _, y, _ = setup
+    n = net.n
+    d = 4
+    # B = I - 2 diag(W) + W as dense matrix via B_apply on basis vectors
+    eye = jnp.eye(n * d).reshape(n * d, n, d)
+    cols = jax.vmap(lambda e: B_apply(net.W_jnp(), e).reshape(-1))(eye)
+    B = np.asarray(cols).T
+    assert np.linalg.eigvalsh((B + B.T) / 2).min() > -1e-6
+
+
+def test_dihgp_error_decays_exponentially(setup):
+    """Lemma 6: ||h_(U) − h*|| ≤ C·rho^{U+1}."""
+    net, prob, x, y, beta = setup
+    W = net.W_jnp()
+    exact = exact_ihgp(prob, W, beta, x, y)
+    errs = [float(jnp.linalg.norm(
+        dihgp_dense(prob, W, beta, x, y, U) - exact))
+        for U in (0, 4, 8, 16, 32)]
+    assert all(a > b for a, b in zip(errs, errs[1:]))
+    assert errs[-1] < 1e-4 * errs[0]
+    # log-linear decay (geometric): ratios roughly constant
+    ratios = [errs[i + 1] / errs[i] for i in range(len(errs) - 1)]
+    assert max(ratios) < 0.5
+
+
+def test_dihgp_matrix_free_matches_exact(setup):
+    net, prob, x, y, beta = setup
+    W = net.W_jnp()
+    exact = exact_ihgp(prob, W, beta, x, y)
+    hvp = lambda v: prob.hvp_yy_g(x, y, v)
+    h = dihgp_matrix_free(hvp, prob.grad_y_f(x, y), W, beta, 120)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(exact),
+                               rtol=1e-3, atol=1e-5)
+
+
+def test_curvature_bound_upper_bounds_lambda_max(setup):
+    net, prob, x, y, _ = setup
+    hvp = lambda v: prob.hvp_yy_g(x, y, v)
+    c = np.asarray(estimate_curvature_bound(hvp, y.shape, iters=30))
+    A = np.asarray(prob.data["A"])
+    lam = np.array([np.linalg.eigvalsh(A[i]).max() for i in range(prob.n)])
+    assert np.all(c >= lam * 0.999)
+
+
+def test_inner_dgd_converges_to_penalized_solution(setup):
+    """Eq. 15/16 converges to argmin G (Lemma 22 contraction)."""
+    net, prob, x, y, beta = setup
+    W = net.W_jnp()
+    y_star = exact_penalized_inner(prob, W, beta, x, y, iters=4000)
+    g_grad = grad_y_G(prob, W, beta, x, y_star)
+    assert float(jnp.linalg.norm(g_grad)) < 1e-4
+    # objective strictly decreases along DGD steps
+    g0 = G_objective(prob, W, beta, x, y)
+    y1 = inner_dgd_step(prob, W, beta, x, y)
+    g1 = G_objective(prob, W, beta, x, y1)
+    assert g1 < g0

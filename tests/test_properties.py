@@ -1,0 +1,108 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import mixing as mx
+from repro.core.penalty import consensus_error
+from repro.kernels import ref
+from repro.kernels.mixing_matvec import ring_laplacian_matvec
+from repro.models.ssm import chunked_scan
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+@given(n=st.integers(4, 24), seed=st.integers(0, 10_000),
+       r=st.floats(0.2, 0.9))
+@settings(**SETTINGS)
+def test_metropolis_satisfies_assumption_a(n, seed, r):
+    net = mx.make_network("erdos_renyi", n, r=r, seed=seed)
+    mx.check_assumption_a(net.W, net.adj)
+    # σ = 0 is attained exactly for the complete graph (W = 11ᵀ/n);
+    # Assumption A only needs σ < 1.
+    assert 0.0 <= net.sigma < 1.0
+    theta, Theta = net.theta_bounds
+    assert 0.0 < theta <= Theta <= 1.0
+
+
+@given(n=st.integers(4, 20), seed=st.integers(0, 1000))
+@settings(**SETTINGS)
+def test_mixing_is_averaging(n, seed):
+    """W z keeps the mean and contracts the consensus error."""
+    net = mx.make_network("erdos_renyi", n, r=0.5, seed=seed)
+    z = jnp.asarray(np.random.default_rng(seed).normal(size=(n, 3)),
+                    jnp.float32)
+    mixed = mx.mix_apply(net.W_jnp(), z)
+    np.testing.assert_allclose(np.asarray(mixed.mean(0)),
+                               np.asarray(z.mean(0)), atol=1e-5)
+    assert float(consensus_error(mixed)) <= float(consensus_error(z)) \
+        + 1e-6
+
+
+@given(nb=st.integers(1, 6), db=st.integers(1, 4),
+       seed=st.integers(0, 100),
+       dtype=st.sampled_from([jnp.float32, jnp.bfloat16]))
+@settings(**SETTINGS)
+def test_mixing_kernel_matches_oracle(nb, db, seed, dtype):
+    n, d = 8 * nb, 128 * db
+    y = jax.random.normal(jax.random.PRNGKey(seed), (n, d)).astype(dtype)
+    out = ring_laplacian_matvec(y, w_self=1 / 3, w_edge=1 / 3)
+    want = ref.ring_laplacian_ref(y.astype(jnp.float32), 1 / 3, 1 / 3)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want), atol=tol, rtol=tol)
+
+
+@given(t_mult=st.integers(1, 4), chunk=st.sampled_from([4, 8, 16]),
+       seed=st.integers(0, 100))
+@settings(**SETTINGS)
+def test_chunked_scan_equals_plain_scan(t_mult, chunk, seed):
+    T = chunk * t_mult * 2
+    xs = jax.random.normal(jax.random.PRNGKey(seed), (T, 3))
+
+    def step(c, x):
+        c = 0.9 * c + x
+        return c, c * 2.0
+
+    c1, y1 = jax.lax.scan(step, jnp.zeros(3), xs)
+    c2, y2 = chunked_scan(step, jnp.zeros(3), xs, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(c1), np.asarray(c2), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-6)
+
+
+@given(seed=st.integers(0, 1000), beta=st.floats(0.05, 0.9))
+@settings(max_examples=10, deadline=None)
+def test_dihgp_truncation_error_monotone(seed, beta):
+    """Lemma 6: truncation error is non-increasing in U (property over
+    random problems and penalty parameters)."""
+    from repro.core import dihgp_dense, exact_ihgp, quadratic_bilevel
+    n = 6
+    net = mx.make_network("erdos_renyi", n, r=0.6, seed=seed)
+    prob = quadratic_bilevel(n, 2, 3, seed=seed)
+    x = jnp.zeros((n, 2))
+    y = 0.1 * jnp.ones((n, 3))
+    W = net.W_jnp()
+    exact = exact_ihgp(prob, W, beta, x, y)
+    errs = [float(jnp.linalg.norm(dihgp_dense(prob, W, beta, x, y, U)
+                                  - exact)) for U in (0, 3, 9, 27)]
+    for a, b in zip(errs, errs[1:]):
+        assert b <= a + 1e-6
+
+
+@given(b=st.integers(1, 3), s=st.sampled_from([8, 16]),
+       v=st.sampled_from([32, 64]), seed=st.integers(0, 500))
+@settings(**SETTINGS)
+def test_cross_entropy_properties(b, s, v, seed):
+    from repro.models.model_zoo import cross_entropy
+    key = jax.random.PRNGKey(seed)
+    logits = jax.random.normal(key, (b, s, v))
+    labels = jax.random.randint(key, (b, s), 0, v - 4)
+    ce = float(cross_entropy(logits, labels, vocab_size=v - 4))
+    assert ce >= 0.0
+    # perfect logits → near-zero loss
+    perfect = 50.0 * jax.nn.one_hot(labels, v)
+    assert float(cross_entropy(perfect, labels, v - 4)) < 1e-3
+    # ignored labels drop out
+    masked = labels.at[:, 0].set(-1)
+    assert np.isfinite(float(cross_entropy(logits, masked, v - 4)))
