@@ -11,8 +11,8 @@ import argparse
 import sys
 import time
 
-from . import (fig2_synthetic, fig3_real, fig4_hyperrep, fig5_fairloss,
-               roofline, table1_convergence, table2_comm)
+from . import (bench_mixing, fig2_synthetic, fig3_real, fig4_hyperrep,
+               fig5_fairloss, roofline, table1_convergence, table2_comm)
 
 MODULES = {
     "table1": table1_convergence,
@@ -22,6 +22,7 @@ MODULES = {
     "fig4": fig4_hyperrep,
     "fig5": fig5_fairloss,
     "roofline": roofline,
+    "mixing": bench_mixing,
 }
 
 
@@ -37,7 +38,12 @@ def main(argv=None) -> int:
     print("name,us_per_call,derived")
     failures = 0
     for name in names:
-        mod = MODULES[name]
+        mod = MODULES.get(name)
+        if mod is None:
+            print(f"{name}/ERROR,0,unknown module (choose from "
+                  f"{' '.join(MODULES)})")
+            failures += 1
+            continue
         t0 = time.time()
         try:
             rows = mod.run(args.budget)

@@ -1,0 +1,14 @@
+"""Repo-wide pytest config.
+
+Registers the `slow` marker carried by the subprocess-spawning system
+suites (tests/test_sharded.py, tests/test_system.py).  scripts/ci.sh
+runs `-m "not slow"` first so algorithm regressions fail in seconds,
+then the full suite.
+"""
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: subprocess-spawning / multi-device system tests "
+        "(deselect with -m \"not slow\")")

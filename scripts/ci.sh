@@ -1,0 +1,26 @@
+#!/usr/bin/env bash
+# Two-tier CI: the fast tier (~seconds per module, no subprocess spawns)
+# fails first on algorithm regressions; the slow tier then runs the
+# multi-device / end-to-end system suites.
+#
+#   scripts/ci.sh [extra pytest args...]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+# pytest exits 5 when everything is deselected (e.g. ci.sh was pointed
+# at a file whose cases all live in the other tier) — that is a green
+# tier, not a failure.
+run_tier() {
+    local rc=0
+    python -m pytest -q -m "$1" "${@:2}" || rc=$?
+    if [ "$rc" -ne 0 ] && [ "$rc" -ne 5 ]; then
+        exit "$rc"
+    fi
+}
+
+echo "=== tier 1: fast suite (-m 'not slow') ==="
+run_tier "not slow" "$@"
+
+echo "=== tier 2: slow suite (-m slow) ==="
+run_tier "slow" "$@"

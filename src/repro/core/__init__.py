@@ -6,7 +6,9 @@ MA-DBO).
 """
 from .mixing import (Network, make_network, mixing_rate, spectral_gap,
                      neumann_rho, metropolis_weights, max_degree_weights,
-                     mix_apply, laplacian_apply, check_assumption_a)
+                     mix_apply, laplacian_apply, check_assumption_a,
+                     MixingOp, make_mixing_op, circulant_structure,
+                     fused_neumann_step, as_matrix)
 from .problems import (BilevelProblem, quadratic_bilevel, ho_regression,
                        ho_logistic, ho_svm, ho_softmax,
                        hyper_representation, fair_loss_tuning)

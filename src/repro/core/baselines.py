@@ -10,6 +10,12 @@ benchmarks/table2 can compare measured bytes with the closed forms.
 
 These are deterministic full-gradient variants (the paper's Table 1/2
 setting is deterministic); stochastic mini-batching is orthogonal.
+
+Every gossip/consensus application routes through `mixing.mix_apply` on
+a `MixingOp` (the `mixing=` kwarg, default "auto"), so the baselines run
+on the same topology-aware sparse backend as DAGM — their Table 2 cost
+gap vs DAGM is in *what* they communicate (matrices), not in how the
+mixing is executed.
 """
 from __future__ import annotations
 
@@ -20,7 +26,8 @@ import jax
 import jax.numpy as jnp
 
 from .dagm import default_metrics
-from .mixing import Network, laplacian_apply, mix_apply
+from .mixing import (Network, as_matrix, laplacian_apply,
+                     make_mixing_op, mix_apply)
 from .penalty import inner_dgd_step
 from .problems import BilevelProblem
 
@@ -51,11 +58,12 @@ def _run_scan(body, carry0, K):
 def dgbo_run(prob: BilevelProblem, net: Network, *, alpha: float,
              beta: float, K: int, M: int = 10, b: int = 3,
              x0: Array | None = None, y0: Array | None = None,
-             seed: int = 0) -> BaselineResult:
+             seed: int = 0, mixing: str = "auto",
+             mixing_interpret: bool = True) -> BaselineResult:
     """Deterministic DGBO: gossip consensus on x, y, grads, Jacobians and
     a gossip+Neumann estimate of the *global mean* Hessian (d2×d2 matrix
     communication — the expensive part the paper improves on)."""
-    W = net.W_jnp()
+    W = make_mixing_op(net, backend=mixing, interpret=mixing_interpret)
     n, d1, d2 = prob.n, prob.d1, prob.d2
     if x0 is None:
         x0 = jnp.zeros((n, d1), jnp.float32)
@@ -84,7 +92,7 @@ def dgbo_run(prob: BilevelProblem, net: Network, *, alpha: float,
         # hyper-gradient + gossip consensus step on x (Step 4)
         d = prob.grad_x_f(x, y1) + prob.cross_xy_g_times(x, y1, h)
         x1 = mix_apply(W, x) - alpha * d
-        return (x1, y1), default_metrics(prob, W, x, y1)
+        return (x1, y1), default_metrics(prob, as_matrix(W), x, y1)
 
     (x, y), metrics = _run_scan(body, (x0, y0), K)
     # per-agent floats per round: x,y,grad-est vectors + b Hessian matrices
@@ -101,10 +109,11 @@ def dgbo_run(prob: BilevelProblem, net: Network, *, alpha: float,
 def dgtbo_run(prob: BilevelProblem, net: Network, *, alpha: float,
               beta: float, K: int, M: int = 10, N: int = 5,
               x0: Array | None = None, y0: Array | None = None,
-              seed: int = 0) -> BaselineResult:
+              seed: int = 0, mixing: str = "auto",
+              mixing_interpret: bool = True) -> BaselineResult:
     """Deterministic DGTBO: JHIP solves Z ≈ −J H^{-1} (d1×d2) by N
     decentralized Richardson iterations, each gossiping the full Z matrix."""
-    W = net.W_jnp()
+    W = make_mixing_op(net, backend=mixing, interpret=mixing_interpret)
     n, d1, d2 = prob.n, prob.d1, prob.d2
     if x0 is None:
         x0 = jnp.zeros((n, d1), jnp.float32)
@@ -140,7 +149,7 @@ def dgtbo_run(prob: BilevelProblem, net: Network, *, alpha: float,
         p = prob.grad_y_f(x, y1)
         d = prob.grad_x_f(x, y1) - jnp.einsum("nij,nj->ni", Z, p)
         x1 = mix_apply(W, x) - alpha * d
-        return (x1, y1), default_metrics(prob, W, x, y1)
+        return (x1, y1), default_metrics(prob, as_matrix(W), x, y1)
 
     (x, y), metrics = _run_scan(body, (x0, y0), K)
     # Appendix S1: K n (M d2 + d1 + n N d1 d2) / n per agent per round:
@@ -209,9 +218,11 @@ def fednest_run(prob: BilevelProblem, net: Network | None, *, alpha: float,
 def madbo_run(prob: BilevelProblem, net: Network, *, alpha: float,
               beta: float, K: int, M: int = 10, U: int = 3,
               momentum: float = 0.9, x0: Array | None = None,
-              y0: Array | None = None, seed: int = 0) -> BaselineResult:
+              y0: Array | None = None, seed: int = 0,
+              mixing: str = "auto",
+              mixing_interpret: bool = True) -> BaselineResult:
     from .dihgp import dihgp_dense
-    W = net.W_jnp()
+    W = make_mixing_op(net, backend=mixing, interpret=mixing_interpret)
     n, d1, d2 = prob.n, prob.d1, prob.d2
     if x0 is None:
         x0 = jnp.zeros((n, d1), jnp.float32)
@@ -230,7 +241,7 @@ def madbo_run(prob: BilevelProblem, net: Network, *, alpha: float,
         v1 = momentum * v + (1.0 - momentum) * d
         v1 = mix_apply(W, v1)                      # gossip the tracker
         x1 = x - alpha * v1
-        return (x1, y1, v1), default_metrics(prob, W, x, y1)
+        return (x1, y1, v1), default_metrics(prob, as_matrix(W), x, y1)
 
     (x, y, _), metrics = _run_scan(body, (x0, y0, v0), K)
     comm = M * d2 + U * d2 + 2 * d1            # extra d1 for the tracker

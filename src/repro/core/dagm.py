@@ -27,7 +27,8 @@ import jax
 import jax.numpy as jnp
 
 from .dihgp import dihgp_dense, dihgp_matrix_free
-from .mixing import Network, laplacian_apply, mix_apply
+from .mixing import (Network, as_matrix, laplacian_apply, make_mixing_op,
+                     mix_apply)
 from .penalty import consensus_error, inner_dgd_step
 from .problems import BilevelProblem
 
@@ -43,6 +44,16 @@ class DAGMConfig:
     U: int = 3                   # Neumann truncation order (paper uses 3)
     dihgp: str = "dense"         # "dense" | "matrix_free" | "exact"
     curvature: float | None = None   # fixed λmax bound for matrix_free
+    mixing: str = "auto"         # MixingOp backend: "auto" | "dense" |
+    #                              "circulant" | "circulant_pallas" —
+    #                              selects the (I−W)·Y execution path for
+    #                              the whole run (mixing.MixingOp)
+    mixing_interpret: bool = True    # Pallas interpret mode (CPU) when
+    #                                  mixing="circulant_pallas"; flip to
+    #                                  False on real TPU.  (When "auto"
+    #                                  upgrades via kernels.ops
+    #                                  .use_pallas, *that* call's
+    #                                  interpret flag governs instead.)
 
     def comm_vectors_per_round(self) -> dict[str, int]:
         """Per-agent vector exchanges per outer round (Appendix S1)."""
@@ -56,7 +67,7 @@ class DAGMResult:
     metrics: dict[str, Array]    # per-outer-iteration traces, length K
 
 
-def hypergrad_estimate(prob: BilevelProblem, W: Array, cfg: DAGMConfig,
+def hypergrad_estimate(prob: BilevelProblem, W, cfg: DAGMConfig,
                        x: Array, y: Array) -> Array:
     """∇̂F(x, y) of Eq. (17b) with the configured DIHGP backend."""
     if cfg.dihgp == "dense":
@@ -76,7 +87,7 @@ def hypergrad_estimate(prob: BilevelProblem, W: Array, cfg: DAGMConfig,
         + cfg.beta * prob.cross_xy_g_times(x, y, h)
 
 
-def default_metrics(prob: BilevelProblem, W: Array, x: Array, y: Array
+def default_metrics(prob: BilevelProblem, W, x: Array, y: Array
                     ) -> dict[str, Array]:
     m = {
         "outer_obj": jnp.mean(prob.f_stacked(x, y)),
@@ -90,7 +101,7 @@ def default_metrics(prob: BilevelProblem, W: Array, x: Array, y: Array
     return m
 
 
-def dagm_outer_step(prob: BilevelProblem, W: Array, cfg: DAGMConfig,
+def dagm_outer_step(prob: BilevelProblem, W, cfg: DAGMConfig,
                     x: Array, y: Array,
                     metrics_fn: Callable | None = None):
     """One full outer iteration of Algorithm 2 (lines 3–13)."""
@@ -100,7 +111,9 @@ def dagm_outer_step(prob: BilevelProblem, W: Array, cfg: DAGMConfig,
 
     d = hypergrad_estimate(prob, W, cfg, x, y_tilde)           # lines 10–12
     x_next = x - cfg.alpha * d                                 # line 13
-    metrics = (metrics_fn or default_metrics)(prob, W, x, y_tilde)
+    # metrics callbacks keep the pre-MixingOp contract: a raw W array
+    metrics = (metrics_fn or default_metrics)(prob, as_matrix(W), x,
+                                              y_tilde)
     metrics["hypergrad_est_norm_sq"] = jnp.sum(d ** 2)
     return x_next, y_tilde, metrics
 
@@ -109,8 +122,12 @@ def dagm_run(prob: BilevelProblem, net: Network, cfg: DAGMConfig,
              x0: Array | None = None, y0: Array | None = None,
              metrics_fn: Callable | None = None, seed: int = 0
              ) -> DAGMResult:
-    """Run K outer iterations of Algorithm 2 (reference tier)."""
-    W = net.W_jnp()
+    """Run K outer iterations of Algorithm 2 (reference tier).
+
+    `cfg.mixing` picks the MixingOp backend once, here; every W·y /
+    (I−W)·y below (inner DGD, DIHGP, outer step, metrics) runs on it."""
+    W = make_mixing_op(net, backend=cfg.mixing,
+                       interpret=cfg.mixing_interpret)
     key = jax.random.PRNGKey(seed)
     if x0 is None:   # paper's analysis assumes x_0 = 0
         x0 = jnp.zeros((prob.n, prob.d1), jnp.float32)

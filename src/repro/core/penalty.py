@@ -6,17 +6,20 @@ For stacked variables x ∈ R^{n×d1}, y ∈ R^{n×d2} and mixing matrix W:
     G(x, y)      = (1/2β) yᵀ(I−W)y + 1ᵀ g(x, y)               (4b)
 
 with the extended matrices Ẃ = W⊗I_{d1}, W = W⊗I_{d2} applied to the
-stacked (n, d) layout via `mixing.mix_apply`.  This module provides the
-penalized objectives, their gradients (Lemma 4 / Eq. (6)), the surrogate
-hyper-gradient of Eq. (7), and the exact penalized Hessian H of Eq. (8)
-(reference tier, materialized) used to unit-test DIHGP.
+stacked (n, d) layout via `mixing.mix_apply` / `mixing.laplacian_apply`
+— which accept either a raw W array or a `mixing.MixingOp`, so every
+function here runs on whichever mixing backend the caller configured
+(dense matmul, O(n·k·d) circulant, or the Pallas kernels).  This module
+provides the penalized objectives, their gradients (Lemma 4 / Eq. (6)),
+the surrogate hyper-gradient of Eq. (7), and the exact penalized Hessian
+H of Eq. (8) (reference tier, materialized) used to unit-test DIHGP.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from .mixing import laplacian_apply, mix_apply
+from .mixing import as_matrix, laplacian_apply, mix_apply
 from .problems import BilevelProblem
 
 Array = jnp.ndarray
@@ -58,7 +61,8 @@ def penalized_hessian(prob: BilevelProblem, W: Array, beta: float,
 
     Reference tier only (materializes nd2 × nd2)."""
     n, d2 = y.shape
-    Wl = jnp.kron(jnp.eye(n, dtype=y.dtype) - W.astype(y.dtype),
+    Wm = as_matrix(W)
+    Wl = jnp.kron(jnp.eye(n, dtype=y.dtype) - Wm.astype(y.dtype),
                   jnp.eye(d2, dtype=y.dtype))
     Hg = prob.hess_yy_g(x, y)                      # (n, d2, d2)
     blocks = jax.scipy.linalg.block_diag(*[Hg[i] for i in range(n)])

@@ -26,8 +26,8 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
 
+from . import shard_map
 from .collectives import (RingWeights, ring_laplacian, ring_mix, taxpy,
                           tdot, tnorm, tscale, tsub, tadd)
 

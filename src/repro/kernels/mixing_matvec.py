@@ -1,18 +1,44 @@
-"""Pallas TPU kernel for the paper's hot communication/compute primitive:
-the banded circulant mixing mat-vec  (I − W)·Y  on stacked per-agent
-state Y ∈ R^{n×d}  (DAGM inner step Eq. 16, DIHGP B·h of Eq. 14).
+"""Pallas TPU kernels for the paper's hot communication/compute
+primitive: banded-circulant mixing mat-vecs on stacked per-agent state
+Y ∈ R^{n×d} — W·Y, (I−W)·Y (DAGM inner step Eq. 16, penalty gradients)
+and the fused DIHGP Neumann step h ← (D̃h − Hh − p)/D̃ (Eq. 14).
 
-W is the ring/circulant Metropolis matrix (w_self on the diagonal,
-w_edge at offsets ±1), so each output tile needs its own tile plus one
-row of halo from each neighboring agent tile — the same neighbor-only
-data movement the algorithm performs across chips, here expressed across
-VMEM tiles within a chip.
+For the shift-invariant graphs the paper benchmarks (ring, 2k-regular
+circulant), row i of W is a cyclic shift of row 0: w_self on the
+diagonal and weight c_o at offset o, so
 
-Tiling: grid (n/bn, d/bd); each program reads three (bn, bd) agent tiles
-(previous / current / next, wraparound index_map) and writes one.
-Pure VPU (elementwise FMA) — deliberately memory-bound; the roofline
-check in tests asserts bytes-moved ≈ 4×nd×dtype (3 reads + 1 write,
-halo-amortized).
+    (W·Y)_i = w_self·Y_i + Σ_o c_o · Y_{(i+o) mod n}
+
+is O(n·k·d) neighbor-only work — the same data movement the algorithm
+performs across chips, here expressed inside a chip.
+
+Layout choice: the agent axis n is tiny (8–4096) next to the feature
+axis d (10³–10⁸ once model parameters are raveled), so the kernels tile
+the *feature* axis — grid (d/bd,) — and keep the full agent axis of one
+column stripe resident in VMEM ((n, bd)·4B ≤ 2 MB at n = 4096).  Each
+program reads its input stripe exactly once (the previous ring-only
+kernel passed Y as three operands, reading it 3×) and applies the
+offsets as in-register cyclic shifts (two static sublane slices + a
+concatenate — no gather, no MXU).  Accumulation is f32 regardless of
+input dtype (f32/bf16 supported).
+
+Pure VPU, deliberately memory-bound: bytes moved ≈ 2·n·d·sizeof(dtype)
+(1 read + 1 write) against (2k+1)·n·d FMAs, versus the dense-matmul
+lowering's O(n²·d) MXU work.
+
+Entry points
+------------
+* `circulant_mix_matvec`    — W·Y or (I−W)·Y for arbitrary offset sets.
+* `circulant_neumann_step`  — one fused DIHGP iteration
+                              h⁺ = (D̃h − (I−W)h − β·Hvp − p)/D̃,
+                              one traversal instead of the three that
+                              `dihgp_matrix_free` otherwise spends per
+                              iteration (laplacian, axpy, rescale).
+* `ring_laplacian_matvec`   — backward-compatible ring wrapper.
+
+Dispatch policy (which backend runs when) lives in
+`repro.core.mixing.MixingOp`; these functions assume tile-friendly
+shapes and raise on anything else.
 """
 from __future__ import annotations
 
@@ -23,13 +49,108 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _kernel(prev_ref, cur_ref, nxt_ref, out_ref, *, w_self: float,
-            w_edge: float):
-    cur = cur_ref[...]
-    up = jnp.concatenate([prev_ref[-1:, :], cur[:-1, :]], axis=0)
-    down = jnp.concatenate([cur[1:, :], nxt_ref[:1, :]], axis=0)
-    mixed = w_self * cur + w_edge * (up + down)
-    out_ref[...] = cur - mixed
+def _shift(blk: jnp.ndarray, o: int) -> jnp.ndarray:
+    """blk rows cyclically shifted so row i holds input row (i+o) mod n.
+
+    Static slices + concatenate (≡ jnp.roll(blk, -o, axis=0)): lowers to
+    sublane copies on TPU and plain lax.slice in interpret mode.
+    """
+    n = blk.shape[0]
+    o = o % n
+    if o == 0:
+        return blk
+    return jnp.concatenate([blk[o:], blk[:o]], axis=0)
+
+
+def _mix_body(y_ref, out_ref, *, w_self, offsets, weights, laplacian):
+    y = y_ref[...]
+    acc = y.astype(jnp.float32) * w_self
+    for o, c in zip(offsets, weights):
+        acc = acc + c * _shift(y, o).astype(jnp.float32)
+    if laplacian:
+        acc = y.astype(jnp.float32) - acc
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("w_self", "offsets",
+                                             "weights", "laplacian",
+                                             "bd", "interpret"))
+def circulant_mix_matvec(y: jnp.ndarray, *, w_self: float,
+                         offsets: tuple[int, ...],
+                         weights: tuple[float, ...],
+                         laplacian: bool = False, bd: int = 128,
+                         interpret: bool = True) -> jnp.ndarray:
+    """W·Y (or (I−W)·Y) for circulant W; y: (n, d) with d % bd == 0.
+
+    `offsets`/`weights`: W[i, (i+o) mod n] = c_o (offsets need not be
+    symmetric; 0 < o < n).  w_self = W[i, i].
+    """
+    n, d = y.shape
+    if d % bd:
+        raise ValueError(f"d={d} not a multiple of bd={bd}")
+    grid_spec = pl.GridSpec(
+        grid=(d // bd,),
+        in_specs=[pl.BlockSpec((n, bd), lambda j: (0, j))],
+        out_specs=pl.BlockSpec((n, bd), lambda j: (0, j)),
+    )
+    body = functools.partial(_mix_body, w_self=float(w_self),
+                             offsets=tuple(offsets),
+                             weights=tuple(float(c) for c in weights),
+                             laplacian=laplacian)
+    return pl.pallas_call(body, grid_spec=grid_spec,
+                          out_shape=jax.ShapeDtypeStruct((n, d), y.dtype),
+                          interpret=interpret)(y)
+
+
+def _neumann_body(h_ref, hvp_ref, p_ref, dsc_ref, out_ref, *, w_self,
+                  offsets, weights, beta):
+    hy = h_ref[...]
+    h = hy.astype(jnp.float32)
+    mix = h * w_self
+    for o, c in zip(offsets, weights):
+        mix = mix + c * _shift(hy, o).astype(jnp.float32)
+    dsc = dsc_ref[...].astype(jnp.float32)          # (n, 1) broadcasts
+    num = dsc * h - (h - mix) - beta * hvp_ref[...].astype(jnp.float32) \
+        - p_ref[...].astype(jnp.float32)
+    out_ref[...] = (num / dsc).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("w_self", "offsets",
+                                             "weights", "beta", "bd",
+                                             "interpret"))
+def circulant_neumann_step(h: jnp.ndarray, hvp_h: jnp.ndarray,
+                           p: jnp.ndarray, d_scalar: jnp.ndarray, *,
+                           w_self: float, offsets: tuple[int, ...],
+                           weights: tuple[float, ...], beta: float,
+                           bd: int = 128,
+                           interpret: bool = True) -> jnp.ndarray:
+    """One DIHGP Neumann iteration (Eq. 14), fused:
+
+        h⁺ = (D̃h − (I−W)h − β·hvp_h − p) / D̃
+
+    h, hvp_h, p: (n, d); d_scalar: (n, 1) per-agent D̃ diagonals.
+    W·h is computed in-kernel from the circulant weights, so the whole
+    update is a single pass over the operands.
+    """
+    n, d = h.shape
+    if d % bd:
+        raise ValueError(f"d={d} not a multiple of bd={bd}")
+    if d_scalar.shape != (n, 1):
+        raise ValueError(f"d_scalar must be (n, 1), got {d_scalar.shape}")
+    stripe = pl.BlockSpec((n, bd), lambda j: (0, j))
+    grid_spec = pl.GridSpec(
+        grid=(d // bd,),
+        in_specs=[stripe, stripe, stripe,
+                  pl.BlockSpec((n, 1), lambda j: (0, 0))],
+        out_specs=stripe,
+    )
+    body = functools.partial(_neumann_body, w_self=float(w_self),
+                             offsets=tuple(offsets),
+                             weights=tuple(float(c) for c in weights),
+                             beta=float(beta))
+    return pl.pallas_call(body, grid_spec=grid_spec,
+                          out_shape=jax.ShapeDtypeStruct((n, d), h.dtype),
+                          interpret=interpret)(h, hvp_h, p, d_scalar)
 
 
 @functools.partial(jax.jit, static_argnames=("w_self", "w_edge", "bn",
@@ -37,23 +158,11 @@ def _kernel(prev_ref, cur_ref, nxt_ref, out_ref, *, w_self: float,
 def ring_laplacian_matvec(y: jnp.ndarray, *, w_self: float, w_edge: float,
                           bn: int = 8, bd: int = 128,
                           interpret: bool = True) -> jnp.ndarray:
-    """(I − W)·Y for ring W; y: (n, d) with n % bn == 0, d % bd == 0."""
+    """(I − W)·Y for ring W (compat wrapper over the circulant kernel);
+    y: (n, d) with d % bd == 0.  `bn` is accepted for API compatibility
+    but ignored: the column-stripe kernel no longer tiles the agent
+    axis, so any n works."""
     n, d = y.shape
-    assert n % bn == 0 and d % bd == 0, (n, d, bn, bd)
-    gn, gd = n // bn, d // bd
-
-    grid_spec = pl.GridSpec(
-        grid=(gn, gd),
-        in_specs=[
-            pl.BlockSpec((bn, bd), lambda i, j: ((i - 1) % gn, j)),
-            pl.BlockSpec((bn, bd), lambda i, j: (i, j)),
-            pl.BlockSpec((bn, bd), lambda i, j: ((i + 1) % gn, j)),
-        ],
-        out_specs=pl.BlockSpec((bn, bd), lambda i, j: (i, j)),
-    )
-    return pl.pallas_call(
-        functools.partial(_kernel, w_self=w_self, w_edge=w_edge),
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((n, d), y.dtype),
-        interpret=interpret,
-    )(y, y, y)
+    return circulant_mix_matvec(y, w_self=w_self, offsets=(1, n - 1),
+                                weights=(w_edge, w_edge), laplacian=True,
+                                bd=bd, interpret=interpret)

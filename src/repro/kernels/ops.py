@@ -4,6 +4,10 @@
 (CPU default / dry-run path) to the Pallas kernels (TPU target;
 `interpret=True` executes them on CPU for validation).  Tests sweep
 shapes/dtypes through both and assert allclose.
+
+`core.mixing.MixingOp` consults `pallas_enabled()` so that flipping this
+one switch upgrades every circulant mixing mat-vec in the DAGM hot loop
+to the Pallas backend as well.
 """
 from __future__ import annotations
 
@@ -24,10 +28,19 @@ def use_pallas(enabled: bool, interpret: bool = True) -> None:
     _INTERPRET = interpret
 
 
+def pallas_enabled() -> tuple[bool, bool]:
+    """(enabled, interpret) — read by MixingOp's "auto" backend."""
+    return _USE_PALLAS, _INTERPRET
+
+
 def ring_laplacian(y, w_self: float, w_edge: float):
     """(I−W)Y for ring W — DAGM/DIHGP mixing primitive; y (n, d)."""
-    if _USE_PALLAS and y.ndim == 2 and y.shape[0] % 8 == 0 \
-            and y.shape[1] % 128 == 0:
+    # dtype-aware sublane minimum — must agree with MixingOp._pallas_ok
+    # (bf16 stripes need 16 sublanes on TPU, f32 needs 8)
+    sub = {jnp.dtype(jnp.float32): 8, jnp.dtype(jnp.bfloat16): 16}.get(
+        jnp.dtype(y.dtype))
+    if _USE_PALLAS and sub is not None and y.ndim == 2 \
+            and y.shape[0] % sub == 0 and y.shape[1] % 128 == 0:
         return ring_laplacian_matvec(y, w_self=w_self, w_edge=w_edge,
                                      interpret=_INTERPRET)
     return ref.ring_laplacian_ref(y, w_self, w_edge)

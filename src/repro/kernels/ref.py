@@ -20,6 +20,18 @@ def ring_laplacian_ref(y: jnp.ndarray, w_self: float, w_edge: float,
     return out
 
 
+def circulant_mix_ref(y: jnp.ndarray, w_self: float, offsets, weights,
+                      laplacian: bool = False) -> jnp.ndarray:
+    """W·Y (or (I−W)·Y) for circulant W with W[i,(i+o)%n] = c_o; y (n,d).
+
+    O(n·k·d) jnp oracle for the Pallas circulant kernel — also the XLA
+    execution path `core.mixing.MixingOp` uses off-TPU."""
+    acc = w_self * y
+    for o, c in zip(offsets, weights):
+        acc = acc + c * jnp.roll(y, -int(o), axis=0)
+    return y - acc if laplacian else acc
+
+
 def attention_ref(q, k, v, *, causal: bool = True,
                   window: int = 0) -> jnp.ndarray:
     """Plain softmax attention; q/k/v: (B, S, H, hd) (same H)."""

@@ -2,7 +2,12 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (pip install -r requirements.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import mixing as mx
 from repro.core.penalty import consensus_error

@@ -10,6 +10,9 @@ import subprocess
 import sys
 
 import numpy as np
+import pytest
+
+pytestmark = pytest.mark.slow       # subprocess-spawning system tests
 
 SCRIPT = r"""
 import os
@@ -19,6 +22,7 @@ sys.path.insert(0, {src!r})
 import jax, jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
+from repro.distributed import shard_map
 
 from repro.core import quadratic_bilevel, DAGMConfig, dagm_run
 from repro.core.mixing import mix_apply
@@ -36,7 +40,7 @@ z = jax.random.normal(jax.random.PRNGKey(0), (n, 5))
 def local(zz):
     return jax.tree.map(lambda a: a[None], ring_mix(
         jax.tree.map(lambda a: a[0], zz), "data", w))
-mixed = jax.jit(jax.shard_map(local, mesh=mesh, in_specs=P("data"),
+mixed = jax.jit(shard_map(local, mesh=mesh, in_specs=P("data"),
                               out_specs=P("data"), check_vma=False))(z)
 dense = mix_apply(net.W_jnp(), z)
 err1 = float(jnp.abs(mixed - dense).max())
@@ -88,6 +92,7 @@ sys.path.insert(0, {src!r})
 import jax, jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
+from repro.distributed import shard_map
 
 from repro.core import quadratic_bilevel
 from repro.distributed.collectives import RingWeights, ring_mix
@@ -103,10 +108,10 @@ z = jax.random.normal(jax.random.PRNGKey(0), (n, 64))
 def local(zz, cd):
     return jax.tree.map(lambda a: a[None], ring_mix(
         jax.tree.map(lambda a: a[0], zz), "data", w, cd))
-f32 = jax.jit(jax.shard_map(lambda zz: local(zz, None), mesh=mesh,
+f32 = jax.jit(shard_map(lambda zz: local(zz, None), mesh=mesh,
                             in_specs=P("data"), out_specs=P("data"),
                             check_vma=False))(z)
-b16 = jax.jit(jax.shard_map(lambda zz: local(zz, jnp.bfloat16), mesh=mesh,
+b16 = jax.jit(shard_map(lambda zz: local(zz, jnp.bfloat16), mesh=mesh,
                             in_specs=P("data"), out_specs=P("data"),
                             check_vma=False))(z)
 print("BF16_ERR", float(jnp.abs(f32 - b16).max()))
@@ -225,6 +230,7 @@ import jax, jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 from repro.core.mixing import mix_apply
+from repro.distributed import shard_map
 from repro.distributed.collectives import RingWeights, ring_mix
 
 mesh = jax.make_mesh((2, 4), ("pod", "data"))
@@ -233,7 +239,7 @@ z = jax.random.normal(jax.random.PRNGKey(0), (8, 5))
 def local(zz):
     return jax.tree.map(lambda a: a[None], ring_mix(
         jax.tree.map(lambda a: a[0], zz), ("pod", "data"), w))
-mixed = jax.jit(jax.shard_map(local, mesh=mesh,
+mixed = jax.jit(shard_map(local, mesh=mesh,
                               in_specs=P(("pod", "data")),
                               out_specs=P(("pod", "data")),
                               check_vma=False))(z)

@@ -9,11 +9,13 @@
 import numpy as np
 import jax
 import jax.numpy as jnp
+import pytest
 
 from repro.core import (DAGMConfig, dagm_run, dgtbo_run, make_network,
                         quadratic_bilevel)
 
 
+@pytest.mark.slow
 def test_paper_headline_end_to_end():
     """DAGM matches the matrix-shipping baseline's accuracy with far
     less communication — the paper's core claim, end to end."""
@@ -34,6 +36,7 @@ def test_paper_headline_end_to_end():
     assert dagm_floats < dgtbo.comm_floats_per_round  # cheaper rounds
 
 
+@pytest.mark.slow
 def test_train_launcher_end_to_end(tmp_path):
     from repro.launch.train import main
     rc = main(["--arch", "qwen3-4b", "--smoke", "--steps", "8",
