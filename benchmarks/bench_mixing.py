@@ -7,15 +7,24 @@ Compares, per (n agents, d features, k-hop circulant topology):
   * pallas   — the banded-circulant Pallas kernel (interpret mode off
                TPU, so its wall-clock here validates, not measures),
 
+and, per irregular (Erdős–Rényi) topology:
+
+  * dense         — the same O(n²·d) matmul fallback,
+  * sparse_gather — MixingOp's O((nnz+n)·d) padded row-gather XLA path,
+  * sparse Pallas — the per-row scalar-prefetched gather kernel
+                    (interpret-mode validation timing),
+
 plus the fused vs unfused DIHGP Neumann step.  Each row reports the
 FLOPs of both formulations; `speedup_vs_dense` is measured wall-clock,
-`work_ratio` ( = dense FLOPs / sparse FLOPs = n / (2k+1) ) is the
-FLOPs-proportional speedup the backend realizes on hardware where both
-paths run at the same arithmetic intensity.
+`work_ratio` (= dense FLOPs / sparse FLOPs; n/(2k+1) circulant,
+n²/(nnz+n) irregular) is the FLOPs-proportional speedup the backend
+realizes on hardware where both paths run at the same arithmetic
+intensity.
 
 Also dumps the rows as JSON to benchmarks/results/bench_mixing.json
 (same record schema as the CSV contract: name / us_per_call / derived)
-so the BENCH trajectory captures the speedup.
+so the BENCH trajectory captures the speedup.  The "smoke" budget is
+the scripts/ci.sh tier-2 invocation: tiny cases, no JSON rewrite.
 """
 from __future__ import annotations
 
@@ -27,7 +36,9 @@ import jax.numpy as jnp
 
 from repro.core import make_mixing_op, make_network
 from repro.core.mixing import circulant_structure, fused_neumann_step
-from repro.kernels.mixing_matvec import circulant_mix_matvec
+from repro.kernels.mixing_matvec import (circulant_mix_matvec,
+                                         sparse_mix_matvec)
+from repro.topology import sparse_structure
 
 from .common import Row, timed
 
@@ -94,6 +105,54 @@ def _bench_case(n: int, d: int, hops: int, iters: int,
     return rows
 
 
+def _bench_er_case(n: int, d: int, r: float, iters: int,
+                   with_pallas: bool, seed: int = 0) -> list[Row]:
+    """Irregular-topology rows: dense vs the CSR gather backend on an
+    Erdős–Rényi graph (the paper's Figs. 2–3 run r = 0.5; low r is where
+    the O((nnz+n)·d) path pulls away from the matmul)."""
+    net = make_network("erdos_renyi", n, r=r, seed=seed)
+    sp = sparse_structure(net.W)
+    W = net.W_jnp()
+    y = jax.random.normal(jax.random.PRNGKey(n + d), (n, d), jnp.float32)
+    fl_dense = 2.0 * n * n * d
+    tag = f"mixing/er_n{n}_d{d}_r{r}"
+
+    dense = jax.jit(lambda z: z - W.astype(z.dtype) @ z)
+    op = make_mixing_op(net, backend="sparse_gather")
+    # report the FLOPs of the formulation the op actually executes:
+    # padded row-gather loop does n·k_max MACs per feature, CSR
+    # segment-sum nnz (both + n for the diagonal)
+    macs = (n * sp.k if op._sp_use_padded else sp.nnz) + n
+    fl_sparse = 2.0 * macs * d
+    sparse = jax.jit(op.laplacian)
+    us_dense, us_sparse = _paired_best(dense, sparse, y, iters)
+    rows = [Row(f"{tag}/dense", us_dense,
+                {"flops": fl_dense, "work_ratio": 1.0,
+                 "speedup_vs_dense": 1.0}),
+            Row(f"{tag}/sparse_gather", us_sparse,
+                {"flops": fl_sparse, "k_max": sp.k,
+                 "mean_degree": round(sp.nnz / n, 1),
+                 "formulation": ("padded_gather" if op._sp_use_padded
+                                 else "csr_segment_sum"),
+                 "work_ratio": round(n * n / macs, 2),
+                 "speedup_vs_dense": round(us_dense / us_sparse, 3)})]
+
+    if with_pallas and d % 128 == 0 and n % 8 == 0:
+        wself = jnp.asarray(sp.w_self)
+        idx = jnp.asarray(sp.neighbors)
+        wts = jnp.asarray(sp.weights)
+
+        def pk(z):
+            return sparse_mix_matvec(z, wself, idx, wts, laplacian=True,
+                                     interpret=True)
+        _, us_pk = timed(pk, y, iters=max(1, iters // 20), warmup=1)
+        rows.append(Row(f"{tag}/sparse_pallas_interpret", us_pk,
+                        {"flops": 2.0 * (n * sp.k + n) * d,
+                         "work_ratio": round(n * n / (n * sp.k + n), 2),
+                         "note": "interpret-mode validation timing"}))
+    return rows
+
+
 def _bench_fused_neumann(n: int, d: int, iters: int) -> list[Row]:
     net = make_network("ring", n)
     W = net.W_jnp()
@@ -121,23 +180,38 @@ def _bench_fused_neumann(n: int, d: int, iters: int) -> list[Row]:
 
 
 def run(budget: str = "small") -> list[Row]:
+    write_json = True
     if budget == "full":
         cases = [(n, d, hops) for n in (8, 64, 256)
                  for d in (1024, 4096, 16384) for hops in (1, 2)]
+        er_cases = [(64, 1024, 0.1), (256, 1024, 0.05), (256, 2048, 0.05),
+                    (256, 1024, 0.1), (256, 4096, 0.05)]
         iters, with_pallas = 100, True
+    elif budget == "smoke":
+        # scripts/ci.sh tier-2 smoke: exercise every backend row once,
+        # keep the checked-in JSON (measured on a quiet box) untouched
+        cases = [(8, 512, 1)]
+        er_cases = [(16, 512, 0.3)]
+        iters, with_pallas, write_json = 5, True, False
     else:
         cases = [(8, 4096, 1), (64, 4096, 1), (64, 4096, 2),
                  (256, 4096, 1)]
+        er_cases = [(256, 1024, 0.05), (256, 2048, 0.05),
+                    (256, 1024, 0.1)]
         iters, with_pallas = 100, True
     rows = []
     for n, d, hops in cases:
         rows.extend(_bench_case(n, d, hops, iters, with_pallas))
+    for n, d, r in er_cases:
+        rows.extend(_bench_er_case(n, d, r, iters, with_pallas))
     rows.extend(_bench_fused_neumann(64, 4096, iters))
 
-    os.makedirs(os.path.dirname(RESULTS), exist_ok=True)
-    with open(RESULTS, "w") as f:
-        json.dump([{"name": r.name, "us_per_call": round(r.us_per_call, 1),
-                    "derived": r.derived} for r in rows], f, indent=1)
+    if write_json:
+        os.makedirs(os.path.dirname(RESULTS), exist_ok=True)
+        with open(RESULTS, "w") as f:
+            json.dump([{"name": r.name,
+                        "us_per_call": round(r.us_per_call, 1),
+                        "derived": r.derived} for r in rows], f, indent=1)
     return rows
 
 

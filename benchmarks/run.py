@@ -29,7 +29,7 @@ MODULES = {
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--budget", default="small",
-                    choices=["small", "full"])
+                    choices=["smoke", "small", "full"])
     ap.add_argument("--only", default=None,
                     help="comma-separated module names")
     args = ap.parse_args(argv)
@@ -44,9 +44,15 @@ def main(argv=None) -> int:
                   f"{' '.join(MODULES)})")
             failures += 1
             continue
+        # only the mixing module has a distinct "smoke" tier; the others
+        # branch small-vs-everything-else, so smoke must map to small
+        # there or the cheapest request would run the full budget
+        budget = args.budget
+        if budget == "smoke" and name != "mixing":
+            budget = "small"
         t0 = time.time()
         try:
-            rows = mod.run(args.budget)
+            rows = mod.run(budget)
         except Exception as e:  # noqa: BLE001
             print(f"{name}/ERROR,0,{type(e).__name__}: {e}")
             failures += 1

@@ -24,3 +24,9 @@ run_tier "not slow" "$@"
 
 echo "=== tier 2: slow suite (-m slow) ==="
 run_tier "slow" "$@"
+
+echo "=== tier 2: bench smoke (mixing backends) ==="
+# one tiny pass over every mixing-backend row (dense / circulant /
+# sparse_gather / Pallas-interpret); does not rewrite the checked-in
+# benchmarks/results JSON
+python -m benchmarks.run --only mixing --budget smoke

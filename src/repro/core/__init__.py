@@ -1,14 +1,15 @@
 """Core DAGM library: the paper's contribution as composable JAX modules.
 
-Layers: mixing (network/W), problems (bilevel zoo), penalty (Lemma 3/4),
-dihgp (Algorithm 1), dagm (Algorithm 2), baselines (DGBO/DGTBO/FedNest/
-MA-DBO).
+Layers: mixing (shim over repro.topology: network/W + MixingOp),
+problems (bilevel zoo), penalty (Lemma 3/4), dihgp (Algorithm 1),
+dagm (Algorithm 2), baselines (DGBO/DGTBO/FedNest/MA-DBO).
 """
 from .mixing import (Network, make_network, mixing_rate, spectral_gap,
                      neumann_rho, metropolis_weights, max_degree_weights,
                      mix_apply, laplacian_apply, check_assumption_a,
                      MixingOp, make_mixing_op, circulant_structure,
-                     fused_neumann_step, as_matrix)
+                     sparse_structure, SparseStructure,
+                     fused_neumann_step, as_matrix, resolve_mixing_dtype)
 from .problems import (BilevelProblem, quadratic_bilevel, ho_regression,
                        ho_logistic, ho_svm, ho_softmax,
                        hyper_representation, fair_loss_tuning)

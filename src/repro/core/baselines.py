@@ -26,8 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from .dagm import default_metrics
-from .mixing import (Network, as_matrix, laplacian_apply,
-                     make_mixing_op, mix_apply)
+from .mixing import (Network, laplacian_apply, make_mixing_op, mix_apply)
 from .penalty import inner_dgd_step
 from .problems import BilevelProblem
 
@@ -59,11 +58,13 @@ def dgbo_run(prob: BilevelProblem, net: Network, *, alpha: float,
              beta: float, K: int, M: int = 10, b: int = 3,
              x0: Array | None = None, y0: Array | None = None,
              seed: int = 0, mixing: str = "auto",
-             mixing_interpret: bool = True) -> BaselineResult:
+             mixing_interpret: bool = True,
+             mixing_dtype: str = "f32") -> BaselineResult:
     """Deterministic DGBO: gossip consensus on x, y, grads, Jacobians and
     a gossip+Neumann estimate of the *global mean* Hessian (d2×d2 matrix
     communication — the expensive part the paper improves on)."""
-    W = make_mixing_op(net, backend=mixing, interpret=mixing_interpret)
+    W = make_mixing_op(net, backend=mixing, interpret=mixing_interpret,
+                       dtype=mixing_dtype)
     n, d1, d2 = prob.n, prob.d1, prob.d2
     if x0 is None:
         x0 = jnp.zeros((n, d1), jnp.float32)
@@ -92,7 +93,7 @@ def dgbo_run(prob: BilevelProblem, net: Network, *, alpha: float,
         # hyper-gradient + gossip consensus step on x (Step 4)
         d = prob.grad_x_f(x, y1) + prob.cross_xy_g_times(x, y1, h)
         x1 = mix_apply(W, x) - alpha * d
-        return (x1, y1), default_metrics(prob, as_matrix(W), x, y1)
+        return (x1, y1), default_metrics(prob, x, y1)
 
     (x, y), metrics = _run_scan(body, (x0, y0), K)
     # per-agent floats per round: x,y,grad-est vectors + b Hessian matrices
@@ -110,10 +111,12 @@ def dgtbo_run(prob: BilevelProblem, net: Network, *, alpha: float,
               beta: float, K: int, M: int = 10, N: int = 5,
               x0: Array | None = None, y0: Array | None = None,
               seed: int = 0, mixing: str = "auto",
-              mixing_interpret: bool = True) -> BaselineResult:
+              mixing_interpret: bool = True,
+              mixing_dtype: str = "f32") -> BaselineResult:
     """Deterministic DGTBO: JHIP solves Z ≈ −J H^{-1} (d1×d2) by N
     decentralized Richardson iterations, each gossiping the full Z matrix."""
-    W = make_mixing_op(net, backend=mixing, interpret=mixing_interpret)
+    W = make_mixing_op(net, backend=mixing, interpret=mixing_interpret,
+                       dtype=mixing_dtype)
     n, d1, d2 = prob.n, prob.d1, prob.d2
     if x0 is None:
         x0 = jnp.zeros((n, d1), jnp.float32)
@@ -149,7 +152,7 @@ def dgtbo_run(prob: BilevelProblem, net: Network, *, alpha: float,
         p = prob.grad_y_f(x, y1)
         d = prob.grad_x_f(x, y1) - jnp.einsum("nij,nj->ni", Z, p)
         x1 = mix_apply(W, x) - alpha * d
-        return (x1, y1), default_metrics(prob, as_matrix(W), x, y1)
+        return (x1, y1), default_metrics(prob, x, y1)
 
     (x, y), metrics = _run_scan(body, (x0, y0), K)
     # Appendix S1: K n (M d2 + d1 + n N d1 d2) / n per agent per round:
@@ -199,9 +202,7 @@ def fednest_run(prob: BilevelProblem, net: Network | None, *, alpha: float,
         d = jnp.mean(prob.grad_x_f(xs, ys), 0) \
             + jnp.mean(prob.cross_xy_g_times(xs, ys, stacked(h)), 0)
         x1 = x - alpha * d
-        W_eye = jnp.eye(n, dtype=jnp.float32)  # metrics helper (no mixing)
-        m = default_metrics(prob, W_eye, stacked(x), ys)
-        return (x1, y1), m
+        return (x1, y1), default_metrics(prob, stacked(x), ys)
 
     (x, y), metrics = _run_scan(body, (xg, yg), K)
     # per client per round: M+U+2 vector up/downs through the center
@@ -220,9 +221,11 @@ def madbo_run(prob: BilevelProblem, net: Network, *, alpha: float,
               momentum: float = 0.9, x0: Array | None = None,
               y0: Array | None = None, seed: int = 0,
               mixing: str = "auto",
-              mixing_interpret: bool = True) -> BaselineResult:
+              mixing_interpret: bool = True,
+              mixing_dtype: str = "f32") -> BaselineResult:
     from .dihgp import dihgp_dense
-    W = make_mixing_op(net, backend=mixing, interpret=mixing_interpret)
+    W = make_mixing_op(net, backend=mixing, interpret=mixing_interpret,
+                       dtype=mixing_dtype)
     n, d1, d2 = prob.n, prob.d1, prob.d2
     if x0 is None:
         x0 = jnp.zeros((n, d1), jnp.float32)
@@ -241,7 +244,7 @@ def madbo_run(prob: BilevelProblem, net: Network, *, alpha: float,
         v1 = momentum * v + (1.0 - momentum) * d
         v1 = mix_apply(W, v1)                      # gossip the tracker
         x1 = x - alpha * v1
-        return (x1, y1, v1), default_metrics(prob, as_matrix(W), x, y1)
+        return (x1, y1, v1), default_metrics(prob, x, y1)
 
     (x, y, _), metrics = _run_scan(body, (x0, y0, v0), K)
     comm = M * d2 + U * d2 + 2 * d1            # extra d1 for the tracker

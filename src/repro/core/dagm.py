@@ -27,8 +27,7 @@ import jax
 import jax.numpy as jnp
 
 from .dihgp import dihgp_dense, dihgp_matrix_free
-from .mixing import (Network, as_matrix, laplacian_apply, make_mixing_op,
-                     mix_apply)
+from .mixing import (Network, laplacian_apply, make_mixing_op, mix_apply)
 from .penalty import consensus_error, inner_dgd_step
 from .problems import BilevelProblem
 
@@ -45,15 +44,22 @@ class DAGMConfig:
     dihgp: str = "dense"         # "dense" | "matrix_free" | "exact"
     curvature: float | None = None   # fixed λmax bound for matrix_free
     mixing: str = "auto"         # MixingOp backend: "auto" | "dense" |
-    #                              "circulant" | "circulant_pallas" —
-    #                              selects the (I−W)·Y execution path for
-    #                              the whole run (mixing.MixingOp)
+    #                              "circulant[_pallas]" |
+    #                              "sparse_gather[_pallas]" — selects the
+    #                              (I−W)·Y execution path for the whole
+    #                              run (repro.topology.ops.MixingOp)
     mixing_interpret: bool = True    # Pallas interpret mode (CPU) when
-    #                                  mixing="circulant_pallas"; flip to
-    #                                  False on real TPU.  (When "auto"
+    #                                  mixing="*_pallas"; flip to False
+    #                                  on real TPU.  (When "auto"
     #                                  upgrades via kernels.ops
     #                                  .use_pallas, *that* call's
     #                                  interpret flag governs instead.)
+    mixing_dtype: str = "f32"    # "f32" | "bf16": bf16 stores/gossips
+    #                              the mixed state in bfloat16 with f32
+    #                              accumulation — the reference-tier
+    #                              twin of ShardedDAGMConfig.comm_dtype
+    #                              (shared vocabulary:
+    #                              topology.resolve_mixing_dtype)
 
     def comm_vectors_per_round(self) -> dict[str, int]:
         """Per-agent vector exchanges per outer round (Appendix S1)."""
@@ -87,7 +93,7 @@ def hypergrad_estimate(prob: BilevelProblem, W, cfg: DAGMConfig,
         + cfg.beta * prob.cross_xy_g_times(x, y, h)
 
 
-def default_metrics(prob: BilevelProblem, W, x: Array, y: Array
+def default_metrics(prob: BilevelProblem, x: Array, y: Array
                     ) -> dict[str, Array]:
     m = {
         "outer_obj": jnp.mean(prob.f_stacked(x, y)),
@@ -111,9 +117,15 @@ def dagm_outer_step(prob: BilevelProblem, W, cfg: DAGMConfig,
 
     d = hypergrad_estimate(prob, W, cfg, x, y_tilde)           # lines 10–12
     x_next = x - cfg.alpha * d                                 # line 13
-    # metrics callbacks keep the pre-MixingOp contract: a raw W array
-    metrics = (metrics_fn or default_metrics)(prob, as_matrix(W), x,
-                                              y_tilde)
+    # custom metrics callbacks receive W exactly as configured (a
+    # MixingOp under dagm_run, or whatever array the caller passed) —
+    # use mixing.as_matrix(W) inside the callback for raw entries.
+    # default_metrics never read W, so the default path no longer
+    # threads an n×n matrix through the jitted scan at all.
+    if metrics_fn is None:
+        metrics = default_metrics(prob, x, y_tilde)
+    else:
+        metrics = metrics_fn(prob, W, x, y_tilde)
     metrics["hypergrad_est_norm_sq"] = jnp.sum(d ** 2)
     return x_next, y_tilde, metrics
 
@@ -127,7 +139,8 @@ def dagm_run(prob: BilevelProblem, net: Network, cfg: DAGMConfig,
     `cfg.mixing` picks the MixingOp backend once, here; every W·y /
     (I−W)·y below (inner DGD, DIHGP, outer step, metrics) runs on it."""
     W = make_mixing_op(net, backend=cfg.mixing,
-                       interpret=cfg.mixing_interpret)
+                       interpret=cfg.mixing_interpret,
+                       dtype=cfg.mixing_dtype)
     key = jax.random.PRNGKey(seed)
     if x0 is None:   # paper's analysis assumes x_0 = 0
         x0 = jnp.zeros((prob.n, prob.d1), jnp.float32)

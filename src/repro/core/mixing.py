@@ -1,513 +1,34 @@
-"""Mixing matrices, network topologies (paper §3, Assumption A), and the
-topology-aware `MixingOp` execution backend for applying them.
+"""Compatibility shim — the mixing subsystem moved to `repro.topology`.
 
-The decentralized network G = (V, E) is encoded by a nonnegative,
-symmetric, doubly-stochastic mixing matrix W.  This module provides
+Historical home of the network/W code; it outgrew one module when the
+irregular-graph (Erdős–Rényi / star) CSR gather backend landed and now
+lives in the four-layer `repro.topology` package:
 
-  * graph constructors (ring, 2k-regular circulant, Erdős–Rényi with a
-    connectivity ratio r, star, complete),
-  * the two weight schemes used in the paper — Metropolis weights
-    (Example 2 / Eq. 22) and maximum-degree weights (Example 1),
-  * spectral quantities: the mixing rate sigma = ||W - (1/n)11^T||
-    (Eq. 2), theta / Theta self-weight bounds (A4), and rho of Lemma 5,
-  * Assumption-A validation used by tests,
-  * the `MixingOp` backend subsystem (below).
+  * `repro.topology.graphs`    — graph generators + connectivity,
+  * `repro.topology.weights`   — weight schemes + spectral diagnostics,
+  * `repro.topology.structure` — circulant / CSR structure extraction,
+  * `repro.topology.ops`       — `Network`, `MixingOp`, dispatch.
 
-W itself is small (n × n with n = number of agents) and always
-materialized; what is *hot* is applying W ⊗ I to stacked per-agent
-states (n, d) — called M + U + 1 times per DAGM outer round.  The paper's
-communication-efficiency claim rests on this being a neighbor-only
-operation (O(n·k·d) for k neighbors per agent), so the runtime must not
-lower it through a dense O(n²·d) matmul on sparse topologies.
-
-MixingOp backends
------------------
-`MixingOp` (built from a `Network` via `make_mixing_op`) owns that
-dispatch.  Backends:
-
-  * "dense"            — W @ y matmul; correct for arbitrary W (the
-                         Erdős–Rényi / star / complete fallback).
-  * "circulant"        — for shift-invariant W (ring, 2k-regular
-                         circulant; detected by `circulant_structure`):
-                         O(n·k·d) weighted cyclic shifts in plain XLA.
-  * "circulant_pallas" — same math via the banded-circulant Pallas
-                         kernels in `repro.kernels.mixing_matvec`
-                         (single-read column-stripe tiling, f32/bf16);
-                         non-tile-multiple shapes fall back to dense.
-  * "auto"             — circulant when the structure exists *and* is
-                         cheaper than the matmul (2·(k+1) ≤ n), else
-                         dense; upgrades to the Pallas tier when
-                         `repro.kernels.ops.use_pallas(True)` is set.
-
-The sharded runtime is the third tier of the same abstraction: on a real
-mesh W·y is `lax.ppermute` neighbor exchange (repro.distributed
-.collectives.ring_mix), one agent per device, and never sees a dense W.
-
-All algorithm-level callers (`penalty`, `dihgp`, `dagm`, `baselines`)
-go through the free functions `mix_apply` / `laplacian_apply` /
-`fused_neumann_step`, which accept either a raw W array (dense path,
-backward compatible) or a `MixingOp` — so a single `DAGMConfig.mixing`
-choice selects the execution path end-to-end with no call-site
-branching.
+Every name that ever lived here is re-exported below with identical
+semantics, so `from repro.core.mixing import ...` (used by dagm, penalty,
+dihgp, baselines, distributed and the test suite) keeps working; new
+code should import from `repro.topology` directly.
 """
-from __future__ import annotations
-
-import dataclasses
-from typing import Sequence
-
-import numpy as np
-import jax.numpy as jnp
-
-
-# ---------------------------------------------------------------------------
-# Graph constructors (adjacency, no self-loops)
-# ---------------------------------------------------------------------------
-
-def ring_graph(n: int) -> np.ndarray:
-    """Cycle graph C_n; each agent talks to left+right neighbors."""
-    if n < 2:
-        raise ValueError("ring requires n >= 2")
-    adj = np.zeros((n, n), dtype=bool)
-    idx = np.arange(n)
-    adj[idx, (idx + 1) % n] = True
-    adj[(idx + 1) % n, idx] = True
-    return adj
-
-
-def circulant_graph(n: int, offsets: Sequence[int]) -> np.ndarray:
-    """2k-regular circulant: agent i adjacent to i +/- o for o in offsets."""
-    adj = np.zeros((n, n), dtype=bool)
-    idx = np.arange(n)
-    for o in offsets:
-        o = int(o) % n
-        if o == 0:
-            continue
-        adj[idx, (idx + o) % n] = True
-        adj[(idx + o) % n, idx] = True
-    return adj
-
-
-def complete_graph(n: int) -> np.ndarray:
-    adj = np.ones((n, n), dtype=bool)
-    np.fill_diagonal(adj, False)
-    return adj
-
-
-def star_graph(n: int) -> np.ndarray:
-    """Star: node 0 is the center (the federated/parameter-server topology)."""
-    adj = np.zeros((n, n), dtype=bool)
-    adj[0, 1:] = True
-    adj[1:, 0] = True
-    return adj
-
-
-def erdos_renyi_graph(n: int, r: float, seed: int = 0) -> np.ndarray:
-    """Random connected graph with connectivity ratio r (paper uses r=0.5).
-
-    Edges are sampled iid Bernoulli(r); a ring is superimposed to
-    guarantee connectivity (standard practice, keeps W well defined).
-    """
-    rng = np.random.default_rng(seed)
-    upper = rng.random((n, n)) < r
-    adj = np.triu(upper, 1)
-    adj = adj | adj.T
-    adj |= ring_graph(n)
-    np.fill_diagonal(adj, False)
-    return adj
-
-
-def is_connected(adj: np.ndarray) -> bool:
-    n = adj.shape[0]
-    seen = np.zeros(n, dtype=bool)
-    stack = [0]
-    seen[0] = True
-    while stack:
-        i = stack.pop()
-        for j in np.nonzero(adj[i])[0]:
-            if not seen[j]:
-                seen[j] = True
-                stack.append(int(j))
-    return bool(seen.all())
-
-
-# ---------------------------------------------------------------------------
-# Weight schemes
-# ---------------------------------------------------------------------------
-
-def metropolis_weights(adj: np.ndarray) -> np.ndarray:
-    """Metropolis weights, paper Example 2 / Eq. (22).
-
-    w_ij = 1 / (1 + max(deg i, deg j)) on edges; self-weights make rows
-    sum to one.  Symmetric + doubly stochastic by construction.
-    """
-    n = adj.shape[0]
-    deg = adj.sum(axis=1)
-    W = np.zeros((n, n), dtype=np.float64)
-    ii, jj = np.nonzero(adj)
-    W[ii, jj] = 1.0 / (1.0 + np.maximum(deg[ii], deg[jj]))
-    W[np.arange(n), np.arange(n)] = 1.0 - W.sum(axis=1)
-    return W
-
-
-def max_degree_weights(adj: np.ndarray) -> np.ndarray:
-    """Maximum-degree weights, paper Example 1: uniform 1/n on edges."""
-    n = adj.shape[0]
-    deg = adj.sum(axis=1)
-    W = adj.astype(np.float64) / n
-    W[np.arange(n), np.arange(n)] = 1.0 - deg / n
-    return W
-
-
-def uniform_averaging(n: int) -> np.ndarray:
-    """W = (1/n) 11^T — the 'centralized' limit (complete graph, sigma=0)."""
-    return np.full((n, n), 1.0 / n)
-
-
-# ---------------------------------------------------------------------------
-# Spectral quantities + Assumption A checks
-# ---------------------------------------------------------------------------
-
-def mixing_rate(W: np.ndarray) -> float:
-    """sigma = ||W - (1/n)11^T||_2 = max(|lambda_2|, |lambda_n|)  (Eq. 2)."""
-    n = W.shape[0]
-    M = W - np.full((n, n), 1.0 / n)
-    return float(np.linalg.norm(M, 2))
-
-
-def self_weight_bounds(W: np.ndarray) -> tuple[float, float]:
-    """(theta, Theta) of Assumption A4: theta <= w_ii <= Theta."""
-    d = np.diag(W)
-    return float(d.min()), float(d.max())
-
-
-def neumann_rho(W: np.ndarray, beta: float, mu_g: float) -> float:
-    """rho = 2(1-theta) / (2(1-Theta) + beta*mu_g)  (Lemma 5)."""
-    theta, Theta = self_weight_bounds(W)
-    return 2.0 * (1.0 - theta) / (2.0 * (1.0 - Theta) + beta * mu_g)
-
-
-def spectral_gap(W: np.ndarray) -> float:
-    return 1.0 - mixing_rate(W)
-
-
-def check_assumption_a(W: np.ndarray, adj: np.ndarray | None = None,
-                       atol: float = 1e-10) -> None:
-    """Raise AssertionError unless W satisfies Assumption A1–A4."""
-    n = W.shape[0]
-    assert W.shape == (n, n)
-    assert np.all(W >= -atol), "W must be nonnegative"
-    assert np.allclose(W, W.T, atol=atol), "W must be symmetric"
-    assert np.allclose(W.sum(axis=1), 1.0, atol=atol), "rows must sum to 1"
-    assert np.allclose(W.sum(axis=0), 1.0, atol=atol), "cols must sum to 1"
-    if adj is not None:
-        off = ~np.eye(n, dtype=bool)
-        assert np.all((np.abs(W) > atol)[off] <= adj[off]), \
-            "A1: w_ij != 0 only on edges"
-    # A3: null(I - W) = span(1)  <=> eigenvalue 1 has multiplicity one
-    evals = np.linalg.eigvalsh(W)
-    assert np.sum(np.abs(evals - 1.0) < 1e-8) == 1, \
-        "A3: eigenvalue 1 must be simple (graph connected)"
-    assert evals.min() > -1.0 + 1e-12, "eigenvalues must lie in (-1, 1]"
-    theta, Theta = self_weight_bounds(W)
-    assert 0.0 < theta <= Theta <= 1.0, "A4: 0 < theta <= w_ii <= Theta <= 1"
-
-
-# ---------------------------------------------------------------------------
-# Topology bundle
-# ---------------------------------------------------------------------------
-
-@dataclasses.dataclass(frozen=True)
-class Network:
-    """A validated decentralized network: adjacency + mixing matrix."""
-    adj: np.ndarray
-    W: np.ndarray
-    name: str = "network"
-
-    @property
-    def n(self) -> int:
-        return self.W.shape[0]
-
-    @property
-    def sigma(self) -> float:
-        return mixing_rate(self.W)
-
-    @property
-    def theta_bounds(self) -> tuple[float, float]:
-        return self_weight_bounds(self.W)
-
-    def neighbors(self, i: int) -> np.ndarray:
-        return np.nonzero(self.adj[i])[0]
-
-    def W_jnp(self, dtype=jnp.float32) -> jnp.ndarray:
-        return jnp.asarray(self.W, dtype=dtype)
-
-    @property
-    def num_edges(self) -> int:
-        return int(self.adj.sum()) // 2
-
-
-def make_network(kind: str, n: int, *, weights: str = "metropolis",
-                 r: float = 0.5, offsets: Sequence[int] = (1,),
-                 seed: int = 0) -> Network:
-    """Factory: kind in {ring, circulant, erdos_renyi, complete, star,
-    uniform}; weights in {metropolis, max_degree}."""
-    if kind == "ring":
-        adj = ring_graph(n)
-    elif kind == "circulant":
-        adj = circulant_graph(n, offsets)
-    elif kind == "erdos_renyi":
-        adj = erdos_renyi_graph(n, r, seed)
-    elif kind == "complete":
-        adj = complete_graph(n)
-    elif kind == "star":
-        adj = star_graph(n)
-    elif kind == "uniform":
-        adj = complete_graph(n)
-        W = uniform_averaging(n)
-        check_assumption_a(W, adj)
-        return Network(adj=adj, W=W, name=f"uniform-{n}")
-    else:
-        raise ValueError(f"unknown graph kind {kind!r}")
-    if not is_connected(adj):
-        raise ValueError(f"{kind} graph with n={n} is not connected")
-    if weights == "metropolis":
-        W = metropolis_weights(adj)
-    elif weights == "max_degree":
-        W = max_degree_weights(adj)
-    else:
-        raise ValueError(f"unknown weight scheme {weights!r}")
-    check_assumption_a(W, adj)
-    return Network(adj=adj, W=W, name=f"{kind}-{weights}-{n}")
-
-
-# ---------------------------------------------------------------------------
-# Circulant structure detection
-# ---------------------------------------------------------------------------
-
-@dataclasses.dataclass(frozen=True)
-class CirculantStructure:
-    """Shift-invariant W: W[i, (i+o) mod n] = weights[offsets.index(o)],
-    W[i, i] = w_self.  Offsets are 0 < o < n (±o pairs appear as o and
-    n−o), so k = len(offsets) is the per-agent neighbor count."""
-    n: int
-    w_self: float
-    offsets: tuple[int, ...]
-    weights: tuple[float, ...]
-
-
-def circulant_structure(W, atol: float = 1e-12) -> CirculantStructure | None:
-    """Detect shift invariance: returns the structure iff every row of W
-    is the cyclic shift of row 0 (ring / 2k-regular circulant graphs
-    with any uniform weight scheme), else None."""
-    W = np.asarray(W)
-    n = W.shape[0]
-    if W.ndim != 2 or W.shape != (n, n) or n < 2:
-        return None
-    c = W[0]
-    idx = (np.arange(n)[None, :] - np.arange(n)[:, None]) % n
-    if not np.allclose(W, c[idx], atol=atol, rtol=0.0):
-        return None
-    offsets = tuple(int(o) for o in range(1, n) if abs(c[o]) > atol)
-    weights = tuple(float(c[o]) for o in offsets)
-    return CirculantStructure(n=n, w_self=float(c[0]), offsets=offsets,
-                              weights=weights)
-
-
-# ---------------------------------------------------------------------------
-# MixingOp backend
-# ---------------------------------------------------------------------------
-
-BACKENDS = ("auto", "dense", "circulant", "circulant_pallas")
-
-
-class MixingOp:
-    """Topology-aware executor for W·Y, (I−W)·Y and the fused DIHGP
-    Neumann step on stacked per-agent states (see module docstring).
-
-    Backend resolution happens once, at construction (Python level), so
-    inside jitted hot loops the dispatch is free.  The operator is
-    linear; the Pallas tier does not register a VJP (the algorithm stack
-    uses explicit gradients, never autodiff through the mixing), while
-    the dense and circulant XLA tiers remain fully differentiable.
-    Because of that, an *explicitly requested* "circulant" backend never
-    silently upgrades to Pallas — only "auto" does, when
-    `repro.kernels.ops.use_pallas(True)` is set.
-    """
-
-    def __init__(self, W, *, backend: str = "auto",
-                 interpret: bool = True, name: str = "network"):
-        if backend not in BACKENDS:
-            raise ValueError(f"unknown mixing backend {backend!r}; "
-                             f"expected one of {BACKENDS}")
-        self.W = jnp.asarray(W, jnp.float32)
-        self.name = name
-        self.interpret = interpret
-        self.requested = backend
-        self.structure = circulant_structure(W)
-        if backend == "auto":
-            s = self.structure
-            if s is not None and 2 * (len(s.offsets) + 1) <= s.n:
-                self.backend = "circulant"
-            else:
-                self.backend = "dense"
-        elif backend in ("circulant", "circulant_pallas") \
-                and self.structure is None:
-            raise ValueError(
-                f"backend {backend!r} requires a circulant W "
-                f"(ring/circulant topology); got a non-shift-invariant "
-                f"matrix — use 'dense' or 'auto'")
-        else:
-            self.backend = backend
-
-    @property
-    def n(self) -> int:
-        return self.W.shape[0]
-
-    def __repr__(self) -> str:
-        k = len(self.structure.offsets) if self.structure else None
-        return (f"MixingOp({self.name}, n={self.n}, "
-                f"backend={self.backend}, neighbors={k})")
-
-    # -- dispatch ----------------------------------------------------------
-
-    def _resolve(self, backend: str, flat: jnp.ndarray) -> str:
-        """Concrete path for this call: honours the per-shape Pallas
-        tiling constraints ("auto" upgrades when kernels.ops enables
-        Pallas — with ops' interpret flag, since that switch owns the
-        tier; an *explicitly requested* "circulant" backend never
-        upgrades, staying on the differentiable XLA path.  Non-tile-
-        multiple shapes fall back to dense)."""
-        if backend == "circulant" and self.requested == "auto":
-            from repro.kernels import ops as _ops
-            enabled, interp = _ops.pallas_enabled()
-            if enabled and self._pallas_ok(flat):
-                self._interp_now = interp
-                return "circulant_pallas"
-            return "circulant"
-        if backend == "circulant_pallas":
-            if self._pallas_ok(flat):
-                self._interp_now = self.interpret
-                return "circulant_pallas"
-            return "dense"
-        return backend
-
-    def _pallas_ok(self, flat: jnp.ndarray) -> bool:
-        n, d = flat.shape
-        if flat.dtype == jnp.float32:
-            sublane = 8
-        elif flat.dtype == jnp.bfloat16:
-            sublane = 16
-        else:
-            return False
-        return n % sublane == 0 and d % 128 == 0
-
-    # -- primitives --------------------------------------------------------
-
-    def mix(self, y: jnp.ndarray) -> jnp.ndarray:
-        """(W ⊗ I) y on stacked y of shape (n, ...)."""
-        return self._apply(y, laplacian=False)
-
-    def laplacian(self, y: jnp.ndarray) -> jnp.ndarray:
-        """((I − W) ⊗ I) y."""
-        return self._apply(y, laplacian=True)
-
-    def _apply(self, y: jnp.ndarray, laplacian: bool) -> jnp.ndarray:
-        flat = y.reshape(y.shape[0], -1)
-        path = self._resolve(self.backend, flat)
-        if path == "dense":
-            out = self.W.astype(flat.dtype) @ flat
-            if laplacian:
-                out = flat - out
-        elif path == "circulant_pallas":
-            from repro.kernels.mixing_matvec import circulant_mix_matvec
-            s = self.structure
-            out = circulant_mix_matvec(flat, w_self=s.w_self,
-                                       offsets=s.offsets,
-                                       weights=s.weights,
-                                       laplacian=laplacian,
-                                       interpret=self._interp_now)
-        else:
-            from repro.kernels.ref import circulant_mix_ref
-            s = self.structure
-            out = circulant_mix_ref(flat, s.w_self, s.offsets, s.weights,
-                                    laplacian=laplacian)
-        return out.reshape(y.shape)
-
-    def neumann_step(self, h: jnp.ndarray, hvp_h: jnp.ndarray,
-                     p: jnp.ndarray, d_scalar: jnp.ndarray,
-                     beta: float) -> jnp.ndarray:
-        """Fused DIHGP iteration h⁺ = (D̃h − (I−W)h − β·hvp_h − p)/D̃.
-
-        d_scalar: per-agent D̃ diagonal, broadcastable against h as
-        (n,) + (1,)*… (see dihgp.dihgp_matrix_free)."""
-        flat = h.reshape(h.shape[0], -1)
-        path = self._resolve(self.backend, flat)
-        if path == "circulant_pallas":
-            from repro.kernels.mixing_matvec import circulant_neumann_step
-            s = self.structure
-            out = circulant_neumann_step(
-                flat, hvp_h.reshape(flat.shape), p.reshape(flat.shape),
-                d_scalar.reshape(h.shape[0], 1).astype(jnp.float32),
-                w_self=s.w_self, offsets=s.offsets, weights=s.weights,
-                beta=beta, interpret=self._interp_now)
-            return out.reshape(h.shape)
-        return _neumann_update(self._apply(h, laplacian=False), h, hvp_h,
-                               p, d_scalar, beta)
-
-
-def make_mixing_op(net: "Network", backend: str = "auto",
-                   interpret: bool = True) -> MixingOp:
-    """Build the execution backend for a validated Network."""
-    return MixingOp(net.W, backend=backend, interpret=interpret,
-                    name=net.name)
-
-
-def as_matrix(W) -> jnp.ndarray:
-    """Raw (n, n) mixing matrix from either a MixingOp or an array —
-    for reference-tier code that needs W entries (diag, kron, eig)."""
-    return W.W if isinstance(W, MixingOp) else W
-
-
-# ---------------------------------------------------------------------------
-# Applying W to stacked per-agent states (free-function façade)
-# ---------------------------------------------------------------------------
-
-def mix_apply(W, y: jnp.ndarray) -> jnp.ndarray:
-    """(W ⊗ I_d) y for stacked y of shape (n, d) [or (n, ...)].
-
-    W may be a raw (n, n) array (dense matmul) or a MixingOp (backend
-    dispatch) — every hot-loop caller routes through here."""
-    if isinstance(W, MixingOp):
-        return W.mix(y)
-    flat = y.reshape(y.shape[0], -1)
-    out = W.astype(flat.dtype) @ flat
-    return out.reshape(y.shape)
-
-
-def laplacian_apply(W, y: jnp.ndarray) -> jnp.ndarray:
-    """((I - W) ⊗ I_d) y — the penalty-gradient mixing term."""
-    if isinstance(W, MixingOp):
-        return W.laplacian(y)
-    return y - mix_apply(W, y)
-
-
-def _neumann_update(mix, h, hvp_h, p, d_scalar, beta: float):
-    """Shared fused-step algebra, given the mixed state mix = W·h:
-
-        h⁺ = (D̃h − (h − W h) − β·hvp_h − p) / D̃
-
-    Single source of truth for every non-Pallas tier (the Pallas kernel
-    computes the identical expression in `_neumann_body`)."""
-    return (d_scalar * h - (h - mix) - beta * hvp_h - p) / d_scalar
-
-
-def fused_neumann_step(W, h, hvp_h, p, d_scalar, beta: float):
-    """One DIHGP Neumann iteration (Eq. 14) in a single traversal:
-
-        h⁺ = (D̃h − (I−W)h − β·hvp_h − p) / D̃
-
-    MixingOp dispatches to the fused Pallas kernel on the circulant
-    tier; the array/dense path composes the same algebra in XLA."""
-    if isinstance(W, MixingOp):
-        return W.neumann_step(h, hvp_h, p, d_scalar, beta)
-    return _neumann_update(mix_apply(W, h), h, hvp_h, p, d_scalar, beta)
+from repro.topology import (                                 # noqa: F401
+    # graphs
+    circulant_graph, complete_graph, erdos_renyi_graph, is_connected,
+    ring_graph, star_graph,
+    # weights + diagnostics
+    check_assumption_a, max_degree_weights, metropolis_weights,
+    mixing_rate, neumann_rho, self_weight_bounds, spectral_gap,
+    uniform_averaging,
+    # structure extraction
+    CirculantStructure, SparseStructure, circulant_structure,
+    sparse_structure,
+    # network + execution backend
+    BACKENDS, MIXING_DTYPES, MixingOp, Network, as_matrix,
+    fused_neumann_step, laplacian_apply, make_mixing_op, make_network,
+    mix_apply, resolve_mixing_dtype,
+    # shared fused-step algebra (used by the sharded tier + tests)
+    _neumann_update,
+)

@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core.mixing import make_network, Network
+from repro.topology import make_network, Network
 
 
 @dataclasses.dataclass(frozen=True)

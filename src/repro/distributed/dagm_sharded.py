@@ -46,7 +46,11 @@ class ShardedDAGMConfig:
     #                             the flattened product of those axes —
     #                             the cross-pod ring of the multi-pod
     #                             DAGM dry-run
-    comm_dtype: str = "f32"    # "bf16" = compressed gossip (§Perf variant)
+    comm_dtype: str = "f32"    # "bf16" = compressed gossip (§Perf
+    #                            variant) — same "f32" | "bf16"
+    #                            vocabulary as the reference tier's
+    #                            DAGMConfig.mixing_dtype, resolved by the
+    #                            shared topology.resolve_mixing_dtype
     mix_every: int = 1         # j > 1: gossip only every j-th inner step
     #                            (local-updates variant, cf. FedNest [77];
     #                            §Perf — cuts inner comm by ~j)
@@ -57,7 +61,8 @@ class ShardedDAGMConfig:
 
     @property
     def comm_jnp_dtype(self):
-        return jnp.bfloat16 if self.comm_dtype == "bf16" else None
+        from repro.topology import resolve_mixing_dtype
+        return resolve_mixing_dtype(self.comm_dtype)
 
 
 def dagm_local_round(g_fn: Callable, f_fn: Callable,

@@ -26,9 +26,21 @@ Pure VPU, deliberately memory-bound: bytes moved ≈ 2·n·d·sizeof(dtype)
 (1 read + 1 write) against (2k+1)·n·d FMAs, versus the dense-matmul
 lowering's O(n²·d) MXU work.
 
+For *irregular* sparse graphs (Erdős–Rényi, star) there is no shift
+structure, so `sparse_mix_matvec` works from the padded fixed-degree
+neighbor/weight tables of `repro.topology.structure.SparseStructure`
+instead: the index and weight tables ride in as scalar-prefetch
+operands (SMEM, available before the body runs), the grid is the same
+column-stripe (d/bd,) layout, and each program walks its stripe row by
+row, gathering the k_max neighbor rows of the resident (n, bd) block
+with dynamic sublane slices — O(n·k_max·d) FMAs against the same
+2·n·d·sizeof(dtype) bytes moved.
+
 Entry points
 ------------
 * `circulant_mix_matvec`    — W·Y or (I−W)·Y for arbitrary offset sets.
+* `sparse_mix_matvec`       — W·Y or (I−W)·Y for arbitrary sparse W via
+                              per-row neighbor gather (padded CSR).
 * `circulant_neumann_step`  — one fused DIHGP iteration
                               h⁺ = (D̃h − (I−W)h − β·Hvp − p)/D̃,
                               one traversal instead of the three that
@@ -37,7 +49,7 @@ Entry points
 * `ring_laplacian_matvec`   — backward-compatible ring wrapper.
 
 Dispatch policy (which backend runs when) lives in
-`repro.core.mixing.MixingOp`; these functions assume tile-friendly
+`repro.topology.ops.MixingOp`; these functions assume tile-friendly
 shapes and raise on anything else.
 """
 from __future__ import annotations
@@ -47,6 +59,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 def _shift(blk: jnp.ndarray, o: int) -> jnp.ndarray:
@@ -100,6 +113,74 @@ def circulant_mix_matvec(y: jnp.ndarray, *, w_self: float,
     return pl.pallas_call(body, grid_spec=grid_spec,
                           out_shape=jax.ShapeDtypeStruct((n, d), y.dtype),
                           interpret=interpret)(y)
+
+
+def _sparse_body(idx_ref, wts_ref, wself_ref, y_ref, out_ref, *, k,
+                 laplacian):
+    """Per-row neighbor gather over one (n, bd) column stripe.
+
+    idx_ref / wts_ref: flattened (n·k,) padded neighbor/weight tables,
+    wself_ref: (n,) diagonal — all scalar-prefetched (SMEM), so the row
+    loop can compute its gather addresses before touching VMEM.  Padding
+    slots hold the row's own index with weight 0, so every dynamic slice
+    is in-bounds and padded lanes contribute nothing.
+    """
+    n = y_ref.shape[0]
+
+    def row_body(i, _):
+        yi = y_ref[pl.ds(i, 1), :].astype(jnp.float32)
+        acc0 = wself_ref[i] * yi
+
+        def nb_body(j, acc):
+            nb = idx_ref[i * k + j]
+            w = wts_ref[i * k + j]
+            return acc + w * y_ref[pl.ds(nb, 1), :].astype(jnp.float32)
+
+        acc = jax.lax.fori_loop(0, k, nb_body, acc0)
+        if laplacian:
+            acc = yi - acc
+        out_ref[pl.ds(i, 1), :] = acc.astype(out_ref.dtype)
+        return 0
+
+    jax.lax.fori_loop(0, n, row_body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("laplacian", "bd",
+                                             "interpret"))
+def sparse_mix_matvec(y: jnp.ndarray, w_self: jnp.ndarray,
+                      neighbors: jnp.ndarray, weights: jnp.ndarray, *,
+                      laplacian: bool = False, bd: int = 128,
+                      interpret: bool = True) -> jnp.ndarray:
+    """W·Y (or (I−W)·Y) for arbitrary sparse W; y: (n, d), d % bd == 0.
+
+    w_self: (n,) diagonal of W; neighbors/weights: (n, k) padded
+    fixed-degree tables (`topology.structure.SparseStructure`) — row i's
+    unused slots hold index i with weight 0.  O(n·k·d) FMAs, one read +
+    one write of the stripe like the circulant kernel, but the neighbor
+    rows come from scalar-prefetch-addressed dynamic sublane slices
+    instead of static cyclic shifts.
+    """
+    n, d = y.shape
+    if d % bd:
+        raise ValueError(f"d={d} not a multiple of bd={bd}")
+    if neighbors.shape != weights.shape or neighbors.shape[0] != n:
+        raise ValueError(
+            f"neighbors/weights must both be (n, k); got "
+            f"{neighbors.shape} / {weights.shape} with n={n}")
+    k = neighbors.shape[1]
+    idx_flat = neighbors.reshape(-1).astype(jnp.int32)
+    wts_flat = weights.reshape(-1).astype(jnp.float32)
+    wself = w_self.reshape(-1).astype(jnp.float32)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(d // bd,),
+        in_specs=[pl.BlockSpec((n, bd), lambda j, *_: (0, j))],
+        out_specs=pl.BlockSpec((n, bd), lambda j, *_: (0, j)),
+    )
+    body = functools.partial(_sparse_body, k=k, laplacian=laplacian)
+    return pl.pallas_call(body, grid_spec=grid_spec,
+                          out_shape=jax.ShapeDtypeStruct((n, d), y.dtype),
+                          interpret=interpret)(idx_flat, wts_flat, wself, y)
 
 
 def _neumann_body(h_ref, hvp_ref, p_ref, dsc_ref, out_ref, *, w_self,
@@ -163,6 +244,12 @@ def ring_laplacian_matvec(y: jnp.ndarray, *, w_self: float, w_edge: float,
     but ignored: the column-stripe kernel no longer tiles the agent
     axis, so any n works."""
     n, d = y.shape
-    return circulant_mix_matvec(y, w_self=w_self, offsets=(1, n - 1),
-                                weights=(w_edge, w_edge), laplacian=True,
+    if n == 2:
+        # ±1 name the same neighbor on C_2 — one offset, else the edge
+        # weight would be applied twice
+        offsets, weights = (1,), (w_edge,)
+    else:
+        offsets, weights = (1, n - 1), (w_edge, w_edge)
+    return circulant_mix_matvec(y, w_self=w_self, offsets=offsets,
+                                weights=weights, laplacian=True,
                                 bd=bd, interpret=interpret)

@@ -5,9 +5,9 @@
 `interpret=True` executes them on CPU for validation).  Tests sweep
 shapes/dtypes through both and assert allclose.
 
-`core.mixing.MixingOp` consults `pallas_enabled()` so that flipping this
-one switch upgrades every circulant mixing mat-vec in the DAGM hot loop
-to the Pallas backend as well.
+`repro.topology.ops.MixingOp` consults `pallas_enabled()` so that
+flipping this one switch upgrades every circulant / sparse-gather
+mixing mat-vec in the DAGM hot loop to the Pallas backend as well.
 """
 from __future__ import annotations
 

@@ -14,9 +14,14 @@ def ring_laplacian_ref(y: jnp.ndarray, w_self: float, w_edge: float,
 
     W row: w_self on diag, w_edge at offsets ±1..±hops (wraparound)."""
     out = (1.0 - w_self) * y
+    n = y.shape[0]
     for o in range(1, hops + 1):
-        out = out - w_edge * (jnp.roll(y, o, axis=0)
-                              + jnp.roll(y, -o, axis=0))
+        if (2 * o) % n == 0:
+            # ±o coincide (o = n/2): one neighbor entry, not two
+            out = out - w_edge * jnp.roll(y, o, axis=0)
+        else:
+            out = out - w_edge * (jnp.roll(y, o, axis=0)
+                                  + jnp.roll(y, -o, axis=0))
     return out
 
 
@@ -29,6 +34,43 @@ def circulant_mix_ref(y: jnp.ndarray, w_self: float, offsets, weights,
     acc = w_self * y
     for o, c in zip(offsets, weights):
         acc = acc + c * jnp.roll(y, -int(o), axis=0)
+    return y - acc if laplacian else acc
+
+
+def sparse_mix_ref(y: jnp.ndarray, w_self: jnp.ndarray,
+                   row: jnp.ndarray, col: jnp.ndarray, val: jnp.ndarray,
+                   laplacian: bool = False) -> jnp.ndarray:
+    """W·Y (or (I−W)·Y) from CSR structure — the irregular-topology
+    (Erdős–Rényi / star) take/segment-sum path, O((nnz+n)·d); y (n, d).
+
+    w_self: (n,) diagonal of W; row/col/val: expanded CSR triplets of
+    the off-diagonal nonzeros with `row` sorted (see
+    `repro.topology.structure.SparseStructure`).  Also the oracle for
+    the Pallas `sparse_mix_matvec` kernel — and the XLA execution path
+    `topology.ops.MixingOp` uses off-TPU."""
+    gathered = jnp.take(y, col, axis=0) * val.astype(y.dtype)[:, None]
+    neigh = jax.ops.segment_sum(gathered, row, num_segments=y.shape[0],
+                                indices_are_sorted=True)
+    acc = w_self.astype(y.dtype)[:, None] * y + neigh
+    return y - acc if laplacian else acc
+
+
+def sparse_mix_padded_ref(y: jnp.ndarray, w_self: jnp.ndarray,
+                          neighbors: jnp.ndarray, weights: jnp.ndarray,
+                          laplacian: bool = False) -> jnp.ndarray:
+    """Same operator from the padded fixed-degree tables, O(n·k_max·d):
+    one contiguous (n, d) row-gather + FMA per padded slot.
+
+    XLA executes row gathers far better than segment_sum's scatter-adds,
+    so `topology.ops.MixingOp` prefers this form when the degree
+    distribution is near-regular (n·k_max ≈ nnz — Erdős–Rényi), and the
+    CSR `sparse_mix_ref` when it is skewed (star: k_max = n−1 but
+    nnz = 2(n−1)).  Padded slots hold the row's own index with weight 0.
+    Also the jnp oracle for the Pallas `sparse_mix_matvec` kernel."""
+    acc = w_self.astype(y.dtype)[:, None] * y
+    for j in range(neighbors.shape[1]):
+        acc = acc + weights[:, j:j + 1].astype(y.dtype) \
+            * jnp.take(y, neighbors[:, j], axis=0)
     return y - acc if laplacian else acc
 
 

@@ -1,0 +1,43 @@
+"""repro.topology — the decentralized-network subsystem (paper §3).
+
+Layers:
+
+  * `graphs`    — adjacency generators (ring, circulant, Erdős–Rényi,
+                  star, complete) + connectivity (Assumption A1/A3),
+  * `weights`   — Metropolis / max-degree / uniform mixing matrices and
+                  spectral diagnostics (sigma, theta bounds, Lemma-5 rho,
+                  `check_assumption_a`),
+  * `structure` — execution-structure extraction: shift-invariant
+                  (`circulant_structure`) and irregular CSR with padded
+                  fixed-degree tables (`sparse_structure`),
+  * `ops`       — `Network`, the `MixingOp` backend dispatch (dense /
+                  circulant / sparse_gather × XLA / Pallas) and the
+                  free-function façade every algorithm calls.
+
+`repro.core.mixing` re-exports this entire surface as a compatibility
+shim; new code should import from `repro.topology` directly.
+"""
+from .graphs import (circulant_graph, complete_graph, erdos_renyi_graph,
+                     is_connected, ring_graph, star_graph)
+from .weights import (check_assumption_a, max_degree_weights,
+                      metropolis_weights, mixing_rate, neumann_rho,
+                      self_weight_bounds, spectral_gap, uniform_averaging)
+from .structure import (CirculantStructure, SparseStructure,
+                        circulant_structure, sparse_structure)
+from .ops import (BACKENDS, MIXING_DTYPES, MixingOp, Network, as_matrix,
+                  fused_neumann_step, laplacian_apply, make_mixing_op,
+                  make_network, mix_apply, resolve_mixing_dtype,
+                  _neumann_update)
+
+__all__ = [
+    "circulant_graph", "complete_graph", "erdos_renyi_graph",
+    "is_connected", "ring_graph", "star_graph",
+    "check_assumption_a", "max_degree_weights", "metropolis_weights",
+    "mixing_rate", "neumann_rho", "self_weight_bounds", "spectral_gap",
+    "uniform_averaging",
+    "CirculantStructure", "SparseStructure", "circulant_structure",
+    "sparse_structure",
+    "BACKENDS", "MIXING_DTYPES", "MixingOp", "Network", "as_matrix",
+    "fused_neumann_step", "laplacian_apply", "make_mixing_op",
+    "make_network", "mix_apply", "resolve_mixing_dtype",
+]

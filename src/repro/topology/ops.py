@@ -1,0 +1,441 @@
+"""`Network` + the topology-aware `MixingOp` execution backend.
+
+W itself is small (n × n with n = number of agents) and always
+materialized; what is *hot* is applying W ⊗ I to stacked per-agent
+states (n, d) — called M + U + 1 times per DAGM outer round.  The paper's
+communication-efficiency claim rests on this being a neighbor-only
+operation (O(n·k·d) for k neighbors per agent), so the runtime must not
+lower it through a dense O(n²·d) matmul on sparse topologies.
+
+MixingOp backends
+-----------------
+`MixingOp` (built from a `Network` via `make_mixing_op`) owns that
+dispatch.  Backends:
+
+  * "dense"               — W @ y matmul; correct for arbitrary W (the
+                            complete-graph / near-dense fallback).
+  * "circulant"           — for shift-invariant W (ring, 2k-regular
+                            circulant; detected by `circulant_structure`):
+                            O(n·k·d) weighted cyclic shifts in plain XLA.
+  * "circulant_pallas"    — same math via the banded-circulant Pallas
+                            kernels in `repro.kernels.mixing_matvec`
+                            (single-read column-stripe tiling, f32/bf16);
+                            non-tile-multiple shapes fall back to dense.
+  * "sparse_gather"       — for *irregular* sparse W (Erdős–Rényi, star;
+                            extracted by `sparse_structure`): plain-XLA
+                            take-based gather, O((nnz+n)·d) — a padded
+                            per-slot row-gather loop on near-regular
+                            degree distributions, CSR take/segment-sum
+                            on skewed ones (see kernels.ref).
+  * "sparse_gather_pallas"— the per-row neighbor-gather Pallas kernel
+                            (scalar-prefetched index/weight tables,
+                            column-stripe grid), O(n·k_max·d); non-tile-
+                            multiple shapes fall back to "sparse_gather".
+  * "auto"                — circulant when shift-invariant *and* cheaper
+                            than the matmul (2·(k+1) ≤ n); else
+                            sparse_gather when the gather does strictly
+                            fewer MACs than the matmul (nnz + n < n², i.e.
+                            anything but a complete graph); else dense.
+                            Upgrades to the matching Pallas tier when
+                            `repro.kernels.ops.use_pallas(True)` is set.
+
+The sharded runtime is a further tier of the same abstraction: on a real
+mesh W·y is `lax.ppermute` neighbor exchange (repro.distributed
+.collectives.ring_mix), one agent per device, and never sees a dense W.
+
+Mixing dtype
+------------
+`MixingOp(..., dtype="bf16")` stores/communicates the mixed state in
+bfloat16 while accumulating in f32 (ROADMAP bf16 item): the operand is
+rounded to bf16 once, every backend accumulates the rounded values in
+f32, and the result is rounded back through bf16 before being returned
+in the caller's dtype.  `resolve_mixing_dtype` is the single vocabulary
+("f32" | "bf16") shared with the sharded tier's
+`ShardedDAGMConfig.comm_dtype` compressed gossip.
+
+All algorithm-level callers (`penalty`, `dihgp`, `dagm`, `baselines`)
+go through the free functions `mix_apply` / `laplacian_apply` /
+`fused_neumann_step`, which accept either a raw W array (dense path,
+backward compatible) or a `MixingOp` — so a single `DAGMConfig.mixing`
+choice selects the execution path end-to-end with no call-site
+branching.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+import jax.numpy as jnp
+
+from .graphs import (circulant_graph, complete_graph, erdos_renyi_graph,
+                     is_connected, ring_graph, star_graph)
+from .structure import (CirculantStructure, SparseStructure,
+                        circulant_structure, sparse_structure)
+from .weights import (check_assumption_a, max_degree_weights,
+                      metropolis_weights, mixing_rate, self_weight_bounds,
+                      uniform_averaging)
+
+
+# ---------------------------------------------------------------------------
+# Topology bundle
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Network:
+    """A validated decentralized network: adjacency + mixing matrix."""
+    adj: np.ndarray
+    W: np.ndarray
+    name: str = "network"
+
+    @property
+    def n(self) -> int:
+        return self.W.shape[0]
+
+    @property
+    def sigma(self) -> float:
+        return mixing_rate(self.W)
+
+    @property
+    def theta_bounds(self) -> tuple[float, float]:
+        return self_weight_bounds(self.W)
+
+    def neighbors(self, i: int) -> np.ndarray:
+        return np.nonzero(self.adj[i])[0]
+
+    def W_jnp(self, dtype=jnp.float32) -> jnp.ndarray:
+        return jnp.asarray(self.W, dtype=dtype)
+
+    @property
+    def num_edges(self) -> int:
+        return int(self.adj.sum()) // 2
+
+
+def make_network(kind: str, n: int, *, weights: str = "metropolis",
+                 r: float = 0.5, offsets: Sequence[int] = (1,),
+                 seed: int = 0) -> Network:
+    """Factory: kind in {ring, circulant, erdos_renyi, complete, star,
+    uniform}; weights in {metropolis, max_degree}."""
+    if kind == "ring":
+        adj = ring_graph(n)
+    elif kind == "circulant":
+        adj = circulant_graph(n, offsets)
+    elif kind == "erdos_renyi":
+        adj = erdos_renyi_graph(n, r, seed)
+    elif kind == "complete":
+        adj = complete_graph(n)
+    elif kind == "star":
+        adj = star_graph(n)
+    elif kind == "uniform":
+        adj = complete_graph(n)
+        W = uniform_averaging(n)
+        check_assumption_a(W, adj)
+        return Network(adj=adj, W=W, name=f"uniform-{n}")
+    else:
+        raise ValueError(f"unknown graph kind {kind!r}")
+    if not is_connected(adj):
+        raise ValueError(f"{kind} graph with n={n} is not connected")
+    if weights == "metropolis":
+        W = metropolis_weights(adj)
+    elif weights == "max_degree":
+        W = max_degree_weights(adj)
+    else:
+        raise ValueError(f"unknown weight scheme {weights!r}")
+    check_assumption_a(W, adj)
+    return Network(adj=adj, W=W, name=f"{kind}-{weights}-{n}")
+
+
+# ---------------------------------------------------------------------------
+# MixingOp backend
+# ---------------------------------------------------------------------------
+
+BACKENDS = ("auto", "dense", "circulant", "circulant_pallas",
+            "sparse_gather", "sparse_gather_pallas")
+
+MIXING_DTYPES = ("f32", "bf16")
+
+
+def resolve_mixing_dtype(name: str):
+    """Shared "f32" | "bf16" vocabulary of the reference tier's
+    `DAGMConfig.mixing_dtype` and the sharded tier's
+    `ShardedDAGMConfig.comm_dtype`: returns the jnp storage/wire dtype,
+    or None for full precision (no quantization)."""
+    if name == "f32":
+        return None
+    if name == "bf16":
+        return jnp.bfloat16
+    raise ValueError(f"unknown mixing dtype {name!r}; "
+                     f"expected one of {MIXING_DTYPES}")
+
+
+class MixingOp:
+    """Topology-aware executor for W·Y, (I−W)·Y and the fused DIHGP
+    Neumann step on stacked per-agent states (see module docstring).
+
+    Backend resolution happens once, at construction (Python level), so
+    inside jitted hot loops the dispatch is free.  The operator is
+    linear; the Pallas tiers do not register a VJP (the algorithm stack
+    uses explicit gradients, never autodiff through the mixing), while
+    the dense, circulant and sparse_gather XLA tiers remain fully
+    differentiable.  Because of that, an *explicitly requested*
+    "circulant" / "sparse_gather" backend never silently upgrades to
+    Pallas — only "auto" does, when `repro.kernels.ops.use_pallas(True)`
+    is set.
+    """
+
+    def __init__(self, W, *, backend: str = "auto",
+                 interpret: bool = True, name: str = "network",
+                 dtype: str = "f32"):
+        if backend not in BACKENDS:
+            raise ValueError(f"unknown mixing backend {backend!r}; "
+                             f"expected one of {BACKENDS}")
+        self.W = jnp.asarray(W, jnp.float32)
+        self.name = name
+        self.interpret = interpret
+        self.requested = backend
+        self.dtype = dtype
+        self.storage_dtype = resolve_mixing_dtype(dtype)
+        self.structure = circulant_structure(W)
+        self.sparse = sparse_structure(W)
+        if backend == "auto":
+            s, sp = self.structure, self.sparse
+            if s is not None and 2 * (len(s.offsets) + 1) <= s.n:
+                self.backend = "circulant"
+            elif sp is not None and sp.nnz + sp.n < sp.n * sp.n:
+                self.backend = "sparse_gather"
+            else:
+                self.backend = "dense"
+        elif backend in ("circulant", "circulant_pallas") \
+                and self.structure is None:
+            raise ValueError(
+                f"backend {backend!r} requires a circulant W "
+                f"(ring/circulant topology); got a non-shift-invariant "
+                f"matrix — use 'sparse_gather', 'dense' or 'auto'")
+        elif backend in ("sparse_gather", "sparse_gather_pallas") \
+                and self.sparse is None:
+            raise ValueError(
+                f"backend {backend!r} requires a square mixing matrix "
+                f"with n >= 2")
+        else:
+            self.backend = backend
+        if self.backend in ("sparse_gather", "sparse_gather_pallas"):
+            sp = self.sparse
+            self._sp_wself = jnp.asarray(sp.w_self)
+            self._sp_row = jnp.asarray(sp.row)
+            self._sp_col = jnp.asarray(sp.col)
+            self._sp_val = jnp.asarray(sp.val)
+            self._sp_idx = jnp.asarray(sp.neighbors)
+            self._sp_wts = jnp.asarray(sp.weights)
+            # XLA formulation: padded row-gather loop when the degree
+            # distribution is near-regular (its n·k_max work is within
+            # 2× of the CSR nnz — ER graphs), CSR segment-sum when
+            # skewed (star: k_max = n−1 but nnz = 2(n−1))
+            self._sp_use_padded = sp.n * sp.k <= 2 * sp.nnz
+
+    @property
+    def n(self) -> int:
+        return self.W.shape[0]
+
+    def __repr__(self) -> str:
+        if self.structure is not None:
+            k = len(self.structure.offsets)
+        elif self.sparse is not None:
+            k = self.sparse.k
+        else:
+            k = None
+        return (f"MixingOp({self.name}, n={self.n}, "
+                f"backend={self.backend}, neighbors={k}, "
+                f"dtype={self.dtype})")
+
+    # -- dispatch ----------------------------------------------------------
+
+    def _resolve(self, backend: str, flat: jnp.ndarray) -> str:
+        """Concrete path for this call: honours the per-shape Pallas
+        tiling constraints ("auto" upgrades when kernels.ops enables
+        Pallas — with ops' interpret flag, since that switch owns the
+        tier; an *explicitly requested* XLA backend never upgrades,
+        staying differentiable.  Non-tile-multiple shapes fall back to
+        dense for "circulant_pallas" and to the CSR XLA path for
+        "sparse_gather_pallas")."""
+        if backend in ("circulant", "sparse_gather") \
+                and self.requested == "auto":
+            # the sparse Pallas kernel walks the padded (n, k_max)
+            # table, so on skewed-degree graphs (star) where the XLA
+            # dispatch already rejected that formulation the upgrade
+            # would regress O((nnz+n)·d) to O(n·k_max·d) — stay on CSR
+            if backend == "sparse_gather" and not self._sp_use_padded:
+                return backend
+            from repro.kernels import ops as _ops
+            enabled, interp = _ops.pallas_enabled()
+            if enabled and self._pallas_ok(flat):
+                self._interp_now = interp
+                return backend + "_pallas"
+            return backend
+        if backend == "circulant_pallas":
+            if self._pallas_ok(flat):
+                self._interp_now = self.interpret
+                return "circulant_pallas"
+            return "dense"
+        if backend == "sparse_gather_pallas":
+            if self._pallas_ok(flat):
+                self._interp_now = self.interpret
+                return "sparse_gather_pallas"
+            return "sparse_gather"
+        return backend
+
+    def _pallas_ok(self, flat: jnp.ndarray) -> bool:
+        n, d = flat.shape
+        if flat.dtype == jnp.float32:
+            sublane = 8
+        elif flat.dtype == jnp.bfloat16:
+            sublane = 16
+        else:
+            return False
+        return n % sublane == 0 and d % 128 == 0
+
+    # -- primitives --------------------------------------------------------
+
+    def mix(self, y: jnp.ndarray) -> jnp.ndarray:
+        """(W ⊗ I) y on stacked y of shape (n, ...)."""
+        return self._apply(y, laplacian=False)
+
+    def laplacian(self, y: jnp.ndarray) -> jnp.ndarray:
+        """((I − W) ⊗ I) y."""
+        return self._apply(y, laplacian=True)
+
+    def _apply(self, y: jnp.ndarray, laplacian: bool) -> jnp.ndarray:
+        flat = y.reshape(y.shape[0], -1)
+        out_dtype = flat.dtype
+        if self.storage_dtype is not None \
+                and flat.dtype != self.storage_dtype:
+            # bf16 storage: round the operand once; backends then
+            # accumulate the rounded values in f32 (Pallas kernels do so
+            # natively; the XLA paths get an explicit f32 upcast below).
+            flat = flat.astype(self.storage_dtype)
+        path = self._resolve(self.backend, flat)
+        if path == "circulant_pallas":
+            from repro.kernels.mixing_matvec import circulant_mix_matvec
+            s = self.structure
+            out = circulant_mix_matvec(flat, w_self=s.w_self,
+                                       offsets=s.offsets,
+                                       weights=s.weights,
+                                       laplacian=laplacian,
+                                       interpret=self._interp_now)
+        elif path == "sparse_gather_pallas":
+            from repro.kernels.mixing_matvec import sparse_mix_matvec
+            out = sparse_mix_matvec(flat, self._sp_wself, self._sp_idx,
+                                    self._sp_wts, laplacian=laplacian,
+                                    interpret=self._interp_now)
+        else:
+            acc = flat if self.storage_dtype is None \
+                else flat.astype(jnp.float32)
+            if path == "dense":
+                out = self.W.astype(acc.dtype) @ acc
+                if laplacian:
+                    out = acc - out
+            elif path == "sparse_gather":
+                from repro.kernels.ref import (sparse_mix_padded_ref,
+                                               sparse_mix_ref)
+                if self._sp_use_padded:
+                    out = sparse_mix_padded_ref(acc, self._sp_wself,
+                                                self._sp_idx,
+                                                self._sp_wts,
+                                                laplacian=laplacian)
+                else:
+                    out = sparse_mix_ref(acc, self._sp_wself,
+                                         self._sp_row, self._sp_col,
+                                         self._sp_val,
+                                         laplacian=laplacian)
+            else:
+                from repro.kernels.ref import circulant_mix_ref
+                s = self.structure
+                out = circulant_mix_ref(acc, s.w_self, s.offsets,
+                                        s.weights, laplacian=laplacian)
+        if self.storage_dtype is not None:
+            # round the result back through storage precision so every
+            # backend returns identically-quantized values
+            out = out.astype(self.storage_dtype)
+        return out.astype(out_dtype).reshape(y.shape)
+
+    def neumann_step(self, h: jnp.ndarray, hvp_h: jnp.ndarray,
+                     p: jnp.ndarray, d_scalar: jnp.ndarray,
+                     beta: float) -> jnp.ndarray:
+        """Fused DIHGP iteration h⁺ = (D̃h − (I−W)h − β·hvp_h − p)/D̃.
+
+        d_scalar: per-agent D̃ diagonal, broadcastable against h as
+        (n,) + (1,)*… (see dihgp.dihgp_matrix_free)."""
+        flat = h.reshape(h.shape[0], -1)
+        path = self._resolve(self.backend, flat)
+        if path == "circulant_pallas" and self.storage_dtype is None:
+            from repro.kernels.mixing_matvec import circulant_neumann_step
+            s = self.structure
+            out = circulant_neumann_step(
+                flat, hvp_h.reshape(flat.shape), p.reshape(flat.shape),
+                d_scalar.reshape(h.shape[0], 1).astype(jnp.float32),
+                w_self=s.w_self, offsets=s.offsets, weights=s.weights,
+                beta=beta, interpret=self._interp_now)
+            return out.reshape(h.shape)
+        # sparse / bf16-storage tiers compose the same algebra from the
+        # backend mix (only the W·h term is storage-quantized — the
+        # local D̃/HVP/p terms never cross the wire)
+        return _neumann_update(self._apply(h, laplacian=False), h, hvp_h,
+                               p, d_scalar, beta)
+
+
+def make_mixing_op(net: "Network", backend: str = "auto",
+                   interpret: bool = True,
+                   dtype: str = "f32") -> MixingOp:
+    """Build the execution backend for a validated Network."""
+    return MixingOp(net.W, backend=backend, interpret=interpret,
+                    name=net.name, dtype=dtype)
+
+
+def as_matrix(W) -> jnp.ndarray:
+    """Raw (n, n) mixing matrix from either a MixingOp or an array —
+    for reference-tier code that needs W entries (diag, kron, eig)."""
+    return W.W if isinstance(W, MixingOp) else W
+
+
+# ---------------------------------------------------------------------------
+# Applying W to stacked per-agent states (free-function façade)
+# ---------------------------------------------------------------------------
+
+def mix_apply(W, y: jnp.ndarray) -> jnp.ndarray:
+    """(W ⊗ I_d) y for stacked y of shape (n, d) [or (n, ...)].
+
+    W may be a raw (n, n) array (dense matmul) or a MixingOp (backend
+    dispatch) — every hot-loop caller routes through here."""
+    if isinstance(W, MixingOp):
+        return W.mix(y)
+    flat = y.reshape(y.shape[0], -1)
+    out = W.astype(flat.dtype) @ flat
+    return out.reshape(y.shape)
+
+
+def laplacian_apply(W, y: jnp.ndarray) -> jnp.ndarray:
+    """((I - W) ⊗ I_d) y — the penalty-gradient mixing term."""
+    if isinstance(W, MixingOp):
+        return W.laplacian(y)
+    return y - mix_apply(W, y)
+
+
+def _neumann_update(mix, h, hvp_h, p, d_scalar, beta: float):
+    """Shared fused-step algebra, given the mixed state mix = W·h:
+
+        h⁺ = (D̃h − (h − W h) − β·hvp_h − p) / D̃
+
+    Single source of truth for every non-Pallas tier (the Pallas kernel
+    computes the identical expression in `_neumann_body`)."""
+    return (d_scalar * h - (h - mix) - beta * hvp_h - p) / d_scalar
+
+
+def fused_neumann_step(W, h, hvp_h, p, d_scalar, beta: float):
+    """One DIHGP Neumann iteration (Eq. 14) in a single traversal:
+
+        h⁺ = (D̃h − (I−W)h − β·hvp_h − p) / D̃
+
+    MixingOp dispatches to the fused Pallas kernel on the circulant
+    tier; the array/dense path composes the same algebra in XLA."""
+    if isinstance(W, MixingOp):
+        return W.neumann_step(h, hvp_h, p, d_scalar, beta)
+    return _neumann_update(mix_apply(W, h), h, hvp_h, p, d_scalar, beta)

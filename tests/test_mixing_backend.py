@@ -41,7 +41,8 @@ def test_non_circulant_rejected():
     assert circulant_structure(net.W) is None
     with pytest.raises(ValueError, match="requires a circulant"):
         make_mixing_op(net, backend="circulant_pallas")
-    assert make_mixing_op(net).backend == "dense"       # auto → dense
+    # auto → the irregular-graph CSR gather path (not dense)
+    assert make_mixing_op(net).backend == "sparse_gather"
 
 
 def test_auto_prefers_dense_when_graph_is_dense():
@@ -239,22 +240,30 @@ def test_dagm_trajectory_pallas_backend():
                                atol=1e-5)
 
 
-def test_metrics_fn_still_receives_raw_w():
-    """The metrics_fn callback contract predates MixingOp: it gets the
-    raw (n, n) array, so existing callbacks using W @ x / jnp.diag(W)
-    keep working whatever the backend."""
+def test_metrics_fn_receives_mixing_op():
+    """Custom metrics callbacks get W exactly as configured — the
+    MixingOp under dagm_run — and can reach raw entries via as_matrix;
+    the default path no longer threads any (n, n) matrix through the
+    jitted scan (the dead-weight contract `default_metrics` never used)."""
+    import inspect
+    from repro.core.dagm import default_metrics
+    from repro.core.mixing import as_matrix
     n = 8
     net = make_network("ring", n)
     prob = quadratic_bilevel(n, 3, 4, seed=0)
 
     def metrics_fn(prob_, W, x, y):
-        return {"w_is_array": jnp.asarray(W.shape == (n, n)),
-                "gap": jnp.linalg.norm(W @ x)}
+        assert isinstance(W, MixingOp)
+        Wm = as_matrix(W)
+        return {"w_is_op": jnp.asarray(Wm.shape == (n, n)),
+                "gap": jnp.linalg.norm(Wm @ x)}
 
     cfg = DAGMConfig(alpha=0.05, beta=0.1, K=2, M=2, U=1, mixing="auto")
     res = dagm_run(prob, net, cfg, metrics_fn=metrics_fn)
-    assert bool(np.asarray(res.metrics["w_is_array"]).all())
+    assert bool(np.asarray(res.metrics["w_is_op"]).all())
     assert np.isfinite(np.asarray(res.metrics["gap"])).all()
+    # and default_metrics itself no longer takes a W parameter at all
+    assert "W" not in inspect.signature(default_metrics).parameters
 
 
 def test_baselines_accept_backend():

@@ -59,6 +59,41 @@ def test_mixing_kernel_matches_oracle(nb, db, seed, dtype):
                                np.asarray(want), atol=tol, rtol=tol)
 
 
+@given(n=st.integers(4, 24), r=st.floats(0.1, 0.9),
+       seed=st.integers(0, 10_000),
+       backend=st.sampled_from(["sparse_gather", "sparse_gather_pallas"]))
+@settings(**SETTINGS)
+def test_sparse_gather_matches_dense_on_random_graphs(n, r, seed, backend):
+    """Backend-agreement property (acceptance): the CSR gather backends
+    reproduce the dense matmul to 1e-5 on arbitrary Erdős–Rényi
+    topologies, for both W·y and (I−W)·y."""
+    net = mx.make_network("erdos_renyi", n, r=r, seed=seed)
+    op = mx.make_mixing_op(net, backend=backend)
+    y = jax.random.normal(jax.random.PRNGKey(seed), (n, 24))
+    W = net.W_jnp()
+    np.testing.assert_allclose(np.asarray(op.mix(y)),
+                               np.asarray(mx.mix_apply(W, y)),
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(op.laplacian(y)),
+                               np.asarray(mx.laplacian_apply(W, y)),
+                               atol=1e-5, rtol=1e-5)
+
+
+@given(n=st.integers(4, 20), seed=st.integers(0, 1000))
+@settings(**SETTINGS)
+def test_star_sparse_gather_matches_dense(n, seed):
+    """Same property on the federated (star) topology, whose hub row
+    stresses the padded-table path (k_max = n−1, leaves degree 1)."""
+    net = mx.make_network("star", n)
+    op = mx.make_mixing_op(net, backend="sparse_gather")
+    assert op.backend == "sparse_gather"
+    y = jax.random.normal(jax.random.PRNGKey(seed), (n, 16))
+    np.testing.assert_allclose(
+        np.asarray(op.laplacian(y)),
+        np.asarray(mx.laplacian_apply(net.W_jnp(), y)),
+        atol=1e-5, rtol=1e-5)
+
+
 @given(t_mult=st.integers(1, 4), chunk=st.sampled_from([4, 8, 16]),
        seed=st.integers(0, 100))
 @settings(**SETTINGS)

@@ -1,0 +1,316 @@
+"""repro.topology subsystem: CSR structure extraction, the irregular
+sparse-gather backends (XLA take/segment-sum + Pallas per-row gather)
+vs dense, auto-dispatch policy, bf16 mixing storage, and the
+`repro.core.mixing` compatibility shim."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (DAGMConfig, dagm_run, make_mixing_op, make_network,
+                        quadratic_bilevel)
+from repro.topology import (MixingOp, SparseStructure, fused_neumann_step,
+                            laplacian_apply, mix_apply, _neumann_update,
+                            resolve_mixing_dtype, sparse_structure)
+from repro.kernels.mixing_matvec import sparse_mix_matvec
+from repro.kernels.ref import sparse_mix_ref
+
+
+def _er(n, r=0.5, seed=0):
+    return make_network("erdos_renyi", n, r=r, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# Structure extraction
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind,kw", [("erdos_renyi", {"r": 0.5, "seed": 3}),
+                                     ("star", {}), ("complete", {}),
+                                     ("ring", {})])
+def test_sparse_structure_roundtrip(kind, kw):
+    """Both layouts (true CSR and padded fixed-degree tables)
+    reconstruct W exactly."""
+    net = make_network(kind, 16, **kw)
+    sp = sparse_structure(net.W)
+    assert isinstance(sp, SparseStructure)
+    n = net.n
+    W_csr = np.zeros((n, n))
+    W_csr[np.arange(n), np.arange(n)] = sp.w_self
+    W_csr[sp.row, sp.col] = sp.val
+    np.testing.assert_allclose(W_csr, net.W, atol=1e-6)
+    W_pad = np.zeros((n, n))
+    W_pad[np.arange(n), np.arange(n)] = sp.w_self
+    np.add.at(W_pad, (np.repeat(np.arange(n), sp.k),
+                      sp.neighbors.ravel()), sp.weights.ravel())
+    np.testing.assert_allclose(W_pad, net.W, atol=1e-6)
+    # row ids sorted (segment_sum contract), padding self-indexed with 0
+    assert np.all(np.diff(sp.row) >= 0)
+    assert sp.nnz == int(net.adj.sum())
+    pad = sp.weights == 0.0
+    rows = np.repeat(np.arange(n), sp.k).reshape(n, sp.k)
+    assert np.all(sp.neighbors[pad] == rows[pad])
+
+
+def test_sparse_structure_star_degrees():
+    """Star: hub row has n−1 neighbors, leaves 1 — k pads to n−1 but the
+    CSR nnz stays 2(n−1), which is what the XLA path's cost tracks."""
+    net = make_network("star", 10)
+    sp = sparse_structure(net.W)
+    assert sp.k == 9 and sp.nnz == 18
+    assert sp.work_ratio == pytest.approx(100 / 28.0)
+
+
+# ---------------------------------------------------------------------------
+# Backend agreement (acceptance: atol 1e-5 vs dense on ER r=0.5 + star)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind,kw", [("erdos_renyi", {"r": 0.5, "seed": 0}),
+                                     ("erdos_renyi", {"r": 0.1, "seed": 7}),
+                                     ("star", {})])
+@pytest.mark.parametrize("backend", ["sparse_gather", "sparse_gather_pallas"])
+@pytest.mark.parametrize("shape", [(16, 128), (16, 5), (16, 2, 64),
+                                   (12, 7, 3)])
+def test_sparse_backend_matches_dense(kind, kw, backend, shape):
+    net = make_network(kind, shape[0], **kw)
+    op = make_mixing_op(net, backend=backend)
+    y = jax.random.normal(jax.random.PRNGKey(sum(shape)), shape)
+    W = net.W_jnp()
+    np.testing.assert_allclose(np.asarray(op.mix(y)),
+                               np.asarray(mix_apply(W, y)),
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(op.laplacian(y)),
+                               np.asarray(laplacian_apply(W, y)),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_sparse_kernel_matches_csr_ref():
+    """Pallas per-row gather kernel == both XLA oracles (CSR
+    segment-sum and padded per-slot gather loop)."""
+    from repro.kernels.ref import sparse_mix_padded_ref
+    net = _er(24, r=0.3, seed=5)
+    sp = sparse_structure(net.W)
+    y = jax.random.normal(jax.random.PRNGKey(0), (24, 256))
+    for laplacian in (False, True):
+        got = sparse_mix_matvec(y, jnp.asarray(sp.w_self),
+                                jnp.asarray(sp.neighbors),
+                                jnp.asarray(sp.weights),
+                                laplacian=laplacian)
+        want = sparse_mix_ref(y, jnp.asarray(sp.w_self),
+                              jnp.asarray(sp.row), jnp.asarray(sp.col),
+                              jnp.asarray(sp.val), laplacian=laplacian)
+        padded = sparse_mix_padded_ref(y, jnp.asarray(sp.w_self),
+                                       jnp.asarray(sp.neighbors),
+                                       jnp.asarray(sp.weights),
+                                       laplacian=laplacian)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-5, rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(padded), np.asarray(want),
+                                   atol=1e-5, rtol=1e-5)
+
+
+def test_sparse_xla_formulation_choice():
+    """Near-regular graphs (ER) take the padded gather loop; skewed
+    ones (star) the CSR segment-sum — both behind "sparse_gather"."""
+    assert make_mixing_op(_er(16), backend="sparse_gather")._sp_use_padded
+    assert not make_mixing_op(make_network("star", 16),
+                              backend="sparse_gather")._sp_use_padded
+
+
+def test_sparse_backend_preserves_consensus():
+    net = _er(16)
+    op = make_mixing_op(net, backend="sparse_gather")
+    z = jnp.full((16, 8), 3.25)
+    np.testing.assert_allclose(np.asarray(op.mix(z)), 3.25, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(op.laplacian(z)), 0.0, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Dispatch policy
+# ---------------------------------------------------------------------------
+
+def test_auto_selects_sparse_gather_for_er_and_star():
+    assert make_mixing_op(_er(12)).backend == "sparse_gather"
+    assert make_mixing_op(make_network("star", 12)).backend \
+        == "sparse_gather"
+    # complete/uniform graphs do exactly n² MACs either way → dense
+    assert make_mixing_op(make_network("complete", 12)).backend == "dense"
+    assert make_mixing_op(make_network("uniform", 12)).backend == "dense"
+    # shift-invariant stays on the (index-free) circulant path
+    assert make_mixing_op(make_network("ring", 12)).backend == "circulant"
+
+
+def test_sparse_pallas_fallback_and_upgrade():
+    net = _er(16)
+    op = make_mixing_op(net, backend="sparse_gather_pallas")
+    assert op._resolve("sparse_gather_pallas",
+                       jnp.zeros((16, 128))) == "sparse_gather_pallas"
+    # non-tile shapes fall back to the CSR XLA path, not dense
+    assert op._resolve("sparse_gather_pallas",
+                       jnp.zeros((16, 5))) == "sparse_gather"
+    from repro.kernels import ops
+    auto = make_mixing_op(net)                  # auto → sparse_gather
+    y = jax.random.normal(jax.random.PRNGKey(0), (16, 256))
+    base = auto.laplacian(y)
+    assert auto._resolve("sparse_gather", y) == "sparse_gather"
+    explicit = make_mixing_op(net, backend="sparse_gather")
+    star = make_mixing_op(make_network("star", 16))   # auto, skewed
+    ops.use_pallas(True)
+    try:
+        assert auto._resolve("sparse_gather", y) == "sparse_gather_pallas"
+        up = auto.laplacian(y)
+        # skewed-degree graphs stay on CSR: the padded kernel would be
+        # O(n·k_max·d) = O(n²·d) on a star
+        assert star._resolve("sparse_gather", y) == "sparse_gather"
+        # explicitly requested sparse_gather stays differentiable XLA
+        assert explicit._resolve("sparse_gather", y) == "sparse_gather"
+        g = jax.grad(lambda z: jnp.sum(explicit.laplacian(z) ** 2))(y)
+        assert np.isfinite(np.asarray(g)).all()
+    finally:
+        ops.use_pallas(False)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(up),
+                               atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# bf16 mixing storage (DAGMConfig.mixing_dtype / ROADMAP bf16 item)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["dense", "sparse_gather",
+                                     "sparse_gather_pallas"])
+def test_bf16_storage_backends_agree(backend):
+    """All backends round the operand and result through bf16 and
+    accumulate in f32 — so they agree to ~1 bf16 ulp with each other and
+    to bf16 precision with the f32 dense reference."""
+    net = _er(16, r=0.4, seed=2)
+    y = jax.random.normal(jax.random.PRNGKey(1), (16, 256))
+    f32 = mix_apply(net.W_jnp(), y)
+    op = make_mixing_op(net, backend=backend, dtype="bf16")
+    got = op.mix(y)
+    assert got.dtype == y.dtype                 # returned in caller dtype
+    np.testing.assert_allclose(np.asarray(got), np.asarray(f32),
+                               atol=3e-2, rtol=3e-2)
+    ref_op = make_mixing_op(net, backend="dense", dtype="bf16")
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(ref_op.mix(y)),
+                               atol=1e-2, rtol=1e-2)
+
+
+def test_dagm_bf16_mixing_close_to_f32():
+    n = 12
+    net = _er(n, r=0.5, seed=1)
+    prob = quadratic_bilevel(n, 3, 4, seed=0, mu_f=0.4)
+    runs = {}
+    for dt in ("f32", "bf16"):
+        cfg = DAGMConfig(alpha=0.05, beta=0.1, K=15, M=5, U=3,
+                         mixing="sparse_gather", mixing_dtype=dt)
+        runs[dt] = np.asarray(dagm_run(prob, net, cfg).x)
+        assert np.isfinite(runs[dt]).all()
+    # bf16 gossip storage perturbs, but must track the f32 trajectory
+    np.testing.assert_allclose(runs["bf16"], runs["f32"],
+                               atol=5e-2, rtol=5e-2)
+
+
+def test_resolve_mixing_dtype_unifies_tiers():
+    from repro.distributed.dagm_sharded import ShardedDAGMConfig
+    assert resolve_mixing_dtype("f32") is None
+    assert resolve_mixing_dtype("bf16") == jnp.bfloat16
+    with pytest.raises(ValueError, match="unknown mixing dtype"):
+        resolve_mixing_dtype("fp8")
+    # the sharded tier's comm_dtype resolves through the same function
+    assert ShardedDAGMConfig(comm_dtype="bf16").comm_jnp_dtype \
+        == jnp.bfloat16
+    assert ShardedDAGMConfig().comm_jnp_dtype is None
+
+
+# ---------------------------------------------------------------------------
+# Fused Neumann step on the sparse tier
+# ---------------------------------------------------------------------------
+
+def test_fused_neumann_sparse_matches_dense():
+    n, d = 16, 64
+    net = _er(n, r=0.4, seed=4)
+    rng = np.random.default_rng(0)
+    h, hvp_h, p = (jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+                   for _ in range(3))
+    dsc = jnp.asarray(rng.uniform(1.5, 3.0, size=(n, 1)), jnp.float32)
+    want = _neumann_update(mix_apply(net.W_jnp(), h), h, hvp_h, p, dsc,
+                           0.2)
+    for backend in ("sparse_gather", "sparse_gather_pallas"):
+        op = make_mixing_op(net, backend=backend)
+        got = fused_neumann_step(op, h, hvp_h, p, dsc, 0.2)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end trajectory invariance on an irregular graph (acceptance)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind,kw", [("erdos_renyi", {"r": 0.5, "seed": 0}),
+                                     ("star", {})])
+def test_dagm_trajectory_backend_invariant_irregular(kind, kw):
+    """sparse_gather == dense end-to-end at atol 1e-5 on the paper's
+    irregular topologies (ER r=0.5, star)."""
+    n = 12
+    net = make_network(kind, n, **kw)
+    prob = quadratic_bilevel(n, 3, 4, seed=0, mu_f=0.4)
+    xs = {}
+    for backend in ("dense", "sparse_gather", "auto"):
+        cfg = DAGMConfig(alpha=0.05, beta=0.1, K=20, M=10, U=5,
+                         mixing=backend)
+        res = dagm_run(prob, net, cfg)
+        xs[backend] = np.asarray(res.x)
+        assert np.isfinite(xs[backend]).all()
+    np.testing.assert_allclose(xs["sparse_gather"], xs["dense"], atol=1e-5)
+    np.testing.assert_allclose(xs["auto"], xs["dense"], atol=1e-5)
+
+
+def test_dagm_trajectory_sparse_pallas_backend():
+    """sparse_gather_pallas == dense end-to-end with tile-friendly d1/d2
+    (the kernel runs inside the jitted scan)."""
+    n = 16
+    net = _er(n, r=0.5, seed=2)
+    prob = quadratic_bilevel(n, 128, 128, seed=2)
+    xs = {}
+    for backend in ("dense", "sparse_gather_pallas"):
+        cfg = DAGMConfig(alpha=0.05, beta=0.1, K=4, M=4, U=3,
+                         dihgp="matrix_free", curvature=4.0,
+                         mixing=backend)
+        xs[backend] = np.asarray(dagm_run(prob, net, cfg).x)
+    np.testing.assert_allclose(xs["sparse_gather_pallas"], xs["dense"],
+                               atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Shim stability: repro.core.mixing re-exports
+# ---------------------------------------------------------------------------
+
+def test_core_mixing_shim_reexports_topology():
+    """Every public name importable from repro.core.mixing before the
+    refactor still resolves — to the *same object* repro.topology owns."""
+    import repro.core.mixing as shim
+    import repro.topology as topo
+    names = [
+        # graphs
+        "ring_graph", "circulant_graph", "complete_graph", "star_graph",
+        "erdos_renyi_graph", "is_connected",
+        # weights + diagnostics
+        "metropolis_weights", "max_degree_weights", "uniform_averaging",
+        "mixing_rate", "self_weight_bounds", "neumann_rho",
+        "spectral_gap", "check_assumption_a",
+        # structure
+        "CirculantStructure", "circulant_structure",
+        "SparseStructure", "sparse_structure",
+        # network + backend
+        "Network", "make_network", "BACKENDS", "MixingOp",
+        "make_mixing_op", "as_matrix", "mix_apply", "laplacian_apply",
+        "fused_neumann_step", "_neumann_update", "resolve_mixing_dtype",
+    ]
+    for name in names:
+        assert getattr(shim, name) is getattr(topo, name), name
+    # and the package layers exist as documented
+    import repro.topology.graphs
+    import repro.topology.weights
+    import repro.topology.structure
+    import repro.topology.ops
+    assert shim.make_network is repro.topology.ops.make_network
