@@ -1,0 +1,224 @@
+"""Compressed-gossip benchmark: bytes-to-suboptimality on the quadratic
+bilevel problem (the repro.comm subsystem's acceptance harness).
+
+Sweeps compressor spec × topology through `dagm_run` and records, per
+run, the byte-accurate per-round traffic from the attached `CommLedger`
+together with the true suboptimality trajectory gap_k = ‖∇Φ(x̄_k)‖²
+(closed form: the quadratic problem's consensus inner solution is
+y*(x) = S x + t with S = Ā⁻¹P̄, t = Ā⁻¹b̄, so ∇Φ(x̄) =
+Sᵀ(y*(x̄) − c̄) + μ_f x̄ — one d2×d2 factorization for the whole trace).
+Derived per row:
+
+  * bytes_per_round / floats_per_round  — measured wire traffic,
+  * reduction_x                         — f32 bytes / wire bytes,
+  * final_gap, gap_vs_identity          — trajectory quality,
+  * bytes_to_target                     — cumulative bytes until the
+    gap first reaches 1.1× the *uncompressed* run's final gap (the
+    "matched final gap" column: compression only counts if it still
+    gets there).
+
+Headline (checked-in JSON, ring topology): int8+EF cuts bytes/round
+≈4× (3.98× exactly — the per-send bf16 scale+zero-point metadata is
+charged, so 8-bit payloads bound the ratio just under 4) and int4+EF
+7.9×, both at a final gap within 10% of the uncompressed run.
+
+The `lm_bf16_drift` section runs examples/train_lm_dagm.py twice
+(f32 vs bf16 gossip) in subprocesses at the smoke size and records the
+loss-curve delta — the measurement half of the ROADMAP bf16-drift item.
+
+Budgets: "smoke" (scripts/ci.sh tier 2: tiny dims, no LM subprocess,
+no JSON rewrite), "small" (checked-in results), "full" (adds star/
+larger-d2 rows).  JSON: benchmarks/results/bench_comm.json.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import DAGMConfig, dagm_run, make_network, \
+    quadratic_bilevel
+
+from .common import Row, timed
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results",
+                       "bench_comm.json")
+WIRE_SPECS = ("identity", "bf16", "int8", "int4", "top_k:0.1",
+              "rand_k:0.25")
+
+
+def _gap_trace(prob, xbar_trace: np.ndarray) -> np.ndarray:
+    """‖∇Φ(x̄_k)‖² for the whole (K, d1) trace, one factorization."""
+    d = prob.data
+    Abar = np.asarray(d["A"]).mean(0)
+    Pbar = np.asarray(d["P"]).mean(0)
+    bbar = np.asarray(d["b"]).mean(0)
+    cbar = np.asarray(d["c"]).mean(0)
+    S = np.linalg.solve(Abar, Pbar)                  # (d2, d1)
+    t = np.linalg.solve(Abar, bbar)                  # (d2,)
+    ystar = xbar_trace @ S.T + t                     # (K, d2)
+    # mu_f = 0.1: the quadratic_bilevel default (the per-run hypergrad
+    # cross-check in _dagm_case would catch a mismatch)
+    grad = (ystar - cbar) @ S + 0.1 * xbar_trace
+    return np.sum(grad ** 2, axis=-1)
+
+
+def _xbar_metrics(prob, W, x, y):
+    return {"xbar": jnp.mean(x, axis=0),
+            "outer_obj": jnp.mean(prob.f_stacked(x, y))}
+
+
+def _dagm_case(prob, net, spec: str, K: int, M: int, U: int,
+               curvature: float, seed: int = 0):
+    cfg = DAGMConfig(alpha=0.05, beta=0.1, K=K, M=M, U=U,
+                     dihgp="matrix_free", curvature=curvature,
+                     comm=spec)
+    # start far from stationarity (the default x0 = 0 is near the bias
+    # floor already) so the bytes-to-target curve has a real descent
+    x0 = jnp.broadcast_to(
+        2.0 * jax.random.normal(jax.random.PRNGKey(7), (prob.d1,)),
+        (prob.n, prob.d1)).astype(jnp.float32)
+    res, us = timed(lambda: dagm_run(prob, net, cfg, x0=x0,
+                                     metrics_fn=_xbar_metrics,
+                                     seed=seed), iters=1)
+    gaps = _gap_trace(prob, np.asarray(res.metrics["xbar"]))
+    # closed-form gap must agree with the problem's autodiff hypergrad
+    check = float(jnp.sum(
+        prob.hypergrad(jnp.asarray(res.metrics["xbar"][-1])) ** 2))
+    assert abs(check - gaps[-1]) <= 1e-4 * max(check, 1e-12) + 1e-8, \
+        (check, gaps[-1])
+    return res, us, gaps
+
+
+def _sweep(prob, net, specs, K, M, U, curvature, tag) -> list[Row]:
+    rows, runs = [], {}
+    for spec in specs:
+        res, us, gaps = _dagm_case(prob, net, spec, K, M, U, curvature)
+        runs[spec] = (res, us, gaps)
+    id_res, _, id_gaps = runs["identity"]
+    target = 1.1 * float(id_gaps[-1])
+    id_bpr = id_res.ledger.bytes_per_round(K)
+    for spec, (res, us, gaps) in runs.items():
+        bpr = res.ledger.bytes_per_round(K)
+        # bytes until the gap reaches the target *and stays there*
+        above = np.nonzero(gaps > target)[0]
+        if float(gaps[-1]) > target:
+            to_target = None
+        else:
+            k = 0 if above.size == 0 else int(above[-1]) + 1
+            to_target = int((k + 1) * bpr)
+        derived = {
+            "bytes_per_round": bpr,
+            "floats_per_round": res.ledger.floats_per_round(K),
+            "reduction_x": round(res.ledger.reduction_vs_f32(), 3),
+            "final_gap": f"{float(gaps[-1]):.3e}",
+            "gap_vs_identity": round(float(gaps[-1])
+                                     / max(float(id_gaps[-1]), 1e-30), 3),
+            "bytes_to_target": to_target,
+            "bytes_reduction_vs_identity": round(id_bpr / bpr, 3),
+        }
+        rows.append(Row(f"comm/{tag}/{spec}", us, derived))
+    return rows
+
+
+def _lm_drift_rows(rounds: int = 10) -> list[Row]:
+    """f32 vs bf16 gossip on the LM smoke run (ROADMAP bf16 item)."""
+    script = os.path.join(os.path.dirname(__file__), "..", "examples",
+                          "train_lm_dagm.py")
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = os.path.abspath(src) + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    out = {}
+    with tempfile.TemporaryDirectory() as td:
+        for dtype in ("f32", "bf16"):
+            path = os.path.join(td, f"lm_{dtype}.json")
+            proc = subprocess.run(
+                [sys.executable, script, "--rounds", str(rounds),
+                 "--mixing-dtype", dtype, "--json-out", path],
+                capture_output=True, text=True, env=env, timeout=1200)
+            if proc.returncode != 0:
+                return [Row("comm/lm_bf16_drift/ERROR", 0.0,
+                            {"stderr": proc.stderr[-200:]})]
+            with open(path) as f:
+                out[dtype] = json.load(f)
+    f32 = np.asarray(out["f32"]["outer_loss"])
+    b16 = np.asarray(out["bf16"]["outer_loss"])
+    return [Row("comm/lm_bf16_drift", 0.0, {
+        "rounds": rounds,
+        "max_abs_delta": f"{np.abs(f32 - b16).max():.2e}",
+        "final_delta": f"{abs(f32[-1] - b16[-1]):.2e}",
+        "final_f32": round(float(f32[-1]), 4),
+        "final_bf16": round(float(b16[-1]), 4),
+        "bytes_per_round_f32":
+            out["f32"]["ledger"]["bytes_per_round"],
+        "bytes_per_round_bf16":
+            out["bf16"]["ledger"]["bytes_per_round"],
+    })]
+
+
+def run(budget: str = "small") -> list[Row]:
+    rows = []
+    # ---- static wire table (exact per-send bytes at a d=1024 payload)
+    for spec in WIRE_SPECS:
+        from repro.comm import parse_comm_spec
+        comp = parse_comm_spec(spec).compressor
+        b = comp.payload_bytes((1024,))
+        rows.append(Row(f"comm/wire/{spec}", 0.0, {
+            "payload_bytes_d1024": b,
+            "reduction_vs_f32": round(4 * 1024 / b, 3)}))
+
+    curvature = 5.5          # quadratic_bilevel spectrum ⊂ [1, 5]
+    if budget == "smoke":
+        # scripts/ci.sh tier 2: every compressor row once, tiny dims,
+        # keep the checked-in JSON untouched
+        prob = quadratic_bilevel(8, 4, 32, seed=0)
+        net = make_network("ring", 8)
+        rows += _sweep(prob, net,
+                       ["identity", "bf16", "int8+ef", "top_k:0.25+ef",
+                        "rand_k:0.5+ef"],
+                       K=40, M=5, U=3, curvature=curvature,
+                       tag="ring_smoke")
+        return rows
+
+    # ---- headline: ring, LM-ish d2, full spec sweep ----
+    n, d1, d2, K, M, U = 8, 16, 1024, 300, 10, 3
+    prob = quadratic_bilevel(n, d1, d2, seed=0)
+    net = make_network("ring", n)
+    specs = ["identity", "bf16", "int8", "int8+ef", "int4+ef",
+             "top_k:0.1+ef", "rand_k:0.25+ef"]
+    rows += _sweep(prob, net, specs, K, M, U, curvature,
+                   tag=f"ring_n{n}_d{d2}")
+
+    # ---- irregular topology: Erdős–Rényi on the sparse-gather backend
+    prob_er = quadratic_bilevel(16, 8, 256, seed=1)
+    net_er = make_network("erdos_renyi", 16, r=0.3, seed=0)
+    rows += _sweep(prob_er, net_er, ["identity", "int8+ef", "int4+ef"],
+                   K=300, M=10, U=3, curvature=curvature,
+                   tag="er_n16_d256")
+
+    if budget == "full":
+        net_star = make_network("star", 16)
+        rows += _sweep(prob_er, net_star, ["identity", "int8+ef"],
+                       K=300, M=10, U=3, curvature=curvature,
+                       tag="star_n16_d256")
+
+    rows += _lm_drift_rows(rounds=10)
+
+    os.makedirs(os.path.dirname(RESULTS), exist_ok=True)
+    with open(RESULTS, "w") as f:
+        json.dump([{"name": r.name,
+                    "us_per_call": round(r.us_per_call, 1),
+                    "derived": r.derived} for r in rows], f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run(sys.argv[1] if len(sys.argv) > 1 else "small"):
+        print(row.csv())

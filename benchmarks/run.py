@@ -11,8 +11,9 @@ import argparse
 import sys
 import time
 
-from . import (bench_mixing, fig2_synthetic, fig3_real, fig4_hyperrep,
-               fig5_fairloss, roofline, table1_convergence, table2_comm)
+from . import (bench_comm, bench_mixing, fig2_synthetic, fig3_real,
+               fig4_hyperrep, fig5_fairloss, roofline,
+               table1_convergence, table2_comm)
 
 MODULES = {
     "table1": table1_convergence,
@@ -23,7 +24,13 @@ MODULES = {
     "fig5": fig5_fairloss,
     "roofline": roofline,
     "mixing": bench_mixing,
+    "comm": bench_comm,
 }
+
+# modules with a genuine cheap "smoke" tier (no JSON rewrite); the rest
+# branch small-vs-everything-else, so smoke must map to small there or
+# the cheapest request would run the full budget
+SMOKE_AWARE = ("mixing", "comm")
 
 
 def main(argv=None) -> int:
@@ -44,11 +51,8 @@ def main(argv=None) -> int:
                   f"{' '.join(MODULES)})")
             failures += 1
             continue
-        # only the mixing module has a distinct "smoke" tier; the others
-        # branch small-vs-everything-else, so smoke must map to small
-        # there or the cheapest request would run the full budget
         budget = args.budget
-        if budget == "smoke" and name != "mixing":
+        if budget == "smoke" and name not in SMOKE_AWARE:
             budget = "small"
         t0 = time.time()
         try:

@@ -30,8 +30,11 @@ cons = float(res.metrics["consensus_x"][-1])
 print(f"outer objective:    {obj[0]:.4f} -> {obj[-1]:.4f}")
 print(f"true ||∇Φ(x̄)||²:    {hg[0]:.2e} -> {hg[-1]:.2e}")
 print(f"consensus error:    {cons:.2e}")
-print(f"per-round comms:    {cfg.comm_vectors_per_round()} "
+led = res.ledger            # byte-accurate accounting from the run
+print(f"per-round comms:    {led.vectors_per_round(cfg.K)} "
       f"(vectors only — no matrices)")
+print(f"wire traffic:       {led.bytes_per_round(cfg.K):.0f} B/round "
+      f"per agent (comm={cfg.comm!r}; try comm='int8+ef')")
 # the residual is the O(alpha + sqrt(beta)) penalty bias (Thm 7); the
 # corollaries shrink alpha, beta with K to drive it to zero
 assert hg[-1] < 0.4 * hg[0], "DAGM should drive the hyper-gradient down"

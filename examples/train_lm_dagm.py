@@ -46,6 +46,18 @@ def main():
     ap.add_argument("--batch-per-agent", type=int, default=2)
     ap.add_argument("--n-domains", type=int, default=8)
     ap.add_argument("--het-q", type=float, default=0.5)
+    ap.add_argument("--mixing-dtype", default="f32",
+                    choices=["f32", "bf16"],
+                    help="gossip wire dtype (ShardedDAGMConfig"
+                         ".comm_dtype): bf16 halves ring traffic "
+                         "(ROADMAP bf16-drift study)")
+    ap.add_argument("--comm", default="identity",
+                    help="repro.comm gossip spec (identity | bf16 | "
+                         "int8[+ef] | int4[+ef] | top_k:<f>[+ef] | "
+                         "rand_k:<f>[+ef]); generalizes --mixing-dtype")
+    ap.add_argument("--json-out", default=None,
+                    help="write the loss history + comm ledger summary "
+                         "as JSON (benchmarks/bench_comm drift study)")
     args = ap.parse_args()
 
     n = len(jax.devices())
@@ -84,8 +96,13 @@ def main():
         return weighted_ce(x, y, batch["val"], False)
 
     dcfg = ShardedDAGMConfig(alpha=0.3, beta=0.1, M=2, U=2,
-                             curvature=8.0)
+                             curvature=8.0,
+                             comm_dtype=args.mixing_dtype,
+                             comm=args.comm)
     step, w = make_sharded_dagm(g_fn, f_fn, dcfg, mesh)
+    stochastic = dcfg.comm_policy.stochastic
+    print(f"[dagm-lm] gossip: {dcfg.comm_policy.spec} "
+          f"(mixing_dtype={args.mixing_dtype})")
 
     # ---- per-agent states + non-iid shards ----
     keys = jax.random.split(jax.random.PRNGKey(0), n)
@@ -110,7 +127,10 @@ def main():
     hist = []
     for k in range(args.rounds):
         batch = {"train": shard_batch(k, 0), "val": shard_batch(k, 1)}
-        x, y, m = step(x, y, batch)
+        if stochastic:
+            x, y, m = step(x, y, batch, jax.random.PRNGKey(1000 + k))
+        else:
+            x, y, m = step(x, y, batch)
         hist.append(float(m["outer_loss"]))
         if k % 5 == 0 or k == args.rounds - 1:
             print(f"[dagm-lm] round {k:3d} outer={hist[-1]:.4f} "
@@ -123,6 +143,18 @@ def main():
     print(f"[dagm-lm] outer loss {hist[0]:.4f} -> {hist[-1]:.4f} "
           f"(improved={hist[-1] < hist[0]})")
     assert np.isfinite(hist[-1])
+    if args.json_out:
+        import json
+        from repro.distributed.dagm_sharded import sharded_comm_ledger
+        local = jax.tree.map(lambda a: a[0], y)
+        led = sharded_comm_ledger(dcfg, x[0], local, rounds=args.rounds)
+        with open(args.json_out, "w") as f:
+            json.dump({"arch": cfg.name, "rounds": args.rounds,
+                       "comm": dcfg.comm_policy.spec,
+                       "mixing_dtype": args.mixing_dtype,
+                       "outer_loss": hist,
+                       "ledger": led.summary(args.rounds)}, f, indent=1)
+        print(f"[dagm-lm] wrote {args.json_out}")
     print("OK")
 
 

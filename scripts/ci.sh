@@ -30,3 +30,8 @@ echo "=== tier 2: bench smoke (mixing backends) ==="
 # sparse_gather / Pallas-interpret); does not rewrite the checked-in
 # benchmarks/results JSON
 python -m benchmarks.run --only mixing --budget smoke
+
+echo "=== tier 2: bench smoke (compressed gossip) ==="
+# one tiny DAGM pass per compressor family (identity / bf16 / int8+ef /
+# top_k+ef / rand_k+ef) with ledger byte accounting; no JSON rewrite
+python -m benchmarks.run --only comm --budget smoke

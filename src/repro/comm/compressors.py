@@ -1,0 +1,242 @@
+"""Gossip compressors — pure, jit-safe operators with exact wire sizes.
+
+Every cross-agent exchange in this codebase moves a stacked per-agent
+payload: row i of an (n, ...) array is what agent i broadcasts to its
+neighbors.  A `Compressor` simulates the compress→decompress roundtrip
+of that broadcast *in values* (the decoded array is what neighbors mix
+with) and reports the *exact* number of bytes one agent's message would
+occupy on the wire (`payload_bytes`) — the quantity `repro.comm.ledger
+.CommLedger` accumulates.  The simulation runs in the caller's dtype so
+reference-tier trajectories stay end-to-end differentiable-free f32;
+only the byte accounting changes with the compressor (an actual packed
+wire needs the Pallas fused quantize+gather kernel — ROADMAP follow-up).
+
+Contract
+--------
+* `roundtrip(x, key)` is row-wise: agent i's decoded message depends
+  only on row i (nothing cross-agent happens before the gossip).
+* `roundtrip` is jit-safe and shape-preserving; `key` is consumed only
+  when `stochastic` is True.
+* `payload_bytes(shape)` / `payload_floats(shape)` take the *per-agent*
+  payload shape (x.shape[1:]) and return static Python ints.
+* Unbiasedness: `rand_k` and the stochastic quantizers satisfy
+  E[roundtrip(x)] = x (up to the bf16 metadata rounding); `top_k` and
+  `bf16` are biased but contractive, which is what error feedback
+  (`repro.comm.feedback`) is for.
+
+Specs are strings so configs stay flat: ``identity`` | ``bf16`` |
+``int8`` | ``int4`` | ``top_k:<frac>`` | ``rand_k:<frac>``, each
+optionally suffixed ``+ef`` for CHOCO-style error feedback — parsed by
+`parse_comm_spec` into a `CommPolicy`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+F32_BYTES = 4
+BF16_BYTES = 2
+# quantizer metadata: per-row scale + zero-point, each transmitted bf16
+QUANT_META_BYTES = 2 * BF16_BYTES
+# rand_k regenerates indices from a shared PRNG stream; only a 4-byte
+# round tag crosses the wire alongside the values
+RANDK_META_BYTES = 4
+# top_k must ship explicit indices: int32 per surviving coordinate
+TOPK_INDEX_BYTES = 4
+
+
+def _payload_size(shape) -> int:
+    return int(math.prod(shape)) if shape else 1
+
+
+def _rows(x: Array) -> Array:
+    return x.reshape(x.shape[0], -1)
+
+
+@dataclasses.dataclass(frozen=True)
+class Compressor:
+    """Base: the identity wire (full-precision f32 vectors)."""
+    name: str = "identity"
+    stochastic: bool = False
+
+    def roundtrip(self, x: Array, key=None) -> Array:
+        return x
+
+    def payload_floats(self, shape) -> int:
+        return _payload_size(shape)
+
+    def payload_bytes(self, shape) -> int:
+        return F32_BYTES * _payload_size(shape)
+
+
+@dataclasses.dataclass(frozen=True)
+class Bf16Compressor(Compressor):
+    """Deterministic bfloat16 rounding of the wire copy (the compressed
+    gossip the sharded tier has shipped as `comm_dtype="bf16"`)."""
+    name: str = "bf16"
+
+    def roundtrip(self, x: Array, key=None) -> Array:
+        return x.astype(jnp.bfloat16).astype(x.dtype)
+
+    def payload_bytes(self, shape) -> int:
+        return BF16_BYTES * _payload_size(shape)
+
+
+@dataclasses.dataclass(frozen=True)
+class StochasticQuantCompressor(Compressor):
+    """`bits`-bit stochastic quantization, scale + zero-point per row.
+
+    Per agent row: zp = min, scale = (max − min)/(2^bits − 1), both
+    rounded through bf16 because that is what the wire carries; codes
+    q = ⌊(x − zp)/scale + u⌋ with u ~ U[0,1) are unbiased
+    (E⌊z + u⌋ = z), so E[decode] = x up to the bf16 metadata rounding.
+    The scale is inflated by one bf16 ulp before rounding so the top
+    code never clips by more than stochastic-rounding noise.
+    """
+    name: str = "int8"
+    stochastic: bool = True
+    bits: int = 8
+
+    def roundtrip(self, x: Array, key=None) -> Array:
+        levels = float(2 ** self.bits - 1)
+        flat = _rows(x).astype(jnp.float32)
+        zp = jnp.min(flat, axis=1, keepdims=True)
+        zp = zp.astype(jnp.bfloat16).astype(jnp.float32)
+        span = jnp.max(flat, axis=1, keepdims=True) - zp
+        scale = jnp.where(span > 0.0, span / levels, 1.0)
+        scale = (scale * (1.0 + 2.0 ** -7)).astype(jnp.bfloat16) \
+            .astype(jnp.float32)
+        u = jax.random.uniform(key, flat.shape, jnp.float32)
+        q = jnp.clip(jnp.floor((flat - zp) / scale + u), 0.0, levels)
+        return (zp + scale * q).astype(x.dtype).reshape(x.shape)
+
+    def payload_bytes(self, shape) -> int:
+        codes = math.ceil(_payload_size(shape) * self.bits / 8)
+        return codes + QUANT_META_BYTES
+
+
+def _k_of(frac: float, size: int) -> int:
+    return max(1, min(size, int(round(frac * size))))
+
+
+@dataclasses.dataclass(frozen=True)
+class TopKCompressor(Compressor):
+    """Keep the k = max(1, round(frac·F)) largest-magnitude coordinates
+    per row.
+
+    Biased (contractive: ‖x − C(x)‖² ≤ (1 − k/F)‖x‖²) — pair with
+    error feedback.  Wire: k f32 values + k int32 indices.
+    """
+    name: str = "top_k"
+    frac: float = 0.1
+
+    def roundtrip(self, x: Array, key=None) -> Array:
+        flat = _rows(x)
+        k = _k_of(self.frac, flat.shape[1])
+        _, idx = jax.lax.top_k(jnp.abs(flat), k)
+        rows = jnp.arange(flat.shape[0])[:, None]
+        out = jnp.zeros_like(flat).at[rows, idx].set(flat[rows, idx])
+        return out.reshape(x.shape)
+
+    def payload_bytes(self, shape) -> int:
+        k = _k_of(self.frac, _payload_size(shape))
+        return k * (F32_BYTES + TOPK_INDEX_BYTES)
+
+
+@dataclasses.dataclass(frozen=True)
+class RandKCompressor(Compressor):
+    """Keep k uniformly random coordinates per row.  Indices come from a
+    PRNG stream both endpoints can regenerate, so only the values (+ a
+    4-byte round tag) hit the wire.
+
+    `scale=True` rescales by F/k so E[C(x)] = x (unbiased direct
+    gossip).  Under error feedback the scaling must be OFF: F/k
+    inflation makes ‖C(x) − x‖² = (F/k − 1)‖x‖², an *expansion* for
+    k < F/2, which breaks the EF δ-contraction (and diverges in
+    practice); the unscaled selection is the standard (1 − k/F)
+    contraction — `parse_comm_spec` picks the right variant.
+    """
+    name: str = "rand_k"
+    stochastic: bool = True
+    frac: float = 0.25
+    scale: bool = True
+
+    def roundtrip(self, x: Array, key=None) -> Array:
+        flat = _rows(x)
+        n, size = flat.shape
+        k = _k_of(self.frac, size)
+        gain = (size / k) if self.scale else 1.0
+
+        def one(row, rk):
+            idx = jax.random.choice(rk, size, (k,), replace=False)
+            return jnp.zeros_like(row).at[idx].set(row[idx] * gain)
+        return jax.vmap(one)(flat, jax.random.split(key, n)) \
+            .reshape(x.shape)
+
+    def payload_bytes(self, shape) -> int:
+        k = _k_of(self.frac, _payload_size(shape))
+        return k * F32_BYTES + RANDK_META_BYTES
+
+
+def make_compressor(base: str) -> Compressor:
+    """Compressor from the base spec (no `+ef` suffix — see
+    `parse_comm_spec`)."""
+    if base in ("identity", "f32"):
+        return Compressor()
+    if base == "bf16":
+        return Bf16Compressor()
+    if base in ("int8", "int4"):
+        return StochasticQuantCompressor(name=base, bits=int(base[3:]))
+    for prefix, cls in (("top_k:", TopKCompressor),
+                        ("rand_k:", RandKCompressor)):
+        if base.startswith(prefix):
+            frac = float(base[len(prefix):])
+            if not 0.0 < frac <= 1.0:
+                raise ValueError(f"{prefix[:-1]} fraction must be in "
+                                 f"(0, 1], got {frac}")
+            return cls(frac=frac)
+    raise ValueError(
+        f"unknown compressor spec {base!r}; expected identity | bf16 | "
+        f"int8 | int4 | top_k:<frac> | rand_k:<frac> (optionally +ef)")
+
+
+@dataclasses.dataclass(frozen=True)
+class CommPolicy:
+    """A parsed comm spec: the compressor plus whether error feedback
+    wraps it.  This is the object `MixingOp` / the sharded collectives
+    carry; `is_identity` short-circuits every compressed path back to
+    today's exact gossip."""
+    spec: str
+    compressor: Compressor
+    ef: bool
+
+    @property
+    def is_identity(self) -> bool:
+        return self.compressor.name == "identity"
+
+    @property
+    def stochastic(self) -> bool:
+        return self.compressor.stochastic
+
+
+def parse_comm_spec(spec: str) -> CommPolicy:
+    """"<compressor>[+ef]" -> CommPolicy (see module docstring)."""
+    base, sep, opt = spec.partition("+")
+    if sep and opt != "ef":
+        raise ValueError(f"unknown comm option {opt!r} in {spec!r}; "
+                         f"the only modifier is '+ef'")
+    ef = opt == "ef"
+    comp = make_compressor(base)
+    if ef and comp.name == "identity":
+        raise ValueError("'identity+ef' is meaningless: error feedback "
+                         "compensates a lossy compressor")
+    if ef and isinstance(comp, RandKCompressor):
+        # EF needs the contractive (unscaled) selection — see the
+        # RandKCompressor docstring
+        comp = dataclasses.replace(comp, scale=False)
+    return CommPolicy(spec=spec, compressor=comp, ef=ef)

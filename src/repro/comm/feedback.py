@@ -1,0 +1,129 @@
+"""CHOCO-style error feedback: compress the *difference* to a local copy.
+
+The gossip protocol (cf. CHOCO-SGD, Koloskova et al.; C2DFB, Wen et
+al. 2024): every agent maintains `hat`, the replica of its own state
+that its neighbors currently hold.  Each exchange it transmits only the
+compressed innovation
+
+    q   = C(x − hat)          (what actually crosses the wire)
+    hat ← hat + q             (every endpoint applies the same update)
+
+and the mixing consumes `hat` — so compression error does not compound:
+the residual x − hat contracts geometrically for any contractive C
+(top-k, quantizers), which is the property `tests/test_properties.py`
+checks.  Without EF the payload is simply C(x) and `hat` stays a dummy
+scalar.
+
+`ChannelState` is the per-gossip-channel pytree threaded through the
+`lax.scan` / `fori_loop` bodies of `dagm_run`, the baselines and the
+sharded `ring_mix` path: the EF replica, the PRNG key for stochastic
+compressors, and a traced `sends` counter that `CommLedger` reads back
+after the run (that is how byte accounting reflects the *actual* number
+of compressor calls, loop trip counts included, instead of a
+hand-maintained dict).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .compressors import CommPolicy
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass
+class ChannelState:
+    """Functional state of one gossip channel (a pytree).
+
+    hat:   EF replica of the gossiped variable (zeros at channel open);
+           a dummy f32 scalar when the policy has no error feedback.
+    key:   PRNG key consumed by stochastic compressors (split per send).
+    sends: int32 scalar — number of gossip exchanges so far; traced, so
+           it counts through scan/fori_loop bodies.
+    name:  static channel label (ledger key).
+    """
+    hat: Any
+    key: Array
+    sends: Array
+    name: str = "channel"
+
+    def bump(self) -> "ChannelState":
+        return dataclasses.replace(self, sends=self.sends + 1)
+
+    def reset_hat(self) -> "ChannelState":
+        """Reopen the channel for a fresh variable (e.g. the DIHGP h
+        vector, re-initialized every outer round): neighbors' replicas
+        restart at zero, the send counter and key stream continue."""
+        return dataclasses.replace(
+            self, hat=jax.tree.map(jnp.zeros_like, self.hat))
+
+
+jax.tree_util.register_dataclass(
+    ChannelState, data_fields=["hat", "key", "sends"],
+    meta_fields=["name"])
+
+
+def channel_init(policy: CommPolicy, name: str, x, key: Array
+                 ) -> ChannelState:
+    """Open a gossip channel for variable template `x` (pytree allowed;
+    reference tier passes stacked (n, ...) arrays)."""
+    if policy.ef:
+        hat = jax.tree.map(jnp.zeros_like, x)
+    else:
+        hat = jnp.zeros((), jnp.float32)
+    return ChannelState(hat=hat, key=key,
+                        sends=jnp.zeros((), jnp.int32), name=name)
+
+
+def open_channels(op, templates: dict, seed: int) -> dict:
+    """One ledger-registered channel per {name: template} on a MixingOp,
+    with per-channel PRNG keys derived from `seed` on a stream disjoint
+    from the seed's other uses (the single key-derivation protocol
+    shared by `dagm_run` and the baselines)."""
+    ck = jax.random.fold_in(jax.random.PRNGKey(seed), 0x_C0_33)
+    return {name: op.comm_channel(name, x, jax.random.fold_in(ck, i))
+            for i, (name, x) in enumerate(templates.items())}
+
+
+def _split(policy: CommPolicy, st: ChannelState):
+    if policy.stochastic:
+        return jax.random.split(st.key)
+    return st.key, st.key
+
+
+def compressed_payload(policy: CommPolicy, x: Array, st: ChannelState
+                       ) -> tuple[Array, ChannelState]:
+    """Decoded message the neighbors receive for stacked x (n, ...),
+    plus the advanced channel state.  Identity short-circuits to the
+    exact payload (bit-identical gossip, counter still bumps)."""
+    if policy.is_identity:
+        return x, st.bump()
+    key, sub = _split(policy, st)
+    if policy.ef:
+        q = policy.compressor.roundtrip(x - st.hat, sub)
+        payload = st.hat + q
+        hat = payload
+    else:
+        payload = policy.compressor.roundtrip(x, sub)
+        hat = st.hat
+    return payload, dataclasses.replace(st, hat=hat, key=key,
+                                        sends=st.sends + 1)
+
+
+def compressed_payload_local(policy: CommPolicy, leaf: Array,
+                             hat_leaf, key) -> tuple[Array, Array]:
+    """Single-agent variant for the sharded tier: `leaf` is one agent's
+    local tensor (no stacked axis) and counts as one wire row.  Returns
+    (payload, new hat-leaf); the caller owns key splitting and the send
+    counter (one bump per exchange, not per leaf)."""
+    if policy.is_identity:
+        return leaf, hat_leaf
+    if policy.ef:
+        q = policy.compressor.roundtrip((leaf - hat_leaf)[None], key)[0]
+        payload = hat_leaf + q
+        return payload, payload
+    return policy.compressor.roundtrip(leaf[None], key)[0], hat_leaf

@@ -9,14 +9,17 @@ from .mixing import (Network, make_network, mixing_rate, spectral_gap,
                      mix_apply, laplacian_apply, check_assumption_a,
                      MixingOp, make_mixing_op, circulant_structure,
                      sparse_structure, SparseStructure,
-                     fused_neumann_step, as_matrix, resolve_mixing_dtype)
+                     fused_neumann_step, as_matrix, resolve_mixing_dtype,
+                     mix_apply_c, laplacian_apply_c, fused_neumann_step_c)
 from .problems import (BilevelProblem, quadratic_bilevel, ho_regression,
                        ho_logistic, ho_svm, ho_softmax,
                        hyper_representation, fair_loss_tuning)
 from .penalty import (F_objective, G_objective, grad_y_G, inner_dgd_step,
-                      penalized_hessian, exact_ihgp, surrogate_hypergrad,
-                      consensus_error)
-from .dihgp import dihgp_dense, dihgp_matrix_free, B_apply
-from .dagm import DAGMConfig, DAGMResult, dagm_run, dagm_outer_step
+                      inner_dgd_step_c, penalized_hessian, exact_ihgp,
+                      surrogate_hypergrad, consensus_error)
+from .dihgp import (dihgp_dense, dihgp_dense_c, dihgp_matrix_free,
+                    dihgp_matrix_free_c, B_apply, B_apply_c)
+from .dagm import (DAGMConfig, DAGMResult, dagm_run, dagm_outer_step,
+                   dagm_outer_step_c)
 from .baselines import (BaselineResult, dgbo_run, dgtbo_run, fednest_run,
                         madbo_run)

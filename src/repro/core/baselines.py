@@ -16,6 +16,16 @@ a `MixingOp` (the `mixing=` kwarg, default "auto"), so the baselines run
 on the same topology-aware sparse backend as DAGM — their Table 2 cost
 gap vs DAGM is in *what* they communicate (matrices), not in how the
 mixing is executed.
+
+Communication accounting is two-sided: `comm_floats_per_round` keeps
+the Appendix-S1 *closed forms* (what the papers charge), while
+`BaselineResult.ledger` is the `repro.comm.CommLedger` charged from the
+gossips this implementation *actually executes* — benchmarks/table2
+reports both, so the closed forms can genuinely disagree with the
+measurement (e.g. DGBO's Jacobian/extra-vector terms that this
+deterministic variant never ships).  The `comm=` kwarg compresses the
+gossips through the same channel protocol as DAGM (FedNest's star
+routing has no gossip to compress and gets a static ledger).
 """
 from __future__ import annotations
 
@@ -26,8 +36,10 @@ import jax
 import jax.numpy as jnp
 
 from .dagm import default_metrics
-from .mixing import (Network, laplacian_apply, make_mixing_op, mix_apply)
-from .penalty import inner_dgd_step
+from .dihgp import dihgp_dense_c
+from .mixing import (Network, laplacian_apply, laplacian_apply_c,
+                     make_mixing_op, mix_apply, mix_apply_c)
+from .penalty import inner_dgd_step, inner_dgd_step_c
 from .problems import BilevelProblem
 
 Array = jnp.ndarray
@@ -38,8 +50,17 @@ class BaselineResult:
     x: Array
     y: Array
     metrics: dict[str, Array]
-    comm_floats_per_round: int      # per-agent scalars sent per outer round
+    comm_floats_per_round: int      # per-agent scalars per outer round
+    #                                 (Appendix-S1 closed form)
     name: str = ""
+    ledger: "object | None" = None  # measured traffic (CommLedger)
+
+
+def _open_channels(W, templates: dict[str, Array], seed: int):
+    """Comm channels on the MixingOp, one per gossiped variable (the
+    shared key-derivation protocol lives in repro.comm)."""
+    from repro.comm import open_channels
+    return open_channels(W, templates, seed)
 
 
 def _run_scan(body, carry0, K):
@@ -59,32 +80,39 @@ def dgbo_run(prob: BilevelProblem, net: Network, *, alpha: float,
              x0: Array | None = None, y0: Array | None = None,
              seed: int = 0, mixing: str = "auto",
              mixing_interpret: bool = True,
-             mixing_dtype: str = "f32") -> BaselineResult:
+             mixing_dtype: str = "f32",
+             comm: str = "identity") -> BaselineResult:
     """Deterministic DGBO: gossip consensus on x, y, grads, Jacobians and
     a gossip+Neumann estimate of the *global mean* Hessian (d2×d2 matrix
     communication — the expensive part the paper improves on)."""
     W = make_mixing_op(net, backend=mixing, interpret=mixing_interpret,
-                       dtype=mixing_dtype)
+                       dtype=mixing_dtype, comm=comm)
     n, d1, d2 = prob.n, prob.d1, prob.d2
     if x0 is None:
         x0 = jnp.zeros((n, d1), jnp.float32)
     if y0 is None:
         y0 = 0.01 * jax.random.normal(jax.random.PRNGKey(seed), (n, d2))
+    cs0 = _open_channels(
+        W, {"inner_y": y0, "hess_nu": jnp.zeros((n, d2, d2)),
+            "outer_x": x0}, seed)
 
     def body(carry, _):
-        x, y = carry
+        (x, y), cs = carry
         # inner: gossip DGD on the *mean* inner objective (Steps 5)
-        def inner(t, yy):
-            return mix_apply(W, yy) - beta * prob.grad_y_g(x, yy)
-        y1 = jax.lax.fori_loop(0, M, inner, y)
+        def inner(t, c):
+            yy, st = c
+            mixed, st = mix_apply_c(W, yy, st)
+            return mixed - beta * prob.grad_y_g(x, yy), st
+        y1, y_st = jax.lax.fori_loop(0, M, inner, (y, cs["inner_y"]))
 
         # Hessian estimate via b gossip rounds on local Hessians (Steps
         # 10–13): nu_i ← Σ_j w_ij nu_j, starting from ∇²_y g_i.  After b
         # rounds nu_i ≈ mean Hessian; matrices are what gets communicated.
         nu = prob.hess_yy_g(x, y1)                       # (n, d2, d2)
-        def gossip_h(t, nu):
-            return mix_apply(W, nu)
-        nu = jax.lax.fori_loop(0, b, gossip_h, nu)
+        def gossip_h(t, c):
+            return mix_apply_c(W, c[0], c[1])
+        nu, nu_st = jax.lax.fori_loop(0, b, gossip_h,
+                                      (nu, cs["hess_nu"].reset_hat()))
 
         # per-agent Neumann-style solve with the estimated global Hessian
         p = prob.grad_y_f(x, y1)
@@ -92,14 +120,18 @@ def dgbo_run(prob: BilevelProblem, net: Network, *, alpha: float,
             nu + 1e-6 * jnp.eye(d2, dtype=nu.dtype), p)
         # hyper-gradient + gossip consensus step on x (Step 4)
         d = prob.grad_x_f(x, y1) + prob.cross_xy_g_times(x, y1, h)
-        x1 = mix_apply(W, x) - alpha * d
-        return (x1, y1), default_metrics(prob, x, y1)
+        mixed_x, x_st = mix_apply_c(W, x, cs["outer_x"])
+        x1 = mixed_x - alpha * d
+        cs = {"inner_y": y_st, "hess_nu": nu_st, "outer_x": x_st}
+        return ((x1, y1), cs), default_metrics(prob, x, y1)
 
-    (x, y), metrics = _run_scan(body, (x0, y0), K)
+    ((x, y), cs), metrics = _run_scan(body, ((x0, y0), cs0), K)
+    W.ledger.charge_states(cs.values())
     # per-agent floats per round: x,y,grad-est vectors + b Hessian matrices
     # + one d1×d2 Jacobian (Appendix S1: K(b d2² + 2(d1+d2) + d1 d2))
     comm = b * d2 * d2 + 2 * (d1 + d2) + d1 * d2 + M * d2
-    return BaselineResult(x, y, metrics, comm, name="DGBO")
+    return BaselineResult(x, y, metrics, comm, name="DGBO",
+                          ledger=W.ledger)
 
 
 # ---------------------------------------------------------------------------
@@ -112,16 +144,20 @@ def dgtbo_run(prob: BilevelProblem, net: Network, *, alpha: float,
               x0: Array | None = None, y0: Array | None = None,
               seed: int = 0, mixing: str = "auto",
               mixing_interpret: bool = True,
-              mixing_dtype: str = "f32") -> BaselineResult:
+              mixing_dtype: str = "f32",
+              comm: str = "identity") -> BaselineResult:
     """Deterministic DGTBO: JHIP solves Z ≈ −J H^{-1} (d1×d2) by N
     decentralized Richardson iterations, each gossiping the full Z matrix."""
     W = make_mixing_op(net, backend=mixing, interpret=mixing_interpret,
-                       dtype=mixing_dtype)
+                       dtype=mixing_dtype, comm=comm)
     n, d1, d2 = prob.n, prob.d1, prob.d2
     if x0 is None:
         x0 = jnp.zeros((n, d1), jnp.float32)
     if y0 is None:
         y0 = 0.01 * jax.random.normal(jax.random.PRNGKey(seed), (n, d2))
+    cs0 = _open_channels(
+        W, {"inner_y": y0, "jhip_z": jnp.zeros((n, d1, d2)),
+            "outer_x": x0}, seed)
 
     def cross_jac(x, y):
         """(n, d1, d2) full local Jacobians ∇²_xy g_i (what JHIP needs)."""
@@ -132,10 +168,12 @@ def dgtbo_run(prob: BilevelProblem, net: Network, *, alpha: float,
         return jax.vmap(one)(x, y, prob.data)
 
     def body(carry, _):
-        x, y = carry
-        def inner(t, yy):           # gossip DGD inner loop (Steps 8–9)
-            return mix_apply(W, yy) - beta * prob.grad_y_g(x, yy)
-        y1 = jax.lax.fori_loop(0, M, inner, y)
+        (x, y), cs = carry
+        def inner(t, c):            # gossip DGD inner loop (Steps 8–9)
+            yy, st = c
+            mixed, st = mix_apply_c(W, yy, st)
+            return mixed - beta * prob.grad_y_g(x, yy), st
+        y1, y_st = jax.lax.fori_loop(0, M, inner, (y, cs["inner_y"]))
 
         Hg = prob.hess_yy_g(x, y1)                      # (n,d2,d2) local
         Jg = cross_jac(x, y1)                           # (n,d1,d2) local
@@ -143,21 +181,27 @@ def dgtbo_run(prob: BilevelProblem, net: Network, *, alpha: float,
         # iterations with gossip averaging of Z (matrix communication).
         lam = 1.0 / (1.0 + jnp.max(jnp.abs(Hg)))
         Z = jnp.zeros((n, d1, d2), Jg.dtype)
-        def jhip(t, Z):
+        def jhip(t, c):
+            Z, st = c
             R = Jg - jnp.einsum("nij,njk->nik", Z, Hg)  # local residual
             Z = Z + lam * R
-            return mix_apply(W, Z)                      # gossip Z (d1·d2)
-        Z = jax.lax.fori_loop(0, N, jhip, Z)
+            return mix_apply_c(W, Z, st)                # gossip Z (d1·d2)
+        Z, z_st = jax.lax.fori_loop(0, N, jhip,
+                                    (Z, cs["jhip_z"].reset_hat()))
 
         p = prob.grad_y_f(x, y1)
         d = prob.grad_x_f(x, y1) - jnp.einsum("nij,nj->ni", Z, p)
-        x1 = mix_apply(W, x) - alpha * d
-        return (x1, y1), default_metrics(prob, x, y1)
+        mixed_x, x_st = mix_apply_c(W, x, cs["outer_x"])
+        x1 = mixed_x - alpha * d
+        cs = {"inner_y": y_st, "jhip_z": z_st, "outer_x": x_st}
+        return ((x1, y1), cs), default_metrics(prob, x, y1)
 
-    (x, y), metrics = _run_scan(body, (x0, y0), K)
+    ((x, y), cs), metrics = _run_scan(body, ((x0, y0), cs0), K)
+    W.ledger.charge_states(cs.values())
     # Appendix S1: K n (M d2 + d1 + n N d1 d2) / n per agent per round:
     comm = M * d2 + d1 + N * d1 * d2
-    return BaselineResult(x, y, metrics, comm, name="DGTBO")
+    return BaselineResult(x, y, metrics, comm, name="DGTBO",
+                          ledger=W.ledger)
 
 
 # ---------------------------------------------------------------------------
@@ -207,8 +251,16 @@ def fednest_run(prob: BilevelProblem, net: Network | None, *, alpha: float,
     (x, y), metrics = _run_scan(body, (xg, yg), K)
     # per client per round: M+U+2 vector up/downs through the center
     comm = 2 * ((M + 1) * d2 + (U + 1) * d2 + d1)
+    # star routing never touches a MixingOp — static ledger describing
+    # the up+down transfers the simulation's means stand in for
+    from repro.comm import static_ledger
+    ledger = static_ledger("identity", [
+        ("inner_updown", (d2,), K * 2 * (M + 1)),
+        ("ihgp_updown", (d2,), K * 2 * (U + 1)),
+        ("outer_updown", (d1,), K * 2),
+    ], name="fednest")
     return BaselineResult(stacked(x), stacked(y), metrics, comm,
-                          name="FedNest")
+                          name="FedNest", ledger=ledger)
 
 
 # ---------------------------------------------------------------------------
@@ -222,30 +274,40 @@ def madbo_run(prob: BilevelProblem, net: Network, *, alpha: float,
               y0: Array | None = None, seed: int = 0,
               mixing: str = "auto",
               mixing_interpret: bool = True,
-              mixing_dtype: str = "f32") -> BaselineResult:
-    from .dihgp import dihgp_dense
+              mixing_dtype: str = "f32",
+              comm: str = "identity") -> BaselineResult:
     W = make_mixing_op(net, backend=mixing, interpret=mixing_interpret,
-                       dtype=mixing_dtype)
+                       dtype=mixing_dtype, comm=comm)
     n, d1, d2 = prob.n, prob.d1, prob.d2
     if x0 is None:
         x0 = jnp.zeros((n, d1), jnp.float32)
     if y0 is None:
         y0 = 0.01 * jax.random.normal(jax.random.PRNGKey(seed), (n, d2))
     v0 = jnp.zeros_like(x0)
+    cs0 = _open_channels(
+        W, {"inner_y": y0, "dihgp_h": y0, "lap_x": x0, "tracker_v": v0},
+        seed)
 
     def body(carry, _):
-        x, y, v = carry
-        def inner(t, yy):
-            return inner_dgd_step(prob, W, beta, x, yy)
-        y1 = jax.lax.fori_loop(0, M, inner, y)
-        h = dihgp_dense(prob, W, beta, x, y1, U)
-        d = laplacian_apply(W, x) / alpha + prob.grad_x_f(x, y1) \
+        (x, y, v), cs = carry
+        def inner(t, c):
+            yy, st = c
+            return inner_dgd_step_c(prob, W, beta, x, yy, st)
+        y1, y_st = jax.lax.fori_loop(0, M, inner, (y, cs["inner_y"]))
+        h, h_st = dihgp_dense_c(prob, W, beta, x, y1, U,
+                                cs["dihgp_h"].reset_hat())
+        lap_x, lx_st = laplacian_apply_c(W, x, cs["lap_x"])
+        d = lap_x / alpha + prob.grad_x_f(x, y1) \
             + beta * prob.cross_xy_g_times(x, y1, h)
         v1 = momentum * v + (1.0 - momentum) * d
-        v1 = mix_apply(W, v1)                      # gossip the tracker
+        v1, v_st = mix_apply_c(W, v1, cs["tracker_v"])   # gossip tracker
         x1 = x - alpha * v1
-        return (x1, y1, v1), default_metrics(prob, x, y1)
+        cs = {"inner_y": y_st, "dihgp_h": h_st, "lap_x": lx_st,
+              "tracker_v": v_st}
+        return ((x1, y1, v1), cs), default_metrics(prob, x, y1)
 
-    (x, y, _), metrics = _run_scan(body, (x0, y0, v0), K)
+    ((x, y, _), cs), metrics = _run_scan(body, ((x0, y0, v0), cs0), K)
+    W.ledger.charge_states(cs.values())
     comm = M * d2 + U * d2 + 2 * d1            # extra d1 for the tracker
-    return BaselineResult(x, y, metrics, comm, name="MA-DBO")
+    return BaselineResult(x, y, metrics, comm, name="MA-DBO",
+                          ledger=W.ledger)

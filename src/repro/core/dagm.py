@@ -20,15 +20,18 @@ connected W); the pod-scale sharded version lives in
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from functools import partial
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
-from .dihgp import dihgp_dense, dihgp_matrix_free
-from .mixing import (Network, laplacian_apply, make_mixing_op, mix_apply)
-from .penalty import consensus_error, inner_dgd_step
+from .dihgp import (dihgp_dense, dihgp_dense_c, dihgp_matrix_free,
+                    dihgp_matrix_free_c)
+from .mixing import (Network, laplacian_apply, laplacian_apply_c,
+                     make_mixing_op, mix_apply)
+from .penalty import consensus_error, inner_dgd_step, inner_dgd_step_c
 from .problems import BilevelProblem
 
 Array = jnp.ndarray
@@ -60,10 +63,55 @@ class DAGMConfig:
     #                              twin of ShardedDAGMConfig.comm_dtype
     #                              (shared vocabulary:
     #                              topology.resolve_mixing_dtype)
+    comm: str = "identity"       # repro.comm gossip spec: "identity" |
+    #                              "bf16" | "int8[+ef]" | "int4[+ef]" |
+    #                              "top_k:<frac>[+ef]" |
+    #                              "rand_k:<frac>[+ef]" — compresses
+    #                              every neighbor exchange (inner DGD,
+    #                              DIHGP, outer step) and generalizes
+    #                              mixing_dtype ("bf16" here quantizes
+    #                              only the wire copy; mixing_dtype
+    #                              additionally rounds storage).
+    #                              "identity" is bit-exact with the
+    #                              uncompressed trajectories.
+
+    def comm_channels(self, d1: int, d2: int) -> list[tuple]:
+        """(name, per-agent payload shape, sends per outer round) for
+        the three Algorithm-2 gossip channels.  The `dihgp="exact"`
+        backend solves densely and never gossips h — the hand-kept
+        Appendix-S1 dict used to charge it U exchanges anyway."""
+        h_sends = 0 if self.dihgp == "exact" else self.U
+        return [("inner_y", (d2,), self.M),
+                ("dihgp_h", (d2,), h_sends),
+                ("outer_x", (d1,), 1)]
+
+    def comm_ledger(self, d1: int, d2: int, rounds: int | None = None):
+        """Static CommLedger preview for this config (the measured
+        ledger attached to `DAGMResult` is charged from the actual
+        traced send counters and must agree — tested)."""
+        from repro.comm import static_ledger
+        K = self.K if rounds is None else rounds
+        return static_ledger(
+            self.comm, [(name, shape, K * sends) for name, shape, sends
+                        in self.comm_channels(d1, d2)], name="dagm")
 
     def comm_vectors_per_round(self) -> dict[str, int]:
-        """Per-agent vector exchanges per outer round (Appendix S1)."""
-        return {"inner_d2": self.M, "dihgp_d2": self.U, "outer_d1": 1}
+        """Deprecated: per-agent vector exchanges per outer round.
+
+        Kept for Appendix-S1 compatibility (legacy key names); now
+        derived from `comm_channels` instead of a hand-kept dict, so it
+        honours the configured dihgp backend.  Prefer
+        `comm_ledger(d1, d2)` which also knows payload shapes and wire
+        bytes."""
+        warnings.warn(
+            "DAGMConfig.comm_vectors_per_round() is deprecated; use "
+            "DAGMConfig.comm_ledger(d1, d2) / DAGMResult.ledger",
+            DeprecationWarning, stacklevel=2)
+        sends = {name: per_round for name, _, per_round
+                 in self.comm_channels(1, 1)}
+        return {"inner_d2": sends["inner_y"],
+                "dihgp_d2": sends["dihgp_h"],
+                "outer_d1": sends["outer_x"]}
 
 
 @dataclasses.dataclass
@@ -71,6 +119,8 @@ class DAGMResult:
     x: Array                     # final stacked outer iterates (n, d1)
     y: Array                     # final stacked inner iterates (n, d2)
     metrics: dict[str, Array]    # per-outer-iteration traces, length K
+    ledger: "object | None" = None   # repro.comm.CommLedger charged from
+    #                                  the run's traced send counters
 
 
 def hypergrad_estimate(prob: BilevelProblem, W, cfg: DAGMConfig,
@@ -107,6 +157,30 @@ def default_metrics(prob: BilevelProblem, x: Array, y: Array
     return m
 
 
+def hypergrad_estimate_c(prob: BilevelProblem, W, cfg: DAGMConfig,
+                         x: Array, y: Array, h_st, x_st):
+    """`hypergrad_estimate` with both gossips (the U DIHGP exchanges of
+    h and the single (I−Ẃ)x exchange) routed through their compressed
+    channels.  Returns (∇̂F, h-channel state, x-channel state)."""
+    if cfg.dihgp == "dense":
+        h, h_st = dihgp_dense_c(prob, W, cfg.beta, x, y, cfg.U, h_st)
+    elif cfg.dihgp == "matrix_free":
+        hvp = lambda v: prob.hvp_yy_g(x, y, v)
+        curv = None if cfg.curvature is None else \
+            jnp.full((prob.n,), cfg.curvature, jnp.float32)
+        h, h_st = dihgp_matrix_free_c(hvp, prob.grad_y_f(x, y), W,
+                                      cfg.beta, cfg.U, h_st,
+                                      curvature=curv)
+    elif cfg.dihgp == "exact":
+        from .penalty import exact_ihgp
+        h = exact_ihgp(prob, W, cfg.beta, x, y)
+    else:
+        raise ValueError(f"unknown dihgp backend {cfg.dihgp!r}")
+    lap_x, x_st = laplacian_apply_c(W, x, x_st)
+    return lap_x / cfg.alpha + prob.grad_x_f(x, y) \
+        + cfg.beta * prob.cross_xy_g_times(x, y, h), h_st, x_st
+
+
 def dagm_outer_step(prob: BilevelProblem, W, cfg: DAGMConfig,
                     x: Array, y: Array,
                     metrics_fn: Callable | None = None):
@@ -130,6 +204,37 @@ def dagm_outer_step(prob: BilevelProblem, W, cfg: DAGMConfig,
     return x_next, y_tilde, metrics
 
 
+def dagm_outer_step_c(prob: BilevelProblem, W, cfg: DAGMConfig,
+                      x: Array, y: Array, cs: dict,
+                      metrics_fn: Callable | None = None):
+    """One outer iteration with every gossip on its comm channel.
+
+    `cs` maps {"inner_y", "dihgp_h", "outer_x"} to ChannelStates; with
+    `comm="identity"` each exchange short-circuits to exactly the
+    uncompressed op, so this is bit-identical to `dagm_outer_step`
+    (regression-tested) while the send counters still tick."""
+    # the DIHGP h vector is re-initialized every round: neighbors'
+    # error-feedback replicas restart at zero with it
+    cs = dict(cs, dihgp_h=cs["dihgp_h"].reset_hat())
+
+    def inner(t, carry):
+        yy, st = carry
+        return inner_dgd_step_c(prob, W, cfg.beta, x, yy, st)   # Eq. 16
+    y_tilde, y_st = jax.lax.fori_loop(0, cfg.M, inner,
+                                      (y, cs["inner_y"]))       # lines 4–9
+    d, h_st, x_st = hypergrad_estimate_c(prob, W, cfg, x, y_tilde,
+                                         cs["dihgp_h"],
+                                         cs["outer_x"])         # lines 10–12
+    x_next = x - cfg.alpha * d                                  # line 13
+    if metrics_fn is None:
+        metrics = default_metrics(prob, x, y_tilde)
+    else:
+        metrics = metrics_fn(prob, W, x, y_tilde)
+    metrics["hypergrad_est_norm_sq"] = jnp.sum(d ** 2)
+    return x_next, y_tilde, metrics, \
+        {"inner_y": y_st, "dihgp_h": h_st, "outer_x": x_st}
+
+
 def dagm_run(prob: BilevelProblem, net: Network, cfg: DAGMConfig,
              x0: Array | None = None, y0: Array | None = None,
              metrics_fn: Callable | None = None, seed: int = 0
@@ -137,33 +242,54 @@ def dagm_run(prob: BilevelProblem, net: Network, cfg: DAGMConfig,
     """Run K outer iterations of Algorithm 2 (reference tier).
 
     `cfg.mixing` picks the MixingOp backend once, here; every W·y /
-    (I−W)·y below (inner DGD, DIHGP, outer step, metrics) runs on it."""
+    (I−W)·y below (inner DGD, DIHGP, outer step, metrics) runs on it,
+    and `cfg.comm` wraps each of those gossips in the compressed
+    channel protocol.  The returned `DAGMResult.ledger` holds the
+    byte-accurate traffic accounting charged from the run itself."""
+    if cfg.comm != "identity" and cfg.dihgp == "exact":
+        raise ValueError(
+            "dihgp='exact' solves the penalized system densely and has "
+            "no gossip to compress; use 'dense' or 'matrix_free' with "
+            f"comm={cfg.comm!r}")
     W = make_mixing_op(net, backend=cfg.mixing,
                        interpret=cfg.mixing_interpret,
-                       dtype=cfg.mixing_dtype)
+                       dtype=cfg.mixing_dtype, comm=cfg.comm)
     key = jax.random.PRNGKey(seed)
     if x0 is None:   # paper's analysis assumes x_0 = 0
         x0 = jnp.zeros((prob.n, prob.d1), jnp.float32)
     if y0 is None:
         y0 = 0.01 * jax.random.normal(key, (prob.n, prob.d2), jnp.float32)
 
+    # comm channels: keys on a stream disjoint from y0's above
+    from repro.comm import open_channels
+    cs0 = open_channels(
+        W, {"inner_y": y0, "dihgp_h": y0, "outer_x": x0}, seed)
+
     def body(carry, _):
-        x, y = carry
-        x, y, m = dagm_outer_step(prob, W, cfg, x, y, metrics_fn)
-        return (x, y), m
+        (x, y), cs = carry
+        x, y, m, cs = dagm_outer_step_c(prob, W, cfg, x, y, cs,
+                                        metrics_fn)
+        return ((x, y), cs), m
 
     @jax.jit
-    def run(x0, y0):
-        return jax.lax.scan(body, (x0, y0), None, length=cfg.K)
+    def run(x0, y0, cs0):
+        return jax.lax.scan(body, ((x0, y0), cs0), None, length=cfg.K)
 
-    (x, y), metrics = run(x0, y0)
-    return DAGMResult(x=x, y=y, metrics=metrics)
+    ((x, y), cs), metrics = run(x0, y0, cs0)
+    W.ledger.charge_states(cs.values())
+    return DAGMResult(x=x, y=y, metrics=metrics, ledger=W.ledger)
 
 
 def dagm_comm_bytes(cfg: DAGMConfig, net: Network, d1: int, d2: int,
                     bytes_per: int = 4) -> int:
-    """Total bytes moved over K rounds: each agent sends its vector to
-    every neighbor each exchange ⇒ 2·|E| directed sends per exchange."""
-    sends = 2 * net.num_edges
-    per_round = (cfg.M * d2 + cfg.U * d2 + d1) * sends
-    return cfg.K * per_round * bytes_per
+    """Total bytes moved over K rounds: each agent sends its payload to
+    every neighbor each exchange ⇒ 2·|E| directed sends per exchange.
+
+    Computed from the config's CommLedger; `bytes_per` scales the
+    uncompressed word size (legacy knob) and is ignored once a real
+    compressor sets the wire format."""
+    led = cfg.comm_ledger(d1, d2)
+    sends = led.network_multiplier(net.num_edges)
+    if cfg.comm == "identity":
+        return led.total_floats * bytes_per * sends
+    return led.total_bytes * sends

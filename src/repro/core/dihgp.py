@@ -39,7 +39,8 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
-from .mixing import as_matrix, fused_neumann_step, mix_apply
+from .mixing import (as_matrix, fused_neumann_step, fused_neumann_step_c,
+                     mix_apply, mix_apply_c)
 from .problems import BilevelProblem
 
 Array = jnp.ndarray
@@ -52,6 +53,15 @@ def B_apply(W, h: Array) -> Array:
     diag_w = jnp.diag(as_matrix(W)).astype(h.dtype)
     expand = (slice(None),) + (None,) * (h.ndim - 1)
     return h - 2.0 * diag_w[expand] * h + mix_apply(W, h)
+
+
+def B_apply_c(W, h: Array, st):
+    """Compressed-channel twin of `B_apply`: only the W·h term crosses
+    the wire.  Returns (B h, channel state)."""
+    diag_w = jnp.diag(as_matrix(W)).astype(h.dtype)
+    expand = (slice(None),) + (None,) * (h.ndim - 1)
+    mixed, st = mix_apply_c(W, h, st)
+    return h - 2.0 * diag_w[expand] * h + mixed, st
 
 
 def dihgp_dense(prob: BilevelProblem, W, beta: float,
@@ -71,6 +81,26 @@ def dihgp_dense(prob: BilevelProblem, W, beta: float,
         b = B_apply(W, h) - p                                  # lines 6–7
         return solve(chol, b)                                  # line 8
     return jax.lax.fori_loop(0, U, body, h)
+
+
+def dihgp_dense_c(prob: BilevelProblem, W, beta: float,
+                  x: Array, y: Array, U: int, st):
+    """`dihgp_dense` with the per-iteration neighbor exchange routed
+    through a compressed gossip channel.  Returns (h_(U), state)."""
+    diag_w = jnp.diag(as_matrix(W)).astype(y.dtype)
+    Hg = prob.hess_yy_g(x, y)
+    eye = jnp.eye(y.shape[1], dtype=y.dtype)
+    D = beta * Hg + 2.0 * (1.0 - diag_w)[:, None, None] * eye
+    chol = jax.vmap(jnp.linalg.cholesky)(D)
+    solve = jax.vmap(lambda c, b: jax.scipy.linalg.cho_solve((c, True), b))
+    p = prob.grad_y_f(x, y)
+
+    h = solve(chol, -p)
+    def body(s, carry):
+        h, st = carry
+        b, st = B_apply_c(W, h, st)
+        return solve(chol, b - p), st
+    return jax.lax.fori_loop(0, U, body, (h, st))
 
 
 def neumann_truncation_error(prob: BilevelProblem, W: Array, beta: float,
@@ -137,6 +167,24 @@ def dihgp_matrix_free(hvp: Callable[[Array], Array], p: Array, W,
     def body(s, h):
         return fused_neumann_step(W, h, hvp(h), p, d_scalar, beta)
     return jax.lax.fori_loop(0, U, body, h)
+
+
+def dihgp_matrix_free_c(hvp: Callable[[Array], Array], p: Array, W,
+                        beta: float, U: int, st,
+                        curvature: Array | None = None):
+    """`dihgp_matrix_free` with the per-iteration W·h exchange routed
+    through a compressed gossip channel.  Returns (h_(U), state)."""
+    diag_w = jnp.diag(as_matrix(W)).astype(p.dtype)
+    if curvature is None:
+        curvature = estimate_curvature_bound(hvp, p.shape, p.dtype)
+    expand = (slice(None),) + (None,) * (p.ndim - 1)
+    d_scalar = (beta * curvature + 2.0 * (1.0 - diag_w))[expand]
+
+    h = -p / d_scalar
+    def body(s, carry):
+        h, st = carry
+        return fused_neumann_step_c(W, h, hvp(h), p, d_scalar, beta, st)
+    return jax.lax.fori_loop(0, U, body, (h, st))
 
 
 def dihgp_comm_vectors(U: int) -> int:

@@ -29,6 +29,8 @@ from repro.topology import (                                 # noqa: F401
     BACKENDS, MIXING_DTYPES, MixingOp, Network, as_matrix,
     fused_neumann_step, laplacian_apply, make_mixing_op, make_network,
     mix_apply, resolve_mixing_dtype,
+    # compressed-channel facade (repro.comm gossip)
+    fused_neumann_step_c, laplacian_apply_c, mix_apply_c,
     # shared fused-step algebra (used by the sharded tier + tests)
     _neumann_update,
 )

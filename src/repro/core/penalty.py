@@ -19,7 +19,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .mixing import as_matrix, laplacian_apply, mix_apply
+from .mixing import as_matrix, laplacian_apply, mix_apply, mix_apply_c
 from .problems import BilevelProblem
 
 Array = jnp.ndarray
@@ -53,6 +53,15 @@ def inner_dgd_step(prob: BilevelProblem, W: Array, beta: float,
     """One decentralized GD step on the inner problem, Eq. (15)–(16):
        y⁺ = y − β q = W y − β ∇_y g(x, y).  Neighbor-only communication."""
     return mix_apply(W, y) - beta * prob.grad_y_g(x, y)
+
+
+def inner_dgd_step_c(prob: BilevelProblem, W, beta: float,
+                     x: Array, y: Array, st):
+    """`inner_dgd_step` through a compressed gossip channel
+    (repro.comm): the W·y exchange is the only wire crossing, so it is
+    the only compressed term.  Returns (y⁺, channel state)."""
+    mixed, st = mix_apply_c(W, y, st)
+    return mixed - beta * prob.grad_y_g(x, y), st
 
 
 def penalized_hessian(prob: BilevelProblem, W: Array, beta: float,

@@ -89,6 +89,60 @@ def ring_laplacian(tree, axis_name: str, w: RingWeights, comm_dtype=None):
     return jax.tree.map(lambda a, b: a - b, tree, mixed)
 
 
+# ---- compressed gossip channel (repro.comm) ----
+
+def ring_mix_c(tree, axis_name: str, w: RingWeights, policy, st):
+    """`ring_mix` through a `repro.comm` channel -> (mixed, state).
+
+    Each agent transmits the compressed payload of its pytree state —
+    with CHOCO-style error feedback the innovation against the replica
+    `st.hat` its neighbors hold — while the self-weight term w_self·x
+    stays exact (it never crosses the wire).  "identity" delegates to
+    the plain path bit-for-bit; "bf16" keeps the optimization_barrier
+    down-cast so the wire really is 2 bytes/float; value-simulated
+    compressors (int8/int4/top_k/rand_k) quantize the payload values
+    before the ppermute — the packed wire is the ROADMAP fused
+    quantize+gather Pallas kernel.  `st` is a `ChannelState` whose
+    `hat` mirrors the tree structure (see `sharded_channel_init`)."""
+    from repro.comm import compressed_payload_local
+    if policy.is_identity:
+        return ring_mix(tree, axis_name, w), st.bump()
+    if policy.compressor.name == "bf16" and not policy.ef:
+        return ring_mix(tree, axis_name, w, jnp.bfloat16), st.bump()
+
+    leaves, treedef = jax.tree.flatten(tree)
+    if policy.stochastic:
+        key, *subs = jax.random.split(st.key, len(leaves) + 1)
+    else:
+        key, subs = st.key, [None] * len(leaves)
+    hats = treedef.flatten_up_to(st.hat) if policy.ef \
+        else [None] * len(leaves)
+    payloads, new_hats = [], []
+    for leaf, hat, sub in zip(leaves, hats, subs):
+        p, h = compressed_payload_local(policy, leaf, hat, sub)
+        payloads.append(p)
+        new_hats.append(h)
+
+    def mix_leaf(x, xh):
+        out = w.w_self * x
+        send = lax.optimization_barrier(xh)
+        for offset, weight in w.offsets.items():
+            out = out + weight * ppermute_shift(send, axis_name, offset,
+                                                w.n)
+        return out
+    mixed = treedef.unflatten([mix_leaf(x, xh) for x, xh
+                               in zip(leaves, payloads)])
+    hat = treedef.unflatten(new_hats) if policy.ef else st.hat
+    return mixed, dataclasses.replace(st, hat=hat, key=key,
+                                      sends=st.sends + 1)
+
+
+def ring_laplacian_c(tree, axis_name: str, w: RingWeights, policy, st):
+    """((I − W) ⊗ I) x through the compressed channel."""
+    mixed, st = ring_mix_c(tree, axis_name, w, policy, st)
+    return jax.tree.map(lambda a, b: a - b, tree, mixed), st
+
+
 # ---- pytree vector-space helpers used by the sharded DAGM ----
 
 def tadd(a, b):

@@ -28,8 +28,9 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from . import shard_map
-from .collectives import (RingWeights, ring_laplacian, ring_mix, taxpy,
-                          tdot, tnorm, tscale, tsub, tadd)
+from .collectives import (RingWeights, ring_laplacian, ring_laplacian_c,
+                          ring_mix, ring_mix_c, taxpy, tdot, tnorm,
+                          tscale, tsub, tadd)
 
 Pytree = Any
 
@@ -51,6 +52,19 @@ class ShardedDAGMConfig:
     #                            vocabulary as the reference tier's
     #                            DAGMConfig.mixing_dtype, resolved by the
     #                            shared topology.resolve_mixing_dtype
+    comm: str = "identity"     # repro.comm gossip spec ("identity" |
+    #                            "bf16" | "int8[+ef]" | "int4[+ef]" |
+    #                            "top_k:<frac>[+ef]" | ...): the full
+    #                            compressed-channel protocol around every
+    #                            ppermute exchange.  Generalizes
+    #                            comm_dtype — leaving comm="identity"
+    #                            with comm_dtype="bf16" aliases to the
+    #                            "bf16" policy (same wire), so existing
+    #                            configs keep their behavior.  Error-
+    #                            feedback replicas are per-round (they
+    #                            reset at each outer round boundary so
+    #                            the step stays a pure (x, y, batch)
+    #                            function).
     mix_every: int = 1         # j > 1: gossip only every j-th inner step
     #                            (local-updates variant, cf. FedNest [77];
     #                            §Perf — cuts inner comm by ~j)
@@ -64,43 +78,92 @@ class ShardedDAGMConfig:
         from repro.topology import resolve_mixing_dtype
         return resolve_mixing_dtype(self.comm_dtype)
 
+    @property
+    def comm_policy(self):
+        """Effective repro.comm policy: `comm` wins; the legacy
+        comm_dtype="bf16" knob aliases to the "bf16" compressor."""
+        from repro.comm import parse_comm_spec
+        from repro.topology import resolve_mixing_dtype
+        spec = self.comm
+        if spec == "identity" and \
+                resolve_mixing_dtype(self.comm_dtype) is not None:
+            spec = self.comm_dtype
+        return parse_comm_spec(spec)
+
+
+def _agent_index(axis):
+    """Flat agent index inside shard_map, for tuple axes too."""
+    if isinstance(axis, tuple):
+        idx = jnp.zeros((), jnp.int32)
+        for a in axis:
+            idx = idx * jax.lax.psum(1, a) + jax.lax.axis_index(a)
+        return idx
+    return jax.lax.axis_index(axis)
+
 
 def dagm_local_round(g_fn: Callable, f_fn: Callable,
                      cfg: ShardedDAGMConfig, w: RingWeights,
-                     x: Pytree, y: Pytree, batch: Pytree):
+                     x: Pytree, y: Pytree, batch: Pytree,
+                     key=None):
     """One DAGM outer round from a single agent's perspective.
 
     g_fn(x, y, batch) -> scalar local inner loss  (strongly-convex-ish)
     f_fn(x, y, batch) -> scalar local outer loss
     Must be called inside shard_map over cfg.axis.
     Returns (x⁺, y⁺, metrics).
+
+    Every ppermute exchange goes through the `cfg.comm_policy` channel
+    (`collectives.ring_mix_c`): identity/bf16 policies reproduce the
+    historical paths exactly; compressing policies open per-round
+    error-feedback channels for y, h and x.  `key` feeds stochastic
+    compressors (folded with the agent index so rows decorrelate); it
+    is unused otherwise.
     """
+    from repro.comm import channel_init
     axis = cfg.axis
     beta, alpha = cfg.beta, cfg.alpha
+    pol = cfg.comm_policy
 
     grad_y_g = jax.grad(g_fn, argnums=1)
     grad_x_f = jax.grad(f_fn, argnums=0)
     grad_y_f = jax.grad(f_fn, argnums=1)
 
-    cd = cfg.comm_jnp_dtype
+    if pol.stochastic:
+        if key is None:
+            raise ValueError(
+                f"comm policy {pol.spec!r} draws stochastic compression "
+                f"noise: pass a fresh PRNG key per round (reusing one "
+                f"key would correlate the rounding across rounds and "
+                f"bias the gossip) — make_sharded_dagm's step takes it "
+                f"as its fourth argument")
+        key = jax.random.fold_in(key, _agent_index(axis))
+    elif key is None:
+        key = jax.random.PRNGKey(0)     # threaded but never consumed
+    ks = jax.random.split(key, 3)
+    st_y = channel_init(pol, "inner_y", y, ks[0])
+    st_h = channel_init(pol, "dihgp_h", y, ks[1])
+    st_x = channel_init(pol, "outer_x", x, ks[2])
 
     # ---- inner loop: y ← W y − β ∇_y g  (Eq. 15/16), M rounds ----
-    def inner(t, yy):
+    def inner(t, carry):
+        yy, st = carry
         if cfg.unroll_loops:
             do_mix = (int(t) % cfg.mix_every) == cfg.mix_every - 1
-            mixed = ring_mix(yy, axis, w, cd) if do_mix else yy
+            mixed, st = ring_mix_c(yy, axis, w, pol, st) if do_mix \
+                else (yy, st)
         elif cfg.mix_every > 1:
-            mixed = jax.lax.cond(
+            mixed, st = jax.lax.cond(
                 t % cfg.mix_every == cfg.mix_every - 1,
-                lambda z: ring_mix(z, axis, w, cd), lambda z: z, yy)
+                lambda z, s: ring_mix_c(z, axis, w, pol, s),
+                lambda z, s: (z, s), yy, st)
         else:
-            mixed = ring_mix(yy, axis, w, cd)
-        return taxpy(-beta, grad_y_g(x, yy, batch), mixed)
+            mixed, st = ring_mix_c(yy, axis, w, pol, st)
+        return taxpy(-beta, grad_y_g(x, yy, batch), mixed), st
     if cfg.unroll_loops:
         for t in range(cfg.M):
-            y = inner(t, y)
+            y, st_y = inner(t, (y, st_y))
     else:
-        y = jax.lax.fori_loop(0, cfg.M, inner, y)
+        y, st_y = jax.lax.fori_loop(0, cfg.M, inner, (y, st_y))
 
     # ---- DIHGP (Alg. 1, scalar-preconditioned, matrix-free) ----
     def hvp(v):
@@ -108,20 +171,22 @@ def dagm_local_round(g_fn: Callable, f_fn: Callable,
 
     d_scalar = beta * cfg.curvature + 2.0 * (1.0 - w.w_self)
 
-    def H_apply(hh):
-        lap = ring_laplacian(hh, axis, w, cd)
-        return taxpy(beta, hvp(hh), lap)
+    def H_apply(hh, st):
+        lap, st = ring_laplacian_c(hh, axis, w, pol, st)
+        return taxpy(beta, hvp(hh), lap), st
 
     p = grad_y_f(x, y, batch)
     h = tscale(-1.0 / d_scalar, p)
-    def dihgp_iter(_, hh):
-        bh = tsub(tscale(d_scalar, hh), H_apply(hh))   # B̃ h
-        return tscale(1.0 / d_scalar, tsub(bh, p))
+    def dihgp_iter(_, carry):
+        hh, st = carry
+        bh_mix, st = H_apply(hh, st)
+        bh = tsub(tscale(d_scalar, hh), bh_mix)        # B̃ h
+        return tscale(1.0 / d_scalar, tsub(bh, p)), st
     if cfg.unroll_loops:
         for _ in range(cfg.U):
-            h = dihgp_iter(0, h)
+            h, st_h = dihgp_iter(0, (h, st_h))
     else:
-        h = jax.lax.fori_loop(0, cfg.U, dihgp_iter, h)
+        h, st_h = jax.lax.fori_loop(0, cfg.U, dihgp_iter, (h, st_h))
 
     # ---- outer hyper-gradient (Eq. 17b) and step ----
     def cross(xx):
@@ -129,13 +194,18 @@ def dagm_local_round(g_fn: Callable, f_fn: Callable,
     cross_term = jax.grad(cross)(x)
 
     d_dir = taxpy(beta, cross_term, grad_x_f(x, y, batch))
-    x_new = taxpy(-alpha, d_dir, ring_mix(x, axis, w, cd))  # Ẃx − α(...)
+    mixed_x, st_x = ring_mix_c(x, axis, w, pol, st_x)
+    x_new = taxpy(-alpha, d_dir, mixed_x)              # Ẃx − α(...)
 
     metrics = {
         "outer_loss": f_fn(x, y, batch),
         "inner_loss": g_fn(x, y, batch),
         "hypergrad_norm": tnorm(d_dir),
         "consensus_x": tnorm(ring_laplacian(x, cfg.axis, w)),
+        # gossip exchanges this round, from the traced channel counters
+        # (feeds sharded_comm_ledger for the byte accounting)
+        "comm_sends": (st_y.sends + st_h.sends + st_x.sends)
+        .astype(jnp.float32),
     }  # consensus metric uses full-precision exchange (diagnostic)
     return x_new, y, metrics
 
@@ -156,6 +226,11 @@ def make_sharded_dagm(g_fn: Callable, f_fn: Callable,
     paper's agent-parallel ring composes with model parallelism inside
     each agent (DESIGN.md §2: model-parallel sharding lives inside an
     agent).
+
+    When `cfg.comm_policy` is stochastic (int8/int4/rand_k gossip) the
+    returned step takes a fourth argument, a replicated PRNG key:
+    ``step(x, y, batch, key)``; deterministic policies keep the
+    historical 3-argument signature.
     """
     ax = cfg.axis
     ax_names = ax if isinstance(ax, tuple) else (ax,)
@@ -168,19 +243,63 @@ def make_sharded_dagm(g_fn: Callable, f_fn: Callable,
     ys = y_spec if y_spec is not None else P(ax)
     bs = batch_spec if batch_spec is not None else P(ax)
     manual = frozenset(manual_axes) if manual_axes is not None         else frozenset(ax_names)
+    stochastic = cfg.comm_policy.stochastic
 
-    def local_step(x, y, batch):
+    def local_step(x, y, batch, key=None):
         # strip the (size-1) leading agent axis inside the shard
         squeeze = lambda t: jax.tree.map(lambda a: a[0], t)
         expand = lambda t: jax.tree.map(lambda a: a[None], t)
         x1, y1, m = dagm_local_round(g_fn, f_fn, cfg, w,
-                                     squeeze(x), squeeze(y), squeeze(batch))
+                                     squeeze(x), squeeze(y),
+                                     squeeze(batch), key=key)
         m = jax.tree.map(lambda s: jax.lax.pmean(s, ax), m)
         return expand(x1), expand(y1), m
 
     kw = {}
     if manual != frozenset(mesh.axis_names):
         kw["axis_names"] = manual
-    step = shard_map(local_step, mesh=mesh, in_specs=(xs, ys, bs),
-                     out_specs=(xs, ys, P()), check_vma=False, **kw)
+    if stochastic:
+        step = shard_map(local_step, mesh=mesh,
+                         in_specs=(xs, ys, bs, P()),
+                         out_specs=(xs, ys, P()), check_vma=False, **kw)
+    else:
+        step = shard_map(lambda x, y, b: local_step(x, y, b),
+                         mesh=mesh, in_specs=(xs, ys, bs),
+                         out_specs=(xs, ys, P()), check_vma=False, **kw)
     return (jax.jit(step) if jit_step else step), w
+
+
+def sharded_comm_ledger(cfg: ShardedDAGMConfig, x: Pytree, y: Pytree,
+                        rounds: int = 1):
+    """Byte-accurate CommLedger for the sharded DAGM round.
+
+    `x` / `y` are one agent's *local* pytrees (or the stacked globals —
+    only leaf shapes after the agent axis matter is the caller's
+    responsibility; pass local views).  Per-leaf wire cost uses the
+    configured `comm_policy` compressor, one row per leaf — exactly
+    what `ring_mix_c` transmits.  Sends per round mirror the local
+    round's loop structure (inner M//mix_every, DIHGP U, outer 1); the
+    `comm_sends` metric emitted by `dagm_local_round` cross-checks the
+    total at runtime.  The diagnostic full-precision consensus exchange
+    is excluded (it is not part of the algorithm's traffic)."""
+    from repro.comm import CommLedger
+    comp = cfg.comm_policy.compressor
+    spec = cfg.comm_policy.spec
+
+    def tree_cost(tree):
+        leaves = jax.tree.leaves(tree)
+        return (sum(comp.payload_bytes(l.shape) for l in leaves),
+                sum(comp.payload_floats(l.shape) for l in leaves))
+
+    inner_sends = sum(1 for t in range(cfg.M)
+                      if t % cfg.mix_every == cfg.mix_every - 1)
+    led = CommLedger("dagm_sharded")
+    for name, tree, per_round in (("inner_y", y, inner_sends),
+                                  ("dihgp_h", y, cfg.U),
+                                  ("outer_x", x, 1)):
+        bytes_per, floats_per = tree_cost(tree)
+        led.add_channel(name, (floats_per,), spec=spec,
+                        sends=rounds * per_round,
+                        floats_per_send=floats_per,
+                        bytes_per_send=bytes_per)
+    return led

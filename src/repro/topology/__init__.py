@@ -25,9 +25,10 @@ from .weights import (check_assumption_a, max_degree_weights,
 from .structure import (CirculantStructure, SparseStructure,
                         circulant_structure, sparse_structure)
 from .ops import (BACKENDS, MIXING_DTYPES, MixingOp, Network, as_matrix,
-                  fused_neumann_step, laplacian_apply, make_mixing_op,
-                  make_network, mix_apply, resolve_mixing_dtype,
-                  _neumann_update)
+                  fused_neumann_step, fused_neumann_step_c,
+                  laplacian_apply, laplacian_apply_c, make_mixing_op,
+                  make_network, mix_apply, mix_apply_c,
+                  resolve_mixing_dtype, _neumann_update)
 
 __all__ = [
     "circulant_graph", "complete_graph", "erdos_renyi_graph",
@@ -38,6 +39,7 @@ __all__ = [
     "CirculantStructure", "SparseStructure", "circulant_structure",
     "sparse_structure",
     "BACKENDS", "MIXING_DTYPES", "MixingOp", "Network", "as_matrix",
-    "fused_neumann_step", "laplacian_apply", "make_mixing_op",
-    "make_network", "mix_apply", "resolve_mixing_dtype",
+    "fused_neumann_step", "fused_neumann_step_c", "laplacian_apply",
+    "laplacian_apply_c", "make_mixing_op", "make_network", "mix_apply",
+    "mix_apply_c", "resolve_mixing_dtype",
 ]

@@ -53,12 +53,30 @@ in the caller's dtype.  `resolve_mixing_dtype` is the single vocabulary
 ("f32" | "bf16") shared with the sharded tier's
 `ShardedDAGMConfig.comm_dtype` compressed gossip.
 
+Compressed gossip (`repro.comm`)
+--------------------------------
+`MixingOp(..., comm="int8+ef")` generalizes the dtype knob into the
+full compressed-gossip subsystem: the op carries a parsed
+`repro.comm.CommPolicy` plus a `CommLedger`, and the `*_c` variants
+(`mix_c` / `laplacian_c` / `neumann_step_c`, façades `mix_apply_c` /
+`laplacian_apply_c` / `fused_neumann_step_c`) apply
+compress→mix→decompress around every gossip: the payload the neighbors
+receive is the compressor roundtrip (with CHOCO-style error feedback
+when the spec says `+ef`), the backend mixes the decoded payload, and
+the self-weight term w_ii·y_i — which never crosses the wire — is
+re-applied exactly.  Each `comm_channel` registers its payload shape in
+the ledger; the `ChannelState` threaded through the caller's scan
+counts sends, so the post-run ledger reports exact wire bytes from the
+actual compressor calls.  `comm="identity"` short-circuits every `*_c`
+call onto the uncompressed code path (bit-identical trajectories, only
+the counters tick).
+
 All algorithm-level callers (`penalty`, `dihgp`, `dagm`, `baselines`)
 go through the free functions `mix_apply` / `laplacian_apply` /
-`fused_neumann_step`, which accept either a raw W array (dense path,
-backward compatible) or a `MixingOp` — so a single `DAGMConfig.mixing`
-choice selects the execution path end-to-end with no call-site
-branching.
+`fused_neumann_step` (or their `_c` twins), which accept either a raw W
+array (dense path, backward compatible) or a `MixingOp` — so a single
+`DAGMConfig.mixing` / `DAGMConfig.comm` choice selects the execution
+path end-to-end with no call-site branching.
 """
 from __future__ import annotations
 
@@ -185,7 +203,8 @@ class MixingOp:
 
     def __init__(self, W, *, backend: str = "auto",
                  interpret: bool = True, name: str = "network",
-                 dtype: str = "f32"):
+                 dtype: str = "f32", comm: str = "identity"):
+        from repro.comm import CommLedger, parse_comm_spec
         if backend not in BACKENDS:
             raise ValueError(f"unknown mixing backend {backend!r}; "
                              f"expected one of {BACKENDS}")
@@ -195,6 +214,9 @@ class MixingOp:
         self.requested = backend
         self.dtype = dtype
         self.storage_dtype = resolve_mixing_dtype(dtype)
+        self.comm = parse_comm_spec(comm)
+        self.ledger = CommLedger(name)
+        self._diag = jnp.diag(self.W)
         self.structure = circulant_structure(W)
         self.sparse = sparse_structure(W)
         if backend == "auto":
@@ -381,13 +403,56 @@ class MixingOp:
         return _neumann_update(self._apply(h, laplacian=False), h, hvp_h,
                                p, d_scalar, beta)
 
+    # -- compressed gossip (repro.comm) ------------------------------------
+
+    def comm_channel(self, name: str, x, key):
+        """Open a gossip channel for stacked variable template `x`:
+        registers the payload shape in the ledger (eager, pre-trace)
+        and returns the ChannelState to thread through the hot loop."""
+        from repro.comm import channel_init
+        self.ledger.register(name, x.shape[1:], self.comm)
+        return channel_init(self.comm, name, x, key)
+
+    def _apply_c(self, y: jnp.ndarray, st, laplacian: bool):
+        """compress→mix→decompress around one gossip of y (n, ...).
+
+        The neighbors mix the decoded payload ŷ; the self-weight term
+        w_ii·y_i never crosses the wire, so the backend result W·ŷ is
+        corrected by diag(W)·(y − ŷ) before the (I−W) algebra."""
+        from repro.comm import compressed_payload
+        if self.comm.is_identity:
+            return self._apply(y, laplacian), st.bump()
+        y_hat, st = compressed_payload(self.comm, y, st)
+        mixed = self._apply(y_hat, laplacian=False)
+        expand = (slice(None),) + (None,) * (y.ndim - 1)
+        mixed = mixed + self._diag[expand].astype(y.dtype) * (y - y_hat)
+        return (y - mixed) if laplacian else mixed, st
+
+    def mix_c(self, y: jnp.ndarray, st):
+        """(W ⊗ I) y through the compressed channel -> (out, state)."""
+        return self._apply_c(y, st, laplacian=False)
+
+    def laplacian_c(self, y: jnp.ndarray, st):
+        """((I − W) ⊗ I) y through the compressed channel."""
+        return self._apply_c(y, st, laplacian=True)
+
+    def neumann_step_c(self, h, hvp_h, p, d_scalar, beta: float, st):
+        """Fused DIHGP step with the W·h gossip compressed; identity
+        policy keeps today's fused path (Pallas tier included)."""
+        if self.comm.is_identity:
+            return self.neumann_step(h, hvp_h, p, d_scalar, beta), \
+                st.bump()
+        mix, st = self.mix_c(h, st)
+        return _neumann_update(mix, h, hvp_h, p, d_scalar, beta), st
+
 
 def make_mixing_op(net: "Network", backend: str = "auto",
                    interpret: bool = True,
-                   dtype: str = "f32") -> MixingOp:
+                   dtype: str = "f32",
+                   comm: str = "identity") -> MixingOp:
     """Build the execution backend for a validated Network."""
     return MixingOp(net.W, backend=backend, interpret=interpret,
-                    name=net.name, dtype=dtype)
+                    name=net.name, dtype=dtype, comm=comm)
 
 
 def as_matrix(W) -> jnp.ndarray:
@@ -439,3 +504,33 @@ def fused_neumann_step(W, h, hvp_h, p, d_scalar, beta: float):
     if isinstance(W, MixingOp):
         return W.neumann_step(h, hvp_h, p, d_scalar, beta)
     return _neumann_update(mix_apply(W, h), h, hvp_h, p, d_scalar, beta)
+
+
+# ---------------------------------------------------------------------------
+# Compressed-channel façade (repro.comm): every caller threads a
+# ChannelState and gets (result, state) back.  Raw W arrays carry no
+# comm policy, so they gossip uncompressed (the dense reference path);
+# a MixingOp applies whatever its `comm=` spec says — call sites stay
+# branch-free either way.
+# ---------------------------------------------------------------------------
+
+def mix_apply_c(W, y: jnp.ndarray, st):
+    """(W ⊗ I) y through the gossip channel -> (mixed, state)."""
+    if isinstance(W, MixingOp):
+        return W.mix_c(y, st)
+    return mix_apply(W, y), st.bump()
+
+
+def laplacian_apply_c(W, y: jnp.ndarray, st):
+    """((I − W) ⊗ I) y through the gossip channel -> (out, state)."""
+    if isinstance(W, MixingOp):
+        return W.laplacian_c(y, st)
+    return laplacian_apply(W, y), st.bump()
+
+
+def fused_neumann_step_c(W, h, hvp_h, p, d_scalar, beta: float, st):
+    """Compressed-channel twin of `fused_neumann_step`."""
+    if isinstance(W, MixingOp):
+        return W.neumann_step_c(h, hvp_h, p, d_scalar, beta, st)
+    return _neumann_update(mix_apply(W, h), h, hvp_h, p, d_scalar,
+                           beta), st.bump()

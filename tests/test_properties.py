@@ -130,6 +130,94 @@ def test_dihgp_truncation_error_monotone(seed, beta):
         assert b <= a + 1e-6
 
 
+# ---------------------------------------------------------------------------
+# repro.comm compressor contracts
+# ---------------------------------------------------------------------------
+
+@given(bits=st.sampled_from([4, 8]), n=st.integers(1, 4),
+       d=st.sampled_from([16, 48]), seed=st.integers(0, 1000))
+@settings(max_examples=10, deadline=None)
+def test_stochastic_quant_unbiased(bits, n, d, seed):
+    """E[roundtrip(x)] = x for the int8/int4 stochastic quantizers (up
+    to the bf16 metadata rounding): averaged over keys, the decode bias
+    shrinks well below one quantization step."""
+    from repro.comm import parse_comm_spec
+    comp = parse_comm_spec(f"int{bits}").compressor
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n, d))
+    reps = 400
+    dec = jax.vmap(lambda k: comp.roundtrip(x, k))(
+        jax.random.split(jax.random.PRNGKey(seed + 1), reps))
+    step = float((x.max(1) - x.min(1)).max()) / (2 ** bits - 1)
+    bias = float(jnp.abs(dec.mean(0) - x).max())
+    # SE of a U[0,1) rounding average is step/sqrt(12·reps) ≈ step/69
+    assert bias <= 0.15 * step + 1e-4
+
+
+@given(frac=st.floats(0.1, 0.9), n=st.integers(1, 4),
+       d=st.sampled_from([16, 40]), seed=st.integers(0, 1000))
+@settings(max_examples=10, deadline=None)
+def test_rand_k_unbiased(frac, n, d, seed):
+    """E[roundtrip(x)] = x for scaled rand-k (the no-EF variant)."""
+    from repro.comm import parse_comm_spec
+    comp = parse_comm_spec(f"rand_k:{frac}").compressor
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n, d))
+    reps = 3000
+    dec = jax.vmap(lambda k: comp.roundtrip(x, k))(
+        jax.random.split(jax.random.PRNGKey(seed + 1), reps))
+    k = max(1, min(d, int(round(frac * d))))
+    # per-coordinate variance ≤ (d/k − 1)·x², SE scales with 1/√reps
+    tol = 4.5 * float(jnp.abs(x).max()) * np.sqrt(max(d / k - 1, 1e-3)
+                                                  / reps) + 2e-3
+    assert float(jnp.abs(dec.mean(0) - x).max()) <= tol
+
+
+@given(frac=st.floats(0.05, 0.5), d=st.sampled_from([40, 100]),
+       seed=st.integers(0, 1000))
+@settings(max_examples=10, deadline=None)
+def test_top_k_ef_residual_contraction(frac, d, seed):
+    """CHOCO error feedback with top-k: gossiping a fixed x, the
+    residual r_t = x − hat_t obeys ‖r_{t+1}‖ ≤ √(1 − k/d)·‖r_t‖
+    (deterministic contraction), so the replica converges
+    geometrically."""
+    from repro.comm import (channel_init, compressed_payload,
+                            parse_comm_spec)
+    pol = parse_comm_spec(f"top_k:{frac}+ef")
+    x = jax.random.normal(jax.random.PRNGKey(seed), (3, d))
+    st = channel_init(pol, "t", x, jax.random.PRNGKey(0))
+    k = max(1, min(d, int(round(frac * d))))
+    rate = np.sqrt(1.0 - k / d)
+    r_prev = float(jnp.linalg.norm(x - st.hat))
+    for _ in range(12):
+        _, st = compressed_payload(pol, x, st)
+        r = float(jnp.linalg.norm(x - st.hat))
+        assert r <= rate * r_prev + 1e-4
+        r_prev = r
+
+
+@given(spec=st.sampled_from(["bf16", "int8", "int8+ef", "top_k:0.2+ef",
+                             "rand_k:0.3+ef"]),
+       n=st.integers(2, 6), seed=st.integers(0, 500))
+@settings(max_examples=10, deadline=None)
+def test_compressed_mix_preserves_self_term(spec, n, seed):
+    """mix_c = W·ŷ + diag(W)·(y − ŷ): whatever the compressor does to
+    the wire payload, the agent's own contribution stays exact — so
+    with ŷ = y (identity limit) the compressed mix IS the mix."""
+    from repro.comm import parse_comm_spec
+    net = mx.make_network("ring", n + 2)   # ring needs n >= 3
+    op = mx.make_mixing_op(net, comm=spec)
+    y = jax.random.normal(jax.random.PRNGKey(seed), (net.n, 8))
+    st = op.comm_channel("ch", y, jax.random.PRNGKey(seed + 1))
+    out, st2 = op.mix_c(y, st)
+    # reconstruct the payload the neighbors decoded and check algebra
+    from repro.comm import compressed_payload
+    y_hat, _ = compressed_payload(parse_comm_spec(spec), y, st)
+    W = net.W_jnp()
+    want = W @ y_hat + jnp.diag(W)[:, None] * (y - y_hat)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+    assert int(st2.sends) == int(st.sends) + 1
+
+
 @given(b=st.integers(1, 3), s=st.sampled_from([8, 16]),
        v=st.sampled_from([32, 64]), seed=st.integers(0, 500))
 @settings(**SETTINGS)

@@ -168,6 +168,101 @@ def test_dagm_variants(tmp_path):
     assert vals["UNROLL_ERR"] < 1e-5         # unroll == fori_loop
 
 
+SCRIPT_COMM = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, {src!r})
+import jax, jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+from repro.comm import channel_init, parse_comm_spec
+from repro.core import quadratic_bilevel
+from repro.distributed import shard_map
+from repro.distributed.collectives import RingWeights, ring_mix, ring_mix_c
+from repro.distributed.dagm_sharded import (ShardedDAGMConfig,
+                                            make_sharded_dagm,
+                                            sharded_comm_ledger)
+
+n = 8
+mesh = Mesh(np.array(jax.devices()).reshape(n), ("data",))
+w = RingWeights.metropolis_ring(n)
+
+# --- 1. identity ring_mix_c == ring_mix bit-for-bit; EF channel mixes
+#        the decoded payload with the exact self term ---
+z = jax.random.normal(jax.random.PRNGKey(0), (n, 64))
+def mk(policy_spec):
+    pol = parse_comm_spec(policy_spec)
+    def local(zz, key):
+        zz = jax.tree.map(lambda a: a[0], zz)
+        st = channel_init(pol, "ch", zz, key)
+        out, st = ring_mix_c(zz, "data", w, pol, st)
+        return jax.tree.map(lambda a: a[None], out), st.sends
+    return jax.jit(shard_map(local, mesh=mesh, in_specs=(P("data"), P()),
+                             out_specs=(P("data"), P()),
+                             check_vma=False))
+ident, sends = mk("identity")(z, jax.random.PRNGKey(1))
+plain = jax.jit(shard_map(
+    lambda zz: jax.tree.map(lambda a: a[None], ring_mix(
+        jax.tree.map(lambda a: a[0], zz), "data", w)),
+    mesh=mesh, in_specs=P("data"), out_specs=P("data"),
+    check_vma=False))(z)
+print("IDENT_BITMATCH", int(np.array_equal(np.asarray(ident),
+                                           np.asarray(plain))))
+q8, _ = mk("int8+ef")(z, jax.random.PRNGKey(1))
+print("INT8_MIX_ERR", float(jnp.abs(q8 - plain).max()))
+
+# --- 2. stochastic policies drive the 4-arg step; trajectories track
+#        the identity run; comm_sends matches the static ledger ---
+prob = quadratic_bilevel(n, 3, 4, seed=0)
+curv = float(max(np.linalg.eigvalsh(np.asarray(prob.data["A"][i])).max()
+                 for i in range(n)))
+y0 = 0.01 * jax.random.normal(jax.random.PRNGKey(0), (n, 4))
+outs = {{}}
+for spec in ("identity", "int8+ef", "top_k:0.5+ef", "rand_k:0.5+ef"):
+    cfg = ShardedDAGMConfig(alpha=0.05, beta=0.1, M=4, U=3,
+                            curvature=curv, comm=spec, mix_every=2)
+    step, _ = make_sharded_dagm(lambda x, y, b: prob.g(x, y, b),
+                                lambda x, y, b: prob.f(x, y, b), cfg, mesh)
+    x, y = jnp.zeros((n, 3)), y0
+    for r in range(10):
+        if cfg.comm_policy.stochastic:
+            x, y, m = step(x, y, prob.data, jax.random.PRNGKey(r))
+        else:
+            x, y, m = step(x, y, prob.data)
+    outs[spec] = np.asarray(x)
+    led = sharded_comm_ledger(cfg, x[0], y[0], rounds=1)
+    print("SENDS_MATCH_" + spec.replace(":", "").replace("+", ""),
+          int(float(m["comm_sends"]) == led.total_sends()))
+for spec in ("int8+ef", "top_k:0.5+ef", "rand_k:0.5+ef"):
+    print("XERR_" + spec.replace(":", "").replace("+", ""),
+          float(np.abs(outs[spec] - outs["identity"]).max()))
+"""
+
+
+def test_sharded_compressed_gossip(tmp_path):
+    """repro.comm on the sharded tier: identity bit-match, EF channel
+    algebra under shard_map, the stochastic 4-arg step, and
+    sharded_comm_ledger vs the traced comm_sends metric."""
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    script = SCRIPT_COMM.format(src=os.path.abspath(src))
+    out = subprocess.run([sys.executable, "-c", script],
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    vals = {}
+    for line in out.stdout.splitlines():
+        parts = line.split()
+        if len(parts) == 2:
+            vals[parts[0]] = float(parts[1])
+    assert vals["IDENT_BITMATCH"] == 1.0
+    assert vals["INT8_MIX_ERR"] < 0.05        # one int8 roundtrip
+    for spec in ("identity", "int8ef", "top_k0.5ef", "rand_k0.5ef"):
+        assert vals[f"SENDS_MATCH_{spec}"] == 1.0
+    for spec in ("int8ef", "top_k0.5ef", "rand_k0.5ef"):
+        assert np.isfinite(vals[f"XERR_{spec}"])
+        assert vals[f"XERR_{spec}"] < 0.05    # tracks the exact run
+
+
 SCRIPT_MOE_SM = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
