@@ -47,6 +47,7 @@ from repro.core import DAGMConfig, dagm_run, make_network, \
 
 from .common import Row, timed
 
+SMOKE_AWARE = True   # genuine cheap smoke tier (benchmarks.run contract)
 RESULTS = os.path.join(os.path.dirname(__file__), "results",
                        "bench_comm.json")
 WIRE_SPECS = ("identity", "bf16", "int8", "int4", "top_k:0.1",
@@ -125,6 +126,91 @@ def _sweep(prob, net, specs, K, M, U, curvature, tag) -> list[Row]:
         }
         rows.append(Row(f"comm/{tag}/{spec}", us, derived))
     return rows
+
+
+SHARDED_EF_SCRIPT = r"""
+import os, json, sys
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+sys.path.insert(0, sys.argv[1])
+import jax, jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+from repro.core import quadratic_bilevel
+from repro.distributed.dagm_sharded import (ShardedDAGMConfig,
+                                            make_sharded_dagm,
+                                            open_sharded_channels,
+                                            sharded_comm_ledger)
+
+n, d1, d2, rounds = 8, 8, 128, int(sys.argv[2])
+mesh = Mesh(np.array(jax.devices()).reshape(n), ("data",))
+prob = quadratic_bilevel(n, d1, d2, seed=0)
+curv = float(max(np.linalg.eigvalsh(np.asarray(prob.data["A"][i])).max()
+                 for i in range(n)))
+x0 = jnp.broadcast_to(
+    2.0 * jax.random.normal(jax.random.PRNGKey(7), (d1,)),
+    (n, d1)).astype(jnp.float32)
+y0 = 0.01 * jax.random.normal(jax.random.PRNGKey(0), (n, d2))
+
+out = {}
+for label, spec, persist in (("identity", "identity", False),
+                             ("reset", "top_k:0.1+ef", False),
+                             ("persist", "top_k:0.1+ef", True)):
+    cfg = ShardedDAGMConfig(alpha=0.05, beta=0.1, M=5, U=3,
+                            curvature=curv, comm=spec,
+                            persist_ef=persist)
+    step, _ = make_sharded_dagm(lambda x, y, b: prob.g(x, y, b),
+                                lambda x, y, b: prob.f(x, y, b),
+                                cfg, mesh)
+    x, y = x0, y0
+    if persist:
+        cs = open_sharded_channels(cfg, x, y, seed=0)
+        for r in range(rounds):
+            x, y, m, cs = step(x, y, prob.data, cs)
+    else:
+        for r in range(rounds):
+            x, y, m = step(x, y, prob.data)
+    led = sharded_comm_ledger(cfg, x[0], y[0], rounds=1)
+    out[label] = {
+        "final_gap": float(jnp.sum(
+            prob.hypergrad(jnp.mean(x, 0)) ** 2)),
+        "bytes_per_round": led.total_bytes,
+    }
+print("RESULT " + json.dumps(out))
+"""
+
+
+def _sharded_ef_rows(rounds: int = 200) -> list[Row]:
+    """Persistent vs per-round-reset EF replicas on the *sharded* tier
+    (ROADMAP "EF state across outer rounds" item): the reference tier
+    warm-starts its inner_y/outer_x replicas across the whole K-round
+    scan, while the historical sharded step reopened its channels each
+    round; `persist_ef` threads them as an extra carry.  Needs >1
+    device, hence the forced-host-platform subprocess (same pattern as
+    tests/test_sharded.py)."""
+    src = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    proc = subprocess.run(
+        [sys.executable, "-c", SHARDED_EF_SCRIPT, src, str(rounds)],
+        capture_output=True, text=True, timeout=1800)
+    if proc.returncode != 0:
+        return [Row("comm/sharded_ef/ERROR", 0.0,
+                    {"stderr": proc.stderr[-200:]})]
+    out = json.loads(proc.stdout.split("RESULT ", 1)[1])
+    gid = out["identity"]["final_gap"]
+    g_reset, g_persist = out["reset"]["final_gap"], \
+        out["persist"]["final_gap"]
+    return [Row("comm/sharded_ef/top_k:0.1+ef", 0.0, {
+        "rounds": rounds,
+        "final_gap_identity": f"{gid:.3e}",
+        "final_gap_reset": f"{g_reset:.3e}",
+        "final_gap_persist": f"{g_persist:.3e}",
+        "gap_vs_identity_reset": round(g_reset / max(gid, 1e-30), 3),
+        "gap_vs_identity_persist": round(g_persist / max(gid, 1e-30), 3),
+        "persist_closes_gap": bool(abs(g_persist - gid)
+                                   <= abs(g_reset - gid)),
+        "bytes_per_round": out["reset"]["bytes_per_round"],
+        "bytes_per_round_identity": out["identity"]["bytes_per_round"],
+    })]
 
 
 def _lm_drift_rows(rounds: int = 10) -> list[Row]:
@@ -209,7 +295,16 @@ def run(budget: str = "small") -> list[Row]:
                        K=300, M=10, U=3, curvature=curvature,
                        tag="star_n16_d256")
 
+    rows += _sharded_ef_rows(rounds=200)
     rows += _lm_drift_rows(rounds=10)
+
+    # a failed subprocess row must not silently clobber the checked-in
+    # JSON (benchmarks.run turns the raise into a module ERROR + exit 1)
+    errors = [r for r in rows if r.name.endswith("/ERROR")]
+    if errors:
+        raise RuntimeError(
+            f"subprocess rows failed, keeping existing {RESULTS}: "
+            + "; ".join(f"{r.name}: {r.derived}" for r in errors))
 
     os.makedirs(os.path.dirname(RESULTS), exist_ok=True)
     with open(RESULTS, "w") as f:

@@ -42,6 +42,7 @@ from repro.topology import sparse_structure
 
 from .common import Row, timed
 
+SMOKE_AWARE = True   # genuine cheap smoke tier (benchmarks.run contract)
 RESULTS = os.path.join(os.path.dirname(__file__), "results",
                        "bench_mixing.json")
 

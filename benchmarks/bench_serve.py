@@ -1,0 +1,208 @@
+"""Serve-tier throughput benchmark: jobs-per-second for batched bucket
+execution vs the sequential `dagm_run` loop (the repro.serve acceptance
+harness).
+
+Headline (checked-in JSON): a 64-job ho_regression sweep (8×8 α/β
+grid, one compile signature) runs as ONE vmapped bucket — one trace,
+one fused scan per chunk — versus 64 sequential `dagm_run` calls, each
+of which re-traces its own program (that is the solo API's real cost;
+nothing is strawmanned: the per-job math and hyper-parameters are
+identical).  Derived per row:
+
+  * jobs_per_s_batched / jobs_per_s_sequential / speedup_x — the
+    acceptance numbers (CPU figures),
+  * jobs_per_s_warm — a second identical submission served entirely
+    from the engine's compile cache (serving steady state),
+  * retraces_on_resubmit — must be 0: the cache-hit confirmation,
+  * bitexact_vs_solo — every bucket job's final (x, y) equals its solo
+    `dagm_run` bit-for-bit (static hp mode, identity comm),
+  * bytes_per_job — exact per-job wire traffic from the bucket ledger.
+
+Budgets: "smoke" (scripts/ci.sh tier 2: one tiny bucket + cache-hit
+check, no JSON rewrite), "small" (checked-in results: 64-job and
+16-job buckets + continuous batching), "full" (adds a compressed-
+gossip bucket and a larger-d shape).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+from repro.core import DAGMConfig, dagm_run
+from repro.serve import (JobSpec, ServeEngine, build_network,
+                         build_problem, pad_width)
+
+from .common import Row
+
+SMOKE_AWARE = True   # genuine cheap smoke tier (benchmarks.run contract)
+RESULTS = os.path.join(os.path.dirname(__file__), "results",
+                       "bench_serve.json")
+
+
+def _ho_sweep(n_jobs: int, n: int = 8, d: int = 16, K: int = 40,
+              data_seed: int = 0) -> list[JobSpec]:
+    """n_jobs-point (α, β) grid on ho_regression — the §6.1 scenario
+    as a service queue.  One compile signature by construction."""
+    side = max(int(round(n_jobs ** 0.5)), 1)
+    cfg = DAGMConfig(alpha=0.02, beta=0.02, K=K, M=5, U=3,
+                     dihgp="matrix_free", curvature=60.0)
+    specs = []
+    for j in range(n_jobs):
+        a = 0.010 + 0.002 * (j % side)
+        b = 0.010 + 0.002 * (j // side)
+        specs.append(JobSpec(
+            "ho_regression", {"n": n, "d": d, "m_per": 10,
+                              "seed": data_seed + j},
+            dataclasses.replace(cfg, alpha=a, beta=b), seed=3))
+    return specs
+
+
+def _quad_specs(n_jobs: int, K: int = 40, d2: int = 32,
+                tol: float | None = None) -> list[JobSpec]:
+    cfg = DAGMConfig(alpha=0.05, beta=0.1, K=K, M=5, U=3,
+                     dihgp="matrix_free", curvature=6.0)
+    return [JobSpec("quadratic", {"n": 8, "d1": 4, "d2": d2, "seed": s},
+                    dataclasses.replace(cfg, alpha=0.05 - 0.001 * (s % 8)),
+                    seed=s, tol=tol) for s in range(n_jobs)]
+
+
+def _sequential(specs) -> tuple[float, list]:
+    """The solo-API baseline: one `dagm_run` per job, equal per-job
+    hyper-parameters/data/seeds.  Each call traces its own program —
+    the cost the serve tier amortizes."""
+    t0 = time.perf_counter()
+    outs = []
+    for spec in specs:
+        res = dagm_run(build_problem(spec), build_network(spec),
+                       spec.config, seed=spec.seed)
+        outs.append(np.asarray(res.x))
+    return time.perf_counter() - t0, outs
+
+
+def _bucket_row(tag: str, specs, *, hp_mode: str = "static",
+                chunk_rounds: int = 10, max_width: int = 64,
+                sequential: bool = True) -> Row:
+    eng = ServeEngine(chunk_rounds=chunk_rounds, max_width=max_width,
+                      hp_mode=hp_mode)
+    eng.submit(specs)
+    t0 = time.perf_counter()
+    results = eng.run()
+    wall = time.perf_counter() - t0
+    traces_cold = eng.stats.traces
+
+    # warm resubmission: identical sweep, everything from the cache
+    eng.submit(specs)
+    t0 = time.perf_counter()
+    eng.run()
+    wall_warm = time.perf_counter() - t0
+    retraces = eng.stats.traces - traces_cold
+
+    led = list(eng.ledgers.values())[0]
+    derived = {
+        "jobs": len(specs),
+        "width": pad_width(len(specs), max_width),
+        "rounds_per_job": results[0].rounds,
+        "hp_mode": hp_mode,
+        "jobs_per_s_batched": round(len(specs) / wall, 2),
+        "jobs_per_s_warm": round(len(specs) / wall_warm, 2),
+        "traces": traces_cold,
+        "retraces_on_resubmit": retraces,
+        "chunks": eng.stats.chunks,
+        "bytes_per_job": int(round(float(np.mean(led.per_job_bytes())))),
+        "ledger_additive": bool(led.per_job_bytes().sum()
+                                == led.total_bytes),
+    }
+    if sequential:
+        seq_wall, seq_x = _sequential(specs)
+        bit = all(np.array_equal(r.x, sx)
+                  for r, sx in zip(results, seq_x))
+        close = all(np.allclose(r.x, sx, atol=1e-6, rtol=1e-5)
+                    for r, sx in zip(results, seq_x))
+        derived.update({
+            "jobs_per_s_sequential": round(len(specs) / seq_wall, 2),
+            "speedup_x": round(seq_wall / wall, 2),
+            "speedup_warm_x": round(seq_wall / wall_warm, 2),
+            "bitexact_vs_solo": bool(bit),
+            "allclose_vs_solo": bool(close),
+        })
+    return Row(f"serve/{tag}", wall * 1e6, derived)
+
+
+def _continuous_row() -> Row:
+    """Mixed-deadline queue through a narrow bucket: loose-tol jobs
+    retire mid-flight and the queue backfills their slots."""
+    specs = _quad_specs(24, K=60, tol=None)
+    specs = [dataclasses.replace(s, tol=1e-1 if i % 3 else None)
+             for i, s in enumerate(specs)]
+    eng = ServeEngine(chunk_rounds=10, max_width=8, hp_mode="traced")
+    eng.submit(specs)
+    t0 = time.perf_counter()
+    results = eng.run()
+    wall = time.perf_counter() - t0
+    early = sum(r.converged for r in results)
+    rounds = np.asarray([r.rounds for r in results])
+    led = list(eng.ledgers.values())[0]
+    return Row("serve/continuous_batching", wall * 1e6, {
+        "jobs": len(specs),
+        "width": 8,
+        "jobs_per_s": round(len(specs) / wall, 2),
+        "retired_early": int(early),
+        "mean_rounds": round(float(rounds.mean()), 1),
+        "max_rounds": int(rounds.max()),
+        "traces": eng.stats.traces,
+        "chunks": eng.stats.chunks,
+        "bytes_total": int(led.total_bytes),
+        "ledger_additive": bool(led.per_job_bytes().sum()
+                                == led.total_bytes),
+    })
+
+
+def run(budget: str = "small") -> list[Row]:
+    if budget == "smoke":
+        # scripts/ci.sh tier 2: one tiny bucket, solo parity on 8 jobs,
+        # warm-cache check; keep the checked-in JSON untouched
+        rows = [_bucket_row("smoke_quad8", _quad_specs(8, K=20, d2=16),
+                            chunk_rounds=10, max_width=8)]
+        return rows
+
+    rows = []
+    # ---- acceptance headline: 64-job ho_regression sweep ----
+    rows.append(_bucket_row("bucket64_ho_regression", _ho_sweep(64),
+                            hp_mode="static"))
+    # ---- traced-hp bucket: one compile across different sweeps ----
+    rows.append(_bucket_row("bucket16_ho_regression_traced",
+                            _ho_sweep(16, d=32, K=40, data_seed=100),
+                            hp_mode="traced"))
+    # ---- mid-flight retirement + backfill ----
+    rows.append(_continuous_row())
+
+    if budget == "full":
+        rows.append(_bucket_row("bucket32_quad_d128",
+                                _quad_specs(32, K=40, d2=128),
+                                hp_mode="static"))
+        # compressed-gossip bucket: int8+EF wire at the job level
+        cfg = DAGMConfig(alpha=0.05, beta=0.1, K=40, M=5, U=3,
+                         dihgp="matrix_free", curvature=6.0,
+                         comm="int8+ef")
+        specs = [JobSpec("quadratic",
+                         {"n": 8, "d1": 4, "d2": 64, "seed": s}, cfg,
+                         seed=s) for s in range(16)]
+        rows.append(_bucket_row("bucket16_quad_int8ef", specs,
+                                hp_mode="traced", sequential=False))
+
+    os.makedirs(os.path.dirname(RESULTS), exist_ok=True)
+    with open(RESULTS, "w") as f:
+        json.dump([{"name": r.name,
+                    "us_per_call": round(r.us_per_call, 1),
+                    "derived": r.derived} for r in rows], f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run(sys.argv[1] if len(sys.argv) > 1 else "small"):
+        print(row.csv())

@@ -11,8 +11,8 @@ import argparse
 import sys
 import time
 
-from . import (bench_comm, bench_mixing, fig2_synthetic, fig3_real,
-               fig4_hyperrep, fig5_fairloss, roofline,
+from . import (bench_comm, bench_mixing, bench_serve, fig2_synthetic,
+               fig3_real, fig4_hyperrep, fig5_fairloss, roofline,
                table1_convergence, table2_comm)
 
 MODULES = {
@@ -25,12 +25,17 @@ MODULES = {
     "roofline": roofline,
     "mixing": bench_mixing,
     "comm": bench_comm,
+    "serve": bench_serve,
 }
 
-# modules with a genuine cheap "smoke" tier (no JSON rewrite); the rest
-# branch small-vs-everything-else, so smoke must map to small there or
-# the cheapest request would run the full budget
-SMOKE_AWARE = ("mixing", "comm")
+
+def _smoke_aware(mod) -> bool:
+    """A module declares its own cheap "smoke" tier (no JSON rewrite)
+    by setting `SMOKE_AWARE = True`; the rest branch small-vs-
+    everything-else, so smoke must map to small there or the cheapest
+    request would run the full budget.  Derived from the module itself
+    so a new benchmark cannot silently fall out of the smoke path."""
+    return bool(getattr(mod, "SMOKE_AWARE", False))
 
 
 def main(argv=None) -> int:
@@ -52,7 +57,7 @@ def main(argv=None) -> int:
             failures += 1
             continue
         budget = args.budget
-        if budget == "smoke" and name not in SMOKE_AWARE:
+        if budget == "smoke" and not _smoke_aware(mod):
             budget = "small"
         t0 = time.time()
         try:

@@ -1,12 +1,18 @@
-"""Batched serving demo: prefill a batch of prompts, then greedy-decode
-continuation tokens through the rolling KV/state cache — the same
-`prefill_step` / `decode_step` the dry-run lowers for prefill_32k /
-decode_32k / long_500k, here executed for real on a reduced config.
+"""Batched *LM decode* serving demo: prefill a batch of prompts, then
+greedy-decode continuation tokens through the rolling KV/state cache —
+the same `prefill_step` / `decode_step` the dry-run lowers for
+prefill_32k / decode_32k / long_500k, here executed for real on a
+reduced config.
+
+This serves language-model tokens, not bilevel jobs: for the batched
+*bilevel solver* engine (vmapped DAGM job fleets, shape buckets,
+compile cache, continuous batching — `repro.serve`), see
+examples/serve_hyperopt.py.
 
 Works for every architecture family (dense GQA / MoE / RWKV6 / hybrid):
 
-    PYTHONPATH=src python examples/serve_batched.py --arch mixtral-8x7b \
-        [--prompt-len 48] [--new-tokens 16]
+    PYTHONPATH=src python examples/serve_lm_batched.py \
+        --arch mixtral-8x7b [--prompt-len 48] [--new-tokens 16]
 """
 import argparse
 import time

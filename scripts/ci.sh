@@ -35,3 +35,8 @@ echo "=== tier 2: bench smoke (compressed gossip) ==="
 # one tiny DAGM pass per compressor family (identity / bf16 / int8+ef /
 # top_k+ef / rand_k+ef) with ledger byte accounting; no JSON rewrite
 python -m benchmarks.run --only comm --budget smoke
+
+echo "=== tier 2: bench smoke (serve engine) ==="
+# one tiny batched bucket vs the sequential dagm_run loop (solo parity,
+# warm-cache check, per-job ledger additivity); no JSON rewrite
+python -m benchmarks.run --only serve --budget smoke

@@ -25,15 +25,16 @@ from .compressors import (BF16_BYTES, Bf16Compressor, CommPolicy,
                           Compressor, F32_BYTES, RandKCompressor,
                           StochasticQuantCompressor, TopKCompressor,
                           make_compressor, parse_comm_spec)
-from .feedback import (ChannelState, channel_init, compressed_payload,
-                       compressed_payload_local, open_channels)
+from .feedback import (ChannelState, channel_init, channel_keys,
+                       compressed_payload, compressed_payload_local,
+                       open_channels)
 from .ledger import Channel, CommLedger, static_ledger
 
 __all__ = [
     "BF16_BYTES", "Bf16Compressor", "Channel", "ChannelState",
     "CommLedger", "CommPolicy", "Compressor", "F32_BYTES",
     "RandKCompressor", "StochasticQuantCompressor", "TopKCompressor",
-    "channel_init", "compressed_payload", "compressed_payload_local",
-    "make_compressor", "open_channels", "parse_comm_spec",
-    "static_ledger",
+    "channel_init", "channel_keys", "compressed_payload",
+    "compressed_payload_local", "make_compressor", "open_channels",
+    "parse_comm_spec", "static_ledger",
 ]

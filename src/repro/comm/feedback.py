@@ -79,14 +79,24 @@ def channel_init(policy: CommPolicy, name: str, x, key: Array
                         sends=jnp.zeros((), jnp.int32), name=name)
 
 
-def open_channels(op, templates: dict, seed: int) -> dict:
-    """One ledger-registered channel per {name: template} on a MixingOp,
-    with per-channel PRNG keys derived from `seed` on a stream disjoint
-    from the seed's other uses (the single key-derivation protocol
-    shared by `dagm_run` and the baselines)."""
+def channel_keys(seed: int, names) -> dict:
+    """Per-channel PRNG keys derived from `seed` on a stream disjoint
+    from the seed's other uses (0xC033 fold) — the single
+    key-derivation protocol shared by `dagm_run`, the baselines and
+    the `repro.serve` engine (a serve slot re-derives exactly these
+    keys when admitting a job, so batched channel states match the
+    solo run's bit-for-bit)."""
     ck = jax.random.fold_in(jax.random.PRNGKey(seed), 0x_C0_33)
-    return {name: op.comm_channel(name, x, jax.random.fold_in(ck, i))
-            for i, (name, x) in enumerate(templates.items())}
+    return {name: jax.random.fold_in(ck, i)
+            for i, name in enumerate(names)}
+
+
+def open_channels(op, templates: dict, seed: int) -> dict:
+    """One ledger-registered channel per {name: template} on a
+    MixingOp, keyed by `channel_keys(seed, ...)`."""
+    keys = channel_keys(seed, list(templates))
+    return {name: op.comm_channel(name, x, keys[name])
+            for name, x in templates.items()}
 
 
 def _split(policy: CommPolicy, st: ChannelState):

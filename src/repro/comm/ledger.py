@@ -25,20 +25,28 @@ from __future__ import annotations
 import dataclasses
 from typing import Iterable
 
-from .compressors import CommPolicy, make_compressor, parse_comm_spec
-
-F32_BYTES = 4
+from .compressors import (CommPolicy, F32_BYTES, make_compressor,
+                          parse_comm_spec)
 
 
 @dataclasses.dataclass
 class Channel:
-    """Accounting record for one gossip channel."""
+    """Accounting record for one gossip channel.
+
+    `sends` is the channel's total; when the channel was charged with a
+    *job axis* (the `repro.serve` engine runs many independent DAGM
+    instances through one vmapped bucket, each slot ticking its own
+    counter), `sends_per_job` keeps the per-job breakdown and `sends`
+    is its sum — so aggregate views stay scalar while
+    `CommLedger.per_job_bytes` can attribute exact wire traffic to
+    each job."""
     name: str
     payload_shape: tuple[int, ...]
     spec: str                   # compressor spec string
     floats_per_send: int        # uncompressed f32 words per send
     bytes_per_send: int         # exact wire bytes per send
     sends: int = 0              # filled post-run (or statically)
+    sends_per_job: "object | None" = None   # np.ndarray (jobs,) or None
 
     @property
     def bytes(self) -> int:
@@ -106,14 +114,27 @@ class CommLedger:
 
     # -- charging ---------------------------------------------------------
 
-    def charge(self, name: str, sends: int) -> None:
-        self.channels[name].sends = int(sends)
+    def charge(self, name: str, sends) -> None:
+        """Set a channel's send count.  `sends` may be a scalar (the
+        single-run case) or an array with one entry per job (a serve
+        bucket's per-slot counters): arrays are kept as the per-job
+        breakdown and summed into the scalar total."""
+        import numpy as np
+        arr = np.asarray(sends)
+        ch = self.channels[name]
+        if arr.ndim == 0:
+            ch.sends, ch.sends_per_job = int(arr), None
+        else:
+            ch.sends_per_job = arr.astype(np.int64)
+            ch.sends = int(arr.sum())
 
     def charge_states(self, states: Iterable) -> None:
         """Read the traced send counters back from ChannelStates after a
-        run (the counters counted through every scan/fori_loop body)."""
+        run (the counters counted through every scan/fori_loop body).
+        Counters that picked up a leading job axis under vmap charge
+        per-job."""
         for st in states:
-            self.charge(st.name, int(st.sends))
+            self.charge(st.name, st.sends)
 
     # -- aggregates -------------------------------------------------------
 
@@ -131,6 +152,34 @@ class CommLedger:
 
     def total_sends(self) -> int:
         return sum(ch.sends for ch in self.channels.values())
+
+    # -- per-job views (channels charged with a job axis) -----------------
+
+    def per_job_sends(self) -> "dict[str, object]":
+        """{channel: (jobs,) send counts} for channels charged with a
+        job axis (empty dict when none were)."""
+        return {name: ch.sends_per_job
+                for name, ch in self.channels.items()
+                if ch.sends_per_job is not None}
+
+    def per_job_bytes(self):
+        """(jobs,) exact wire bytes attributed to each job, summed over
+        the channels charged with a job axis; None when no channel was.
+        By construction `per_job_bytes().sum() == total_bytes` for a
+        ledger whose channels were all charged per-job — the additivity
+        the serve tests pin down."""
+        per = [ch.sends_per_job * ch.bytes_per_send
+               for ch in self.channels.values()
+               if ch.sends_per_job is not None]
+        return sum(per) if per else None
+
+    def per_job_floats(self):
+        """(jobs,) uncompressed f32 words per job; None when no channel
+        was charged with a job axis."""
+        per = [ch.sends_per_job * ch.floats_per_send
+               for ch in self.channels.values()
+               if ch.sends_per_job is not None]
+        return sum(per) if per else None
 
     def vectors_per_round(self, rounds: int) -> dict[str, float]:
         return {name: ch.sends / rounds

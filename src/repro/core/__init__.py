@@ -11,15 +11,18 @@ from .mixing import (Network, make_network, mixing_rate, spectral_gap,
                      sparse_structure, SparseStructure,
                      fused_neumann_step, as_matrix, resolve_mixing_dtype,
                      mix_apply_c, laplacian_apply_c, fused_neumann_step_c)
-from .problems import (BilevelProblem, quadratic_bilevel, ho_regression,
+from .problems import (BilevelProblem, PROBLEM_FAMILIES, problem_family,
+                       quadratic_bilevel, ho_regression,
                        ho_logistic, ho_svm, ho_softmax,
-                       hyper_representation, fair_loss_tuning)
+                       hyper_representation, fair_loss_tuning,
+                       stack_problem_data)
 from .penalty import (F_objective, G_objective, grad_y_G, inner_dgd_step,
                       inner_dgd_step_c, penalized_hessian, exact_ihgp,
                       surrogate_hypergrad, consensus_error)
 from .dihgp import (dihgp_dense, dihgp_dense_c, dihgp_matrix_free,
                     dihgp_matrix_free_c, B_apply, B_apply_c)
-from .dagm import (DAGMConfig, DAGMResult, dagm_run, dagm_outer_step,
-                   dagm_outer_step_c)
+from .dagm import (DAGMConfig, DAGMResult, dagm_init_carry, dagm_run,
+                   dagm_run_chunk, dagm_outer_step, dagm_outer_step_c,
+                   dagm_validate)
 from .baselines import (BaselineResult, dgbo_run, dgtbo_run, fednest_run,
                         madbo_run)

@@ -235,6 +235,64 @@ def dagm_outer_step_c(prob: BilevelProblem, W, cfg: DAGMConfig,
         {"inner_y": y_st, "dihgp_h": h_st, "outer_x": x_st}
 
 
+def dagm_validate(cfg: DAGMConfig) -> None:
+    """Config validation shared by `dagm_run` and the `repro.serve`
+    engine (which runs the same chunk machinery without this driver)."""
+    if cfg.comm != "identity" and cfg.dihgp == "exact":
+        raise ValueError(
+            "dihgp='exact' solves the penalized system densely and has "
+            "no gossip to compress; use 'dense' or 'matrix_free' with "
+            f"comm={cfg.comm!r}")
+
+
+def dagm_init_carry(prob: BilevelProblem, W, cfg: DAGMConfig,
+                    x0: Array | None = None, y0: Array | None = None,
+                    seed: int = 0):
+    """The round-0 chunk carry ((x0, y0), channel states).
+
+    This is the single init protocol shared by `dagm_run` and the
+    `repro.serve` engine (a serve slot admitting job `seed` holds
+    exactly this carry, so batched trajectories can match solo runs
+    bit-for-bit): x0 = 0 (the paper's analysis assumption), y0 =
+    0.01·N(0, I) from PRNGKey(seed), comm channels keyed on a stream
+    disjoint from y0's."""
+    key = jax.random.PRNGKey(seed)
+    if x0 is None:   # paper's analysis assumes x_0 = 0
+        x0 = jnp.zeros((prob.n, prob.d1), jnp.float32)
+    if y0 is None:
+        y0 = 0.01 * jax.random.normal(key, (prob.n, prob.d2), jnp.float32)
+    from repro.comm import open_channels
+    cs0 = open_channels(
+        W, {"inner_y": y0, "dihgp_h": y0, "outer_x": x0}, seed)
+    return ((x0, y0), cs0)
+
+
+def dagm_run_chunk(prob: BilevelProblem, W, cfg: DAGMConfig, carry,
+                   rounds: int, metrics_fn: Callable | None = None):
+    """`rounds` outer iterations of Algorithm 2, carry in / carry out.
+
+    The round-sliced core of `dagm_run`: carry is ((x, y), channel
+    states) as produced by `dagm_init_carry` or a previous chunk.
+    Pure and un-jitted — callers jit it (`dagm_run` with rounds=K) or
+    vmap it over a leading job axis (`repro.serve`'s continuous
+    batching, which retires converged jobs at chunk boundaries).
+    Chunking is exact: running K rounds as K/T chunks of T (T > 1)
+    reproduces the single K-round scan bit-for-bit.  (T = 1 is legal
+    but XLA fully unrolls a length-1 scan and may fuse the round body
+    differently, drifting ~1 ulp/round from the scanned program — the
+    serve engine therefore never slices chunks below T = 2 unless
+    K = 1.)
+
+    Returns (carry, metrics) with metrics stacked over the chunk's
+    rounds."""
+    def body(c, _):
+        (x, y), cs = c
+        x, y, m, cs = dagm_outer_step_c(prob, W, cfg, x, y, cs,
+                                        metrics_fn)
+        return ((x, y), cs), m
+    return jax.lax.scan(body, carry, None, length=rounds)
+
+
 def dagm_run(prob: BilevelProblem, net: Network, cfg: DAGMConfig,
              x0: Array | None = None, y0: Array | None = None,
              metrics_fn: Callable | None = None, seed: int = 0
@@ -245,37 +303,22 @@ def dagm_run(prob: BilevelProblem, net: Network, cfg: DAGMConfig,
     (I−W)·y below (inner DGD, DIHGP, outer step, metrics) runs on it,
     and `cfg.comm` wraps each of those gossips in the compressed
     channel protocol.  The returned `DAGMResult.ledger` holds the
-    byte-accurate traffic accounting charged from the run itself."""
-    if cfg.comm != "identity" and cfg.dihgp == "exact":
-        raise ValueError(
-            "dihgp='exact' solves the penalized system densely and has "
-            "no gossip to compress; use 'dense' or 'matrix_free' with "
-            f"comm={cfg.comm!r}")
+    byte-accurate traffic accounting charged from the run itself.
+
+    Composition: this driver is `dagm_init_carry` + one jitted
+    `dagm_run_chunk` of K rounds + a ledger charge; `repro.serve`
+    stacks the same pieces over a job axis."""
+    dagm_validate(cfg)
     W = make_mixing_op(net, backend=cfg.mixing,
                        interpret=cfg.mixing_interpret,
                        dtype=cfg.mixing_dtype, comm=cfg.comm)
-    key = jax.random.PRNGKey(seed)
-    if x0 is None:   # paper's analysis assumes x_0 = 0
-        x0 = jnp.zeros((prob.n, prob.d1), jnp.float32)
-    if y0 is None:
-        y0 = 0.01 * jax.random.normal(key, (prob.n, prob.d2), jnp.float32)
-
-    # comm channels: keys on a stream disjoint from y0's above
-    from repro.comm import open_channels
-    cs0 = open_channels(
-        W, {"inner_y": y0, "dihgp_h": y0, "outer_x": x0}, seed)
-
-    def body(carry, _):
-        (x, y), cs = carry
-        x, y, m, cs = dagm_outer_step_c(prob, W, cfg, x, y, cs,
-                                        metrics_fn)
-        return ((x, y), cs), m
+    carry0 = dagm_init_carry(prob, W, cfg, x0, y0, seed)
 
     @jax.jit
-    def run(x0, y0, cs0):
-        return jax.lax.scan(body, ((x0, y0), cs0), None, length=cfg.K)
+    def run(carry):
+        return dagm_run_chunk(prob, W, cfg, carry, cfg.K, metrics_fn)
 
-    ((x, y), cs), metrics = run(x0, y0, cs0)
+    ((x, y), cs), metrics = run(carry0)
     W.ledger.charge_states(cs.values())
     return DAGMResult(x=x, y=y, metrics=metrics, ledger=W.ledger)
 

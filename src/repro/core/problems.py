@@ -96,6 +96,18 @@ class BilevelProblem:
         ys = jnp.broadcast_to(ybar_star, (self.n,) + ybar_star.shape)
         return jnp.mean(self.f_stacked(xs, ys))
 
+    # ---- job batching (repro.serve) ----
+    def with_data(self, data) -> "BilevelProblem":
+        """Same objectives/shapes on a different data pytree — the
+        per-job view inside a vmapped serve bucket (`data` is one job's
+        slice of a `stack_problem_data` stack)."""
+        return dataclasses.replace(self, data=data)
+
+    def data_batch_axes(self):
+        """vmap in_axes for a leading job axis on `data` (every leaf
+        batched on axis 0)."""
+        return jax.tree.map(lambda _: 0, self.data)
+
 
 # ---------------------------------------------------------------------------
 # 1. Quadratic bilevel with closed forms (ground truth for tests)
@@ -430,6 +442,64 @@ def fair_loss_tuning(n: int, d: int = 28, n_classes: int = 10,
 
     return BilevelProblem("fair_loss_tuning", n, n_classes, d2, f, g, data,
                           mu_g=ridge)
+
+
+# ---------------------------------------------------------------------------
+# Job batching (repro.serve): many independent instances, one job axis
+# ---------------------------------------------------------------------------
+
+#: Problem zoo registry: family name -> constructor.  `repro.serve`
+#: resolves `JobSpec.family` here; every constructor returns a
+#: `BilevelProblem` whose `f`/`g` close over *no* data (data always
+#: flows through `prob.data`), which is what makes a family vmappable
+#: across jobs: same trace, different `data` slice per job.
+PROBLEM_FAMILIES = {
+    "quadratic": quadratic_bilevel,
+    "ho_regression": ho_regression,
+    "ho_logistic": ho_logistic,
+    "ho_svm": ho_svm,
+    "ho_softmax": ho_softmax,
+    "hyper_representation": hyper_representation,
+    "fair_loss_tuning": fair_loss_tuning,
+}
+
+
+def problem_family(name: str):
+    """Constructor for a zoo family (KeyError with the menu otherwise)."""
+    try:
+        return PROBLEM_FAMILIES[name]
+    except KeyError:
+        raise KeyError(f"unknown problem family {name!r}; expected one "
+                       f"of {sorted(PROBLEM_FAMILIES)}") from None
+
+
+def stack_problem_data(probs) -> Any:
+    """Stack compatible problems' data pytrees along a new leading job
+    axis: leaves go (n, ...) -> (jobs, n, ...).
+
+    The problems must be instances of the same family at the same
+    shapes (same `name`, n, d1, d2 and leaf shapes) — i.e. members of
+    one serve bucket; `f`/`g` are taken from the template (identical
+    closures by construction) and each job's slice is reattached with
+    `BilevelProblem.with_data` inside the vmapped runner."""
+    probs = list(probs)
+    if not probs:
+        raise ValueError("stack_problem_data needs at least one problem")
+    t = probs[0]
+    ts = jax.tree.map(jnp.shape, t.data)
+    for p in probs[1:]:
+        if (p.name, p.n, p.d1, p.d2) != (t.name, t.n, t.d1, t.d2):
+            raise ValueError(
+                f"cannot stack {p.name}(n={p.n},d1={p.d1},d2={p.d2}) "
+                f"with {t.name}(n={t.n},d1={t.d1},d2={t.d2}): same "
+                f"family/shapes required (one bucket = one compile "
+                f"signature)")
+        ps = jax.tree.map(jnp.shape, p.data)
+        if ts != ps:
+            raise ValueError(
+                f"cannot stack {p.name} jobs with differing data leaf "
+                f"shapes: {ps} vs {ts}")
+    return jax.tree.map(lambda *ls: jnp.stack(ls), *[p.data for p in probs])
 
 
 def balanced_accuracy(prob: BilevelProblem, y: Array) -> float:

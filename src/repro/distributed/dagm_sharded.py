@@ -60,11 +60,26 @@ class ShardedDAGMConfig:
     #                            comm_dtype — leaving comm="identity"
     #                            with comm_dtype="bf16" aliases to the
     #                            "bf16" policy (same wire), so existing
-    #                            configs keep their behavior.  Error-
-    #                            feedback replicas are per-round (they
-    #                            reset at each outer round boundary so
-    #                            the step stays a pure (x, y, batch)
-    #                            function).
+    #                            configs keep their behavior.  By default
+    #                            error-feedback replicas are per-round
+    #                            (they reset at each outer round boundary
+    #                            so the step stays a pure (x, y, batch)
+    #                            function); persist_ef threads them
+    #                            across rounds instead.
+    persist_ef: bool = False   # thread the EF `hat` replicas (and the
+    #                            compressor key/send-counter state)
+    #                            across outer rounds as an extra carry:
+    #                            the step becomes (x, y, batch, channels)
+    #                            -> (x, y, metrics, channels), matching
+    #                            the reference tier where inner_y/outer_x
+    #                            replicas warm-start every round (the
+    #                            per-round dihgp_h variable still resets
+    #                            its hat, like dagm_outer_step_c).  Open
+    #                            the initial states with
+    #                            `open_sharded_channels`.  Closes the
+    #                            ROADMAP "EF state across outer rounds"
+    #                            item; measured by bench_comm's
+    #                            comm/sharded_ef rows.
     mix_every: int = 1         # j > 1: gossip only every j-th inner step
     #                            (local-updates variant, cf. FedNest [77];
     #                            §Perf — cuts inner comm by ~j)
@@ -104,13 +119,14 @@ def _agent_index(axis):
 def dagm_local_round(g_fn: Callable, f_fn: Callable,
                      cfg: ShardedDAGMConfig, w: RingWeights,
                      x: Pytree, y: Pytree, batch: Pytree,
-                     key=None):
+                     key=None, channels: dict | None = None):
     """One DAGM outer round from a single agent's perspective.
 
     g_fn(x, y, batch) -> scalar local inner loss  (strongly-convex-ish)
     f_fn(x, y, batch) -> scalar local outer loss
     Must be called inside shard_map over cfg.axis.
-    Returns (x⁺, y⁺, metrics).
+    Returns (x⁺, y⁺, metrics), plus the advanced channel dict when
+    `channels` was given.
 
     Every ppermute exchange goes through the `cfg.comm_policy` channel
     (`collectives.ring_mix_c`): identity/bf16 policies reproduce the
@@ -118,7 +134,14 @@ def dagm_local_round(g_fn: Callable, f_fn: Callable,
     error-feedback channels for y, h and x.  `key` feeds stochastic
     compressors (folded with the agent index so rows decorrelate); it
     is unused otherwise.
-    """
+
+    `channels` (persist_ef mode): this agent's {"inner_y", "dihgp_h",
+    "outer_x"} ChannelStates carried over from the previous round —
+    EF replicas warm-start instead of reopening at zero (dihgp_h still
+    resets its hat: the h vector itself re-initializes every round),
+    keys advance inside the states, and the send counters accumulate
+    across the whole run.  The caller threads the returned dict into
+    the next round."""
     from repro.comm import channel_init
     axis = cfg.axis
     beta, alpha = cfg.beta, cfg.alpha
@@ -128,21 +151,27 @@ def dagm_local_round(g_fn: Callable, f_fn: Callable,
     grad_x_f = jax.grad(f_fn, argnums=0)
     grad_y_f = jax.grad(f_fn, argnums=1)
 
-    if pol.stochastic:
-        if key is None:
-            raise ValueError(
-                f"comm policy {pol.spec!r} draws stochastic compression "
-                f"noise: pass a fresh PRNG key per round (reusing one "
-                f"key would correlate the rounding across rounds and "
-                f"bias the gossip) — make_sharded_dagm's step takes it "
-                f"as its fourth argument")
-        key = jax.random.fold_in(key, _agent_index(axis))
-    elif key is None:
-        key = jax.random.PRNGKey(0)     # threaded but never consumed
-    ks = jax.random.split(key, 3)
-    st_y = channel_init(pol, "inner_y", y, ks[0])
-    st_h = channel_init(pol, "dihgp_h", y, ks[1])
-    st_x = channel_init(pol, "outer_x", x, ks[2])
+    if channels is not None:
+        st_y = channels["inner_y"]
+        st_h = channels["dihgp_h"].reset_hat()
+        st_x = channels["outer_x"]
+    else:
+        if pol.stochastic:
+            if key is None:
+                raise ValueError(
+                    f"comm policy {pol.spec!r} draws stochastic "
+                    f"compression noise: pass a fresh PRNG key per round "
+                    f"(reusing one key would correlate the rounding "
+                    f"across rounds and bias the gossip) — "
+                    f"make_sharded_dagm's step takes it as its fourth "
+                    f"argument")
+            key = jax.random.fold_in(key, _agent_index(axis))
+        elif key is None:
+            key = jax.random.PRNGKey(0)     # threaded but never consumed
+        ks = jax.random.split(key, 3)
+        st_y = channel_init(pol, "inner_y", y, ks[0])
+        st_h = channel_init(pol, "dihgp_h", y, ks[1])
+        st_x = channel_init(pol, "outer_x", x, ks[2])
 
     # ---- inner loop: y ← W y − β ∇_y g  (Eq. 15/16), M rounds ----
     def inner(t, carry):
@@ -202,11 +231,15 @@ def dagm_local_round(g_fn: Callable, f_fn: Callable,
         "inner_loss": g_fn(x, y, batch),
         "hypergrad_norm": tnorm(d_dir),
         "consensus_x": tnorm(ring_laplacian(x, cfg.axis, w)),
-        # gossip exchanges this round, from the traced channel counters
-        # (feeds sharded_comm_ledger for the byte accounting)
+        # gossip exchanges, from the traced channel counters (feeds
+        # sharded_comm_ledger for the byte accounting): this round's
+        # when channels reopen per round, cumulative under persist_ef
         "comm_sends": (st_y.sends + st_h.sends + st_x.sends)
         .astype(jnp.float32),
     }  # consensus metric uses full-precision exchange (diagnostic)
+    if channels is not None:
+        return x_new, y, metrics, \
+            {"inner_y": st_y, "dihgp_h": st_h, "outer_x": st_x}
     return x_new, y, metrics
 
 
@@ -231,6 +264,12 @@ def make_sharded_dagm(g_fn: Callable, f_fn: Callable,
     returned step takes a fourth argument, a replicated PRNG key:
     ``step(x, y, batch, key)``; deterministic policies keep the
     historical 3-argument signature.
+
+    With ``cfg.persist_ef`` the step instead carries the gossip channel
+    states across rounds: ``step(x, y, batch, channels) -> (x, y,
+    metrics, channels)`` with `channels` from `open_sharded_channels`
+    (keys live inside the states, so stochastic policies need no
+    per-round key argument in this mode).
     """
     ax = cfg.axis
     ax_names = ax if isinstance(ax, tuple) else (ax,)
@@ -245,20 +284,34 @@ def make_sharded_dagm(g_fn: Callable, f_fn: Callable,
     manual = frozenset(manual_axes) if manual_axes is not None         else frozenset(ax_names)
     stochastic = cfg.comm_policy.stochastic
 
+    squeeze = lambda t: jax.tree.map(lambda a: a[0], t)
+    expand = lambda t: jax.tree.map(lambda a: a[None], t)
+
     def local_step(x, y, batch, key=None):
         # strip the (size-1) leading agent axis inside the shard
-        squeeze = lambda t: jax.tree.map(lambda a: a[0], t)
-        expand = lambda t: jax.tree.map(lambda a: a[None], t)
         x1, y1, m = dagm_local_round(g_fn, f_fn, cfg, w,
                                      squeeze(x), squeeze(y),
                                      squeeze(batch), key=key)
         m = jax.tree.map(lambda s: jax.lax.pmean(s, ax), m)
         return expand(x1), expand(y1), m
 
+    def local_step_persist(x, y, batch, cs):
+        x1, y1, m, cs1 = dagm_local_round(g_fn, f_fn, cfg, w,
+                                          squeeze(x), squeeze(y),
+                                          squeeze(batch),
+                                          channels=squeeze(cs))
+        m = jax.tree.map(lambda s: jax.lax.pmean(s, ax), m)
+        return expand(x1), expand(y1), m, expand(cs1)
+
     kw = {}
     if manual != frozenset(mesh.axis_names):
         kw["axis_names"] = manual
-    if stochastic:
+    if cfg.persist_ef:
+        step = shard_map(local_step_persist, mesh=mesh,
+                         in_specs=(xs, ys, bs, P(ax)),
+                         out_specs=(xs, ys, P(), P(ax)),
+                         check_vma=False, **kw)
+    elif stochastic:
         step = shard_map(local_step, mesh=mesh,
                          in_specs=(xs, ys, bs, P()),
                          out_specs=(xs, ys, P()), check_vma=False, **kw)
@@ -267,6 +320,37 @@ def make_sharded_dagm(g_fn: Callable, f_fn: Callable,
                          mesh=mesh, in_specs=(xs, ys, bs),
                          out_specs=(xs, ys, P()), check_vma=False, **kw)
     return (jax.jit(step) if jit_step else step), w
+
+
+def open_sharded_channels(cfg: ShardedDAGMConfig, x: Pytree, y: Pytree,
+                          seed: int = 0) -> dict:
+    """Globally-stacked gossip ChannelStates for the persist_ef step.
+
+    `x` / `y` are the *global* pytrees with a leading agent axis n
+    (sharded 1-per-agent, the same layout `make_sharded_dagm` expects):
+    each agent's slice holds its EF replica (zeros at open), its
+    compressor PRNG key (decorrelated by agent index, the same fold-in
+    protocol `dagm_local_round` uses when reopening per round) and its
+    traced send counter.  Shard with `P(cfg.axis)` — the step's
+    in/out_specs already do."""
+    from repro.comm import ChannelState
+    pol = cfg.comm_policy
+    n = jax.tree.leaves(y)[0].shape[0]
+    keys = jax.vmap(lambda i: jax.random.split(
+        jax.random.fold_in(jax.random.PRNGKey(seed), i), 3))(
+            jnp.arange(n))                                    # (n, 3, 2)
+
+    def mk(name, tpl, k):
+        if pol.ef:
+            hat = jax.tree.map(jnp.zeros_like, tpl)
+        else:
+            hat = jnp.zeros((n,), jnp.float32)
+        return ChannelState(hat=hat, key=k,
+                            sends=jnp.zeros((n,), jnp.int32), name=name)
+
+    return {"inner_y": mk("inner_y", y, keys[:, 0]),
+            "dihgp_h": mk("dihgp_h", y, keys[:, 1]),
+            "outer_x": mk("outer_x", x, keys[:, 2])}
 
 
 def sharded_comm_ledger(cfg: ShardedDAGMConfig, x: Pytree, y: Pytree,

@@ -1,0 +1,39 @@
+"""repro.serve — multi-tenant batched bilevel solver engine.
+
+The fourth execution tier: where `core` solves one bilevel instance
+per process (reference), `kernels`/`topology` make its hot loop fast,
+and `distributed` shards one huge instance across a mesh, `serve`
+throughput-optimizes *many small instances at once* — the paper's §6
+scenarios as a service (hyper-parameter sweeps, per-tenant fair-loss
+tuning, topology studies), each job a small independent DAGM run that
+would leave an accelerator idle on its own.
+
+Pipeline: `JobSpec`s (`jobs`) are grouped by compile signature and
+padded into fixed-width buckets (`batching`), then a `ServeEngine`
+(`engine`) advances each bucket through vmapped T-round
+`dagm_run_chunk` slices with a compile cache (one trace per bucket
+program) and continuous batching (converged jobs retire mid-flight,
+queued jobs backfill their slots).  Per-job results report rounds,
+convergence, wall-clock share and exact wire bytes from the bucket
+`CommLedger`'s per-slot send counters.
+
+    from repro.serve import JobSpec, ServeEngine
+    eng = ServeEngine(chunk_rounds=10)
+    eng.submit([JobSpec("ho_regression", {"n": 8, "d": 16, "seed": s},
+                        DAGMConfig(alpha=a, beta=b, K=40, M=5, U=3,
+                                   dihgp="matrix_free", curvature=40.0))
+                for s, (a, b) in enumerate(grid)])
+    results = eng.run()
+"""
+from .jobs import (JobResult, JobSpec, build_network, build_problem,
+                   compile_signature, job_hp)
+from .batching import (WIDTHS, BucketState, bucketize, chunk_rounds_for,
+                       pad_width)
+from .engine import HP_MODES, EngineStats, ServeEngine
+
+__all__ = [
+    "BucketState", "EngineStats", "HP_MODES", "JobResult", "JobSpec",
+    "ServeEngine", "WIDTHS", "bucketize", "build_network",
+    "build_problem", "chunk_rounds_for", "compile_signature", "job_hp",
+    "pad_width",
+]

@@ -1,0 +1,193 @@
+"""Shape buckets + slot management for the batched solver engine.
+
+The unit of execution is a **bucket**: a fixed width of job *slots*
+sharing one compile signature.  All slots advance together through one
+vmapped `dagm_run_chunk` call per scheduling step; a slot whose job
+retires (converged / round budget exhausted) is backfilled from the
+queue without touching the other slots' in-flight state — continuous
+batching at chunk granularity.
+
+Width policy: buckets are padded to the next power of two, with a
+floor of 2.  The floor is deliberate: XLA specializes a width-1
+vmapped program (size-1 batch dims get squeezed and the round body
+re-fuses), which would break the engine's width-invariance guarantee —
+for widths ≥ 2 a job's trajectory is bit-identical no matter which
+width bucket (or slot) it lands in, padding and backfill included.
+
+Chunk policy: `chunk_rounds_for` slices the K-round run into T-round
+chunks with T | K and T ≥ 2 (a length-1 scan is fully unrolled by XLA
+and drifts from the scanned program; see `dagm_run_chunk`).  Chunking
+is bitwise-exact, so retirement granularity is a pure latency/
+throughput knob.
+
+Inert padding: slots that are not active still compute (that is what
+padding means) but their carry is frozen by the engine's
+`where(active, new, old)` mask — state, channel error-feedback
+replicas and send counters all hold, so a padded slot costs FLOPs but
+never bytes, rounds or ledger entries.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.dagm import dagm_init_carry
+from repro.core.problems import BilevelProblem
+from repro.topology import Network
+
+from .jobs import (JobSpec, Signature, compile_signature, config_hp,
+                   job_hp)
+
+#: Bucket widths (powers of two, floor 2 — see module docstring).
+WIDTHS = (2, 4, 8, 16, 32, 64)
+
+
+def pad_width(n_jobs: int, max_width: int = WIDTHS[-1]) -> int:
+    """Smallest bucket width holding `n_jobs`: always one of `WIDTHS`
+    (power of two, floor 2 — never 1, whatever max_width says: a
+    width-1 program is exactly the XLA-specialized shape the floor
+    exists to avoid), capped at the largest allowed width ≤
+    max_width."""
+    allowed = [w for w in WIDTHS if w <= max(int(max_width), 2)] \
+        or [WIDTHS[0]]
+    for w in allowed:
+        if w >= n_jobs:
+            return w
+    return allowed[-1]
+
+
+def chunk_rounds_for(K: int, requested: int) -> int:
+    """Largest T ≤ `requested` with T | K and T ≥ 2.
+
+    Falls back to K itself (one chunk, no mid-flight retirement) when
+    K is prime beyond `requested` or K == 1 — preserving bitwise
+    equality with the single K-round scan is worth more than
+    retirement granularity."""
+    top = max(2, min(int(requested), K))
+    for t in range(top, 1, -1):
+        if K % t == 0:
+            return t
+    return K
+
+
+def bucketize(specs) -> dict:
+    """Group specs by compile signature, building each job's problem.
+
+    Returns {signature: [(spec, problem), ...]} in submission order —
+    the problems are needed anyway (data is per-job) and building them
+    here keeps the engine's scheduling loop free of zoo constructors."""
+    from .jobs import build_problem
+    buckets: dict[Signature, list] = {}
+    for spec in specs:
+        prob = build_problem(spec)
+        sig = compile_signature(spec, prob)
+        buckets.setdefault(sig, []).append((spec, prob))
+    return buckets
+
+
+@dataclasses.dataclass
+class RetiredJob:
+    """Raw per-slot readout at retirement (JobResult sans ledger math)."""
+    spec: JobSpec
+    x: Any
+    y: Any
+    rounds: int
+    converged: bool
+    final_gap: float
+    sends: dict
+    wall_s: float
+
+
+class BucketState:
+    """Device-resident state of one in-flight bucket.
+
+    Holds the stacked (width, ...) job axis: data leaves, per-slot
+    hyper-parameters, the chunk carry ((x, y), channel states), the
+    active mask and per-slot accounting.  `admit` writes one job's
+    freshly-initialized state into a slot (exactly
+    `core.dagm.dagm_init_carry`'s output, so a slot's trajectory is
+    the solo run's); `retire` reads the slot back out."""
+
+    def __init__(self, signature: Signature, width: int,
+                 template: BilevelProblem, net: Network, op, cfg):
+        self.signature = signature
+        self.width = width
+        self.template = template
+        self.net = net
+        self.op = op
+        self.cfg = cfg                     # static fields authoritative
+        self.has_curvature = cfg.curvature is not None
+        self.slots: list[JobSpec | None] = [None] * width
+        self.active = np.zeros(width, bool)
+        self.rounds = np.zeros(width, np.int64)
+        self.wall = np.zeros(width, np.float64)
+        self.retired: list[RetiredJob] = []
+        # template-filled stacked state: padding slots replicate the
+        # template job so every slot always computes well-defined math
+        self.data = jax.tree.map(
+            lambda leaf: jnp.broadcast_to(
+                leaf[None], (width,) + leaf.shape), template.data)
+        # padding slots carry the template config's hp row
+        self.hp = np.tile(np.asarray(config_hp(cfg), np.float32),
+                          (width, 1))
+        carry1 = dagm_init_carry(template, op, cfg, seed=0)
+        self.carry = jax.tree.map(
+            lambda leaf: jnp.broadcast_to(
+                leaf[None], (width,) + leaf.shape), carry1)
+
+    # -- slot lifecycle ----------------------------------------------------
+
+    def admit(self, slot: int, spec: JobSpec, prob: BilevelProblem
+              ) -> None:
+        """Write one job's round-0 state into `slot`."""
+        assert not self.active[slot], f"slot {slot} still active"
+        self.slots[slot] = spec
+        self.active[slot] = True
+        self.rounds[slot] = 0
+        self.wall[slot] = 0.0
+        self.hp[slot] = np.asarray(job_hp(spec), np.float32)
+        self.data = jax.tree.map(
+            lambda stack, leaf: stack.at[slot].set(leaf),
+            self.data, prob.data)
+        carry1 = dagm_init_carry(prob, self.op, self.cfg, seed=spec.seed)
+        self.carry = jax.tree.map(
+            lambda stack, leaf: stack.at[slot].set(leaf),
+            self.carry, carry1)
+
+    def retire(self, slot: int, final_gap: float, converged: bool
+               ) -> RetiredJob:
+        """Read a finished job back out of `slot` and free it."""
+        spec = self.slots[slot]
+        (x, y), cs = self.carry
+        rec = RetiredJob(
+            spec=spec,
+            x=np.asarray(x[slot]), y=np.asarray(y[slot]),
+            rounds=int(self.rounds[slot]), converged=bool(converged),
+            final_gap=float(final_gap),
+            sends={name: int(st.sends[slot]) for name, st in cs.items()},
+            wall_s=float(self.wall[slot]))
+        self.retired.append(rec)
+        self.slots[slot] = None
+        self.active[slot] = False
+        return rec
+
+    # -- views -------------------------------------------------------------
+
+    def any_active(self) -> bool:
+        return bool(self.active.any())
+
+    def active_mask(self):
+        return jnp.asarray(self.active)
+
+    def hp_arrays(self) -> tuple:
+        """Per-slot hyper-parameter columns (alpha, beta[, curvature])."""
+        return tuple(jnp.asarray(self.hp[:, i])
+                     for i in range(self.hp.shape[1]))
+
+    def hp_key(self) -> tuple:
+        """Hashable per-slot hp snapshot (static-hp compile key)."""
+        return tuple(map(tuple, self.hp.tolist()))

@@ -1,0 +1,288 @@
+"""ServeEngine — continuous-batched execution of bilevel job fleets.
+
+The scheduling loop per bucket signature:
+
+    admit jobs into slots ─► one vmapped+jitted T-round chunk
+         ▲                          │ (compile cache: one trace per
+         │                          │  bucket program, ever)
+         └── backfill ◄── retire converged / budget-exhausted slots
+
+Every chunk call advances *all* slots T outer rounds through one fused
+`lax.scan`; converged jobs retire mid-flight at chunk boundaries and
+queued jobs take their slots, so the accelerator never idles on a
+straggler-free queue.  Per-job results carry the exact wire bytes from
+the bucket ledger's per-slot send counters, the rounds actually run,
+and the wall-clock share.
+
+Hyper-parameter modes (`hp_mode`)
+---------------------------------
+* ``"traced"`` (default): α/β/curvature enter the chunk program as
+  runtime arguments.  ONE compile serves every sweep of the same
+  signature — backfill, new waves, new hyper-parameter grids, no
+  retrace.  The cost: XLA folds literal hyper-parameters differently
+  from traced ones (division-by-constant becomes multiply-by-
+  reciprocal), so trajectories agree with the solo `dagm_run` program
+  only to ~1 ulp/round (bounded, measured in `benchmarks/bench_serve`)
+  — while remaining bit-exact across bucket widths, slots and waves.
+* ``"static"``: the per-slot hp vector is baked into the trace as a
+  constant.  Trajectories are **bit-exact against solo `dagm_run`**
+  (the reproducibility mode the serve tests pin down, matrix_free
+  dihgp); the compile cache keys on the hp snapshot, so changing a
+  slot's hp (e.g. backfilling a different sweep point) re-traces.
+
+Both modes share the width-invariance guarantee (widths ≥ 2) because
+the bucket program treats every slot identically; padding slots are
+frozen by the active mask (see `batching`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.dagm import dagm_run_chunk
+from repro.topology import make_mixing_op
+
+from .batching import (BucketState, bucketize, chunk_rounds_for,
+                       pad_width)
+from .jobs import JobResult, JobSpec, Signature
+
+HP_MODES = ("traced", "static")
+
+
+def _no_metrics(prob, W, x, y):
+    # dagm_outer_step_c appends hypergrad_est_norm_sq — the engine's
+    # convergence signal — on top of whatever the metrics_fn returns;
+    # the default serve run records nothing else per round.
+    return {}
+
+
+@dataclasses.dataclass
+class EngineStats:
+    """Aggregate counters across the engine's lifetime."""
+    traces: int = 0            # chunk programs actually traced by jax
+    cache_misses: int = 0      # chunk-fn builds (≡ distinct cache keys)
+    cache_hits: int = 0        # chunk-fn lookups served from cache
+    chunks: int = 0            # vmapped chunk invocations
+    buckets: int = 0           # bucket flights completed
+    jobs_completed: int = 0
+    wall_s: float = 0.0        # engine wall time inside run()
+
+
+class ServeEngine:
+    """Multi-tenant batched DAGM solver (see module docstring).
+
+    chunk_rounds: requested retirement granularity T (rounded down to
+                  a divisor of each bucket's K, floor 2).
+    max_width:    bucket width cap (pad_width pads to powers of two).
+    hp_mode:      "traced" | "static" — see module docstring.
+    metrics_fn:   optional per-round metrics callback threaded to
+                  `dagm_outer_step_c` (default records nothing beyond
+                  the convergence signal).
+    """
+
+    def __init__(self, chunk_rounds: int = 10, max_width: int = 64,
+                 hp_mode: str = "traced", metrics_fn=None,
+                 cache_capacity: int = 64):
+        if hp_mode not in HP_MODES:
+            raise ValueError(f"unknown hp_mode {hp_mode!r}; expected "
+                             f"one of {HP_MODES}")
+        if max_width < 2:
+            raise ValueError(
+                f"max_width must be >= 2 (got {max_width}): width-1 "
+                f"buckets compile to an XLA-specialized program that "
+                f"breaks the width-invariance guarantee")
+        self.chunk_rounds = int(chunk_rounds)
+        self.max_width = int(max_width)
+        self.hp_mode = hp_mode
+        self.metrics_fn = metrics_fn if metrics_fn is not None \
+            else _no_metrics
+        self.stats = EngineStats()
+        self.ledgers: dict[Signature, object] = {}
+        self._queue: list[JobSpec] = []
+        self._auto_id = 0
+        # compile cache: key -> jitted chunk fn; lives for the engine's
+        # lifetime, so a later wave of the same bucket program re-traces
+        # nothing (EngineStats.traces is the ground truth — it counts
+        # actual jax traces via a side effect in the traced body).
+        # LRU-bounded: static hp_mode mints a key per hp snapshot, so a
+        # long-running sweep service would otherwise grow one compiled
+        # program (plus its closed-over MixingOp) per snapshot forever.
+        self._cache: dict[tuple, object] = {}
+        self._cache_capacity = int(cache_capacity)
+        self._trace_log = {"count": 0}
+
+    # -- queue -------------------------------------------------------------
+
+    def submit(self, specs) -> list[str]:
+        """Enqueue job specs (auto-assigning missing job_ids); returns
+        the job ids in submission order.  Caller-supplied ids must be
+        unique within the queued batch — results are keyed by id, so a
+        duplicate would silently shadow the first job's outcome."""
+        ids = []
+        queued = {spec.job_id for spec in self._queue}
+        for spec in ([specs] if isinstance(specs, JobSpec) else
+                     list(specs)):
+            if spec.job_id is None:
+                spec = dataclasses.replace(
+                    spec, job_id=f"job{self._auto_id}")
+                self._auto_id += 1
+            if spec.job_id in queued:
+                raise ValueError(
+                    f"duplicate job_id {spec.job_id!r} in queue")
+            queued.add(spec.job_id)
+            self._queue.append(spec)
+            ids.append(spec.job_id)
+        return ids
+
+    # -- chunk program cache ----------------------------------------------
+
+    def _chunk_fn(self, bucket: BucketState, T: int):
+        key = (bucket.signature, bucket.width, T, self.hp_mode)
+        if self.hp_mode == "static":
+            key += (bucket.hp_key(),)
+        fn = self._cache.get(key)
+        if fn is not None:
+            self.stats.cache_hits += 1
+            self._cache[key] = self._cache.pop(key)   # LRU touch
+            return fn
+        self.stats.cache_misses += 1
+        fn = self._build_chunk_fn(bucket, T)
+        while len(self._cache) >= self._cache_capacity:
+            self._cache.pop(next(iter(self._cache)))  # evict oldest
+        self._cache[key] = fn
+        return fn
+
+    def _build_chunk_fn(self, bucket: BucketState, T: int):
+        # close over a data-free template: the job data always arrives
+        # through the `data` argument, so the closure must not pin the
+        # creating wave's data arrays for the cache entry's lifetime
+        template = bucket.template.with_data(None)
+        op, cfg = bucket.op, bucket.cfg
+        has_curv = bucket.has_curvature
+        metrics_fn = self.metrics_fn
+        trace_log = self._trace_log
+        stats = self.stats
+
+        def one_job(data_j, hp_j, carry, active):
+            prob_j = template.with_data(data_j)
+            curv = hp_j[2] if has_curv else None
+            cfg_j = dataclasses.replace(cfg, alpha=hp_j[0], beta=hp_j[1],
+                                        curvature=curv)
+            c2, m = dagm_run_chunk(prob_j, op, cfg_j, carry, T,
+                                   metrics_fn)
+            # inert padding/retired slots: freeze the whole carry
+            # (state, EF replicas, send counters) behind the mask
+            c2 = jax.tree.map(lambda new, old: jnp.where(active, new, old),
+                              c2, carry)
+            return c2, m
+
+        if self.hp_mode == "static":
+            # hp columns enter as concrete closure constants: jit bakes
+            # them into the program (the bit-exact-vs-solo mode)
+            hp_const = tuple(jnp.asarray(bucket.hp[:, i])
+                             for i in range(bucket.hp.shape[1]))
+
+            def chunk(data, carry, active):
+                trace_log["count"] += 1
+                stats.traces = trace_log["count"]
+                return jax.vmap(one_job)(data, hp_const, carry, active)
+        else:
+            def chunk(data, hp, carry, active):
+                trace_log["count"] += 1
+                stats.traces = trace_log["count"]
+                return jax.vmap(one_job)(data, hp, carry, active)
+
+        return jax.jit(chunk)
+
+    # -- scheduling loop ---------------------------------------------------
+
+    def run(self) -> list[JobResult]:
+        """Drain the queue; returns JobResults in submission order."""
+        t0 = time.perf_counter()
+        queue, self._queue = self._queue, []
+        order = [spec.job_id for spec in queue]
+        results: dict[str, JobResult] = {}
+        for sig, items in bucketize(queue).items():
+            self._run_bucket(sig, items, results)
+        self.stats.wall_s += time.perf_counter() - t0
+        return [results[jid] for jid in order]
+
+    def _run_bucket(self, sig: Signature, items: list,
+                    results: dict) -> None:
+        from .jobs import build_network
+        spec0, prob0 = items[0]
+        cfg = spec0.config
+        net = build_network(spec0)
+        op = make_mixing_op(net, backend=cfg.mixing,
+                            interpret=cfg.mixing_interpret,
+                            dtype=cfg.mixing_dtype, comm=cfg.comm)
+        width = pad_width(len(items), self.max_width)
+        T = chunk_rounds_for(cfg.K, self.chunk_rounds)
+        bucket = BucketState(sig, width, prob0, net, op, cfg)
+        pending = deque(items)
+        for slot in range(width):
+            if pending:
+                bucket.admit(slot, *pending.popleft())
+
+        while bucket.any_active():
+            fn = self._chunk_fn(bucket, T)
+            t0 = time.perf_counter()
+            if self.hp_mode == "static":
+                carry, metrics = fn(bucket.data, bucket.carry,
+                                    bucket.active_mask())
+            else:
+                carry, metrics = fn(bucket.data, bucket.hp_arrays(),
+                                    bucket.carry, bucket.active_mask())
+            jax.block_until_ready(carry)
+            dt = time.perf_counter() - t0
+            self.stats.chunks += 1
+            bucket.carry = carry
+
+            active = np.nonzero(bucket.active)[0]
+            bucket.rounds[active] += T
+            bucket.wall[active] += dt / max(len(active), 1)
+            gaps = np.asarray(metrics["hypergrad_est_norm_sq"])[:, -1]
+            for slot in active:
+                spec = bucket.slots[slot]
+                converged = spec.tol is not None \
+                    and float(gaps[slot]) <= spec.tol
+                if converged or bucket.rounds[slot] >= cfg.K:
+                    rec = bucket.retire(slot, float(gaps[slot]),
+                                        converged)
+                    results[rec.spec.job_id] = self._make_result(
+                        bucket, rec)
+                    self.stats.jobs_completed += 1
+                    if pending:
+                        bucket.admit(slot, *pending.popleft())
+
+        self._finalize_ledger(bucket)
+        self.stats.buckets += 1
+
+    # -- accounting --------------------------------------------------------
+
+    def _make_result(self, bucket: BucketState, rec) -> JobResult:
+        chans = bucket.op.ledger.channels
+        wire_bytes = sum(sends * chans[name].bytes_per_send
+                         for name, sends in rec.sends.items())
+        wire_floats = sum(sends * chans[name].floats_per_send
+                          for name, sends in rec.sends.items())
+        return JobResult(
+            job_id=rec.spec.job_id, x=rec.x, y=rec.y, rounds=rec.rounds,
+            converged=rec.converged, final_gap=rec.final_gap,
+            wire_bytes=int(wire_bytes), wire_floats=int(wire_floats),
+            sends=dict(rec.sends), wall_clock_s=rec.wall_s,
+            signature=bucket.signature)
+
+    def _finalize_ledger(self, bucket: BucketState) -> None:
+        """Charge the bucket ledger with per-job send arrays (ordered
+        by retirement) so `CommLedger.per_job_bytes` attributes exact
+        traffic and the total is their sum (additivity, tested)."""
+        for name in bucket.op.ledger.channels:
+            bucket.op.ledger.charge(name, np.asarray(
+                [rec.sends[name] for rec in bucket.retired], np.int64))
+        self.ledgers[bucket.signature] = bucket.op.ledger

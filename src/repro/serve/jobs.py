@@ -1,0 +1,142 @@
+"""Job descriptions for the multi-tenant bilevel solver engine.
+
+A `JobSpec` is one independent DAGM instance — a problem-zoo family
+(`core.problems.PROBLEM_FAMILIES`) instantiated with its own data/seed,
+plus the `DAGMConfig` knobs for the run.  The engine never executes a
+JobSpec directly: specs are grouped by `compile_signature` (everything
+that shapes the trace), padded into fixed-width buckets, and run as one
+vmapped `dagm_run_chunk` per bucket (`repro.serve.engine`).
+
+The signature split:
+
+* **static** (bucket key, baked into the trace): problem family + data
+  leaf shapes, (n, d1, d2), topology, mixing backend/dtype, comm
+  policy, dihgp backend, K / M / U loop bounds, and whether a curvature
+  bound is supplied.  Two jobs with equal signatures share one compiled
+  program.
+* **per-job** (vary freely inside a bucket): the data *values*, the
+  init seed, and the hyper-parameters α / β / curvature — the
+  (topology, penalty, step-size) sweep axes of the paper's §6
+  experiments, which is exactly what a hyperopt-as-a-service queue
+  varies.  Whether the hyper-parameters enter the trace as runtime
+  arguments or baked constants is the engine's `hp_mode` (see
+  engine.ServeEngine).
+
+`JobResult` reports the per-job outcome *including the exact wire
+bytes* the job's gossip cost, attributed from the bucket ledger's
+per-slot send counters (`repro.comm.CommLedger.per_job_bytes`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+from repro.core.dagm import DAGMConfig, dagm_validate
+from repro.core.problems import BilevelProblem, problem_family
+from repro.topology import Network, make_network
+
+Signature = tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class JobSpec:
+    """One bilevel solve request.
+
+    family:   `core.problems.PROBLEM_FAMILIES` key.
+    problem:  constructor kwargs for the family (n, d, m_per, seed, ...).
+              Everything that changes a data *shape* changes the
+              compile signature; the data values ride per-job.
+    config:   DAGMConfig for the run.  alpha / beta / curvature are
+              per-job; the remaining fields are bucket-static.
+    graph:    topology kind for `make_network` (+ graph_kwargs), shared
+              across a bucket — a job sweeping topologies lands in one
+              bucket per topology.
+    seed:     init seed (y0 draw + comm channel keys), per-job.
+    tol:      optional convergence threshold on the Eq. (17b) estimate
+              ‖∇̂F‖²; a job whose last chunked round reaches it retires
+              early and its slot is backfilled from the queue.
+    job_id:   caller's handle (auto-assigned when None).
+    """
+    family: str
+    problem: dict
+    config: DAGMConfig
+    graph: str = "ring"
+    graph_kwargs: dict = dataclasses.field(default_factory=dict)
+    seed: int = 0
+    tol: float | None = None
+    job_id: str | None = None
+
+
+@dataclasses.dataclass
+class JobResult:
+    """Outcome of one job: final iterates, convergence, cost."""
+    job_id: str
+    x: Any                    # final stacked outer iterates (n, d1)
+    y: Any                    # final stacked inner iterates (n, d2)
+    rounds: int               # outer rounds actually run (≤ config.K)
+    converged: bool           # tol reached before the K-round budget
+    final_gap: float          # last ‖∇̂F‖² (Eq. 17b estimate)
+    wire_bytes: int           # exact gossip bytes this job moved
+    wire_floats: int          # uncompressed f32 words (comparison base)
+    sends: dict               # per-channel send counts
+    wall_clock_s: float       # engine wall time attributed to this job
+    signature: Signature      # bucket the job ran in
+
+
+def build_problem(spec: JobSpec) -> BilevelProblem:
+    """Instantiate the spec's problem-zoo family."""
+    return problem_family(spec.family)(**spec.problem)
+
+
+def build_network(spec: JobSpec) -> Network:
+    """Topology shared by the spec's bucket (n defaults to the
+    problem's agent count)."""
+    kw = dict(spec.graph_kwargs)
+    n = int(kw.pop("n", _graph_n(spec)))
+    return make_network(spec.graph, n, **kw)
+
+
+def _graph_n(spec: JobSpec) -> int:
+    n = spec.problem.get("n")
+    if n is None:
+        raise ValueError(
+            f"JobSpec.problem must carry the agent count 'n' "
+            f"(got keys {sorted(spec.problem)})")
+    return int(n)
+
+
+def config_hp(cfg: DAGMConfig) -> tuple:
+    """(alpha, beta[, curvature]) in the order the engine's chunk
+    runner consumes them.  curvature is only present when the config
+    supplies a bound — a bucket-static choice (it is part of the
+    compile signature), so every hp row in a bucket has the same
+    length.  Single source of truth for job rows and the padding
+    slots' template row alike."""
+    hp = (float(cfg.alpha), float(cfg.beta))
+    if cfg.curvature is not None:
+        hp += (float(cfg.curvature),)
+    return hp
+
+
+def job_hp(spec: JobSpec) -> tuple:
+    """The per-job hyper-parameter row (see `config_hp`)."""
+    return config_hp(spec.config)
+
+
+def compile_signature(spec: JobSpec, prob: BilevelProblem) -> Signature:
+    """Everything that shapes the compiled bucket program.
+
+    Jobs with equal signatures run under ONE trace: same problem family
+    at the same data shapes, same topology, same mixing/comm execution
+    path, same loop bounds.  Per-job data values, seeds and α/β/
+    curvature deliberately stay out (they are the sweep axes)."""
+    dagm_validate(spec.config)
+    cfg = spec.config
+    import jax
+    leaf_shapes = tuple(sorted(
+        (jax.tree_util.keystr(path), tuple(leaf.shape))
+        for path, leaf in jax.tree_util.tree_leaves_with_path(prob.data)))
+    graph = (spec.graph,) + tuple(sorted(spec.graph_kwargs.items()))
+    return (spec.family, prob.n, prob.d1, prob.d2, leaf_shapes, graph,
+            cfg.mixing, cfg.mixing_dtype, cfg.mixing_interpret, cfg.comm,
+            cfg.dihgp, cfg.K, cfg.M, cfg.U, cfg.curvature is not None)

@@ -218,6 +218,45 @@ def test_compressed_mix_preserves_self_term(spec, n, seed):
     assert int(st2.sends) == int(st.sends) + 1
 
 
+# ---------------------------------------------------------------------------
+# repro.serve batched-vs-sequential equivalence
+# ---------------------------------------------------------------------------
+
+@given(n_jobs=st.integers(1, 3), seed=st.integers(0, 100),
+       alpha=st.floats(0.02, 0.06), beta=st.floats(0.05, 0.12))
+@settings(max_examples=5, deadline=None)
+def test_serve_bucket_reproduces_solo_bitexact(n_jobs, seed, alpha, beta):
+    """A vmapped serve bucket with comm="identity" (static hp mode)
+    reproduces each job's solo `dagm_run` trajectory BIT-exactly —
+    padding slots included (the bucket is padded to a power-of-two
+    width ≥ 2, so n_jobs ∈ {1, 3} always exercises inert slots) — and
+    the bucket ledger's per-job bytes sum to its total (additivity)."""
+    import dataclasses
+    from repro.core import DAGMConfig, dagm_run
+    from repro.serve import (JobSpec, ServeEngine, build_network,
+                             build_problem)
+    cfg = DAGMConfig(alpha=alpha, beta=beta, K=8, M=2, U=2,
+                     dihgp="matrix_free", curvature=6.0)
+    specs = [JobSpec("quadratic",
+                     {"n": 4, "d1": 2, "d2": 4, "seed": seed + j},
+                     dataclasses.replace(cfg, alpha=alpha + 0.001 * j),
+                     seed=seed + 10 * j)
+             for j in range(n_jobs)]
+    eng = ServeEngine(chunk_rounds=4, hp_mode="static")
+    eng.submit(specs)
+    results = eng.run()
+    for spec, res in zip(specs, results):
+        ref = dagm_run(build_problem(spec), build_network(spec),
+                       spec.config, seed=spec.seed)
+        assert np.array_equal(res.x, np.asarray(ref.x))
+        assert np.array_equal(res.y, np.asarray(ref.y))
+        assert res.wire_bytes == ref.ledger.total_bytes
+    led = list(eng.ledgers.values())[0]
+    per_job = led.per_job_bytes()
+    assert per_job.shape == (n_jobs,)     # inert padding never charged
+    assert per_job.sum() == led.total_bytes
+
+
 @given(b=st.integers(1, 3), s=st.sampled_from([8, 16]),
        v=st.sampled_from([32, 64]), seed=st.integers(0, 500))
 @settings(**SETTINGS)

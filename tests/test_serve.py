@@ -1,0 +1,287 @@
+"""repro.serve — batched multi-tenant solver engine.
+
+Pins the tier's contracts: signature bucketing, width padding,
+bit-exact batched-vs-solo trajectories (static hp mode), inert padded
+slots, continuous batching (mid-flight retirement + backfill), the
+compile cache (second wave of the same bucket program re-traces
+nothing) and per-job wire-byte attribution with ledger additivity.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import DAGMConfig, dagm_run
+from repro.serve import (JobSpec, ServeEngine, bucketize,
+                         build_network, build_problem, chunk_rounds_for,
+                         compile_signature, pad_width)
+
+CFG = DAGMConfig(alpha=0.02, beta=0.02, K=20, M=5, U=3,
+                 dihgp="matrix_free", curvature=30.0)
+
+
+def ho_spec(data_seed, alpha=0.02, beta=0.02, **kw):
+    return JobSpec("ho_regression",
+                   {"n": 8, "d": 16, "m_per": 10, "seed": data_seed},
+                   dataclasses.replace(CFG, alpha=alpha, beta=beta),
+                   seed=3, **kw)
+
+
+def quad_spec(data_seed, K=40, tol=None, alpha=0.05):
+    cfg = DAGMConfig(alpha=alpha, beta=0.1, K=K, M=5, U=3,
+                     dihgp="matrix_free", curvature=6.0)
+    return JobSpec("quadratic", {"n": 6, "d1": 4, "d2": 8,
+                                 "seed": data_seed},
+                   cfg, seed=data_seed, tol=tol)
+
+
+def solo(spec):
+    return dagm_run(build_problem(spec), build_network(spec),
+                    spec.config, seed=spec.seed)
+
+
+# ---------------------------------------------------------------------------
+# bucketing / padding policy
+# ---------------------------------------------------------------------------
+
+def test_signatures_group_by_shape_not_values():
+    a, b = ho_spec(0, alpha=0.01), ho_spec(1, alpha=0.09, beta=0.003)
+    sa = compile_signature(a, build_problem(a))
+    sb = compile_signature(b, build_problem(b))
+    assert sa == sb                      # data seed + hp are per-job
+    c = ho_spec(0)
+    c = dataclasses.replace(c, problem={"n": 8, "d": 32, "m_per": 10})
+    assert compile_signature(c, build_problem(c)) != sa   # shape change
+    d = dataclasses.replace(ho_spec(0), graph="star")
+    assert compile_signature(d, build_problem(d)) != sa   # topology
+    e = dataclasses.replace(
+        ho_spec(0), config=dataclasses.replace(CFG, comm="int8+ef"))
+    assert compile_signature(e, build_problem(e)) != sa   # comm policy
+
+
+def test_bucketize_groups_and_orders():
+    specs = [ho_spec(0), quad_spec(0), ho_spec(1), quad_spec(1)]
+    buckets = bucketize(specs)
+    assert len(buckets) == 2
+    sizes = sorted(len(v) for v in buckets.values())
+    assert sizes == [2, 2]
+
+
+def test_pad_width_powers_of_two_floor_two():
+    assert pad_width(1) == 2             # width-1 programs are
+    assert pad_width(2) == 2             # XLA-specialized; floor 2
+    assert pad_width(3) == 4
+    assert pad_width(9) == 16
+    assert pad_width(100) == 64          # cap
+    assert pad_width(5, max_width=4) == 4
+
+
+def test_chunk_rounds_divides_k():
+    assert chunk_rounds_for(20, 10) == 10
+    assert chunk_rounds_for(20, 7) == 5
+    assert chunk_rounds_for(40, 6) == 5
+    assert chunk_rounds_for(13, 10) == 13   # prime: one chunk
+    assert chunk_rounds_for(1, 10) == 1
+    assert chunk_rounds_for(20, 1) == 2     # floor 2 (scan-1 unrolls)
+
+
+# ---------------------------------------------------------------------------
+# batched == solo (static hp mode), padding inert
+# ---------------------------------------------------------------------------
+
+def test_bucket_matches_solo_bitexact_static():
+    """A vmapped bucket reproduces each job's solo dagm_run trajectory
+    bit-for-bit (identity comm, static hp, matrix_free dihgp) — the
+    tier's reproducibility guarantee."""
+    specs = [ho_spec(s, alpha=a, beta=b) for s, (a, b) in enumerate(
+        [(0.02, 0.02), (0.015, 0.025), (0.025, 0.015)])]
+    eng = ServeEngine(chunk_rounds=5, hp_mode="static")
+    eng.submit(specs)
+    results = eng.run()
+    for spec, res in zip(specs, results):
+        ref = solo(spec)
+        assert np.array_equal(res.x, np.asarray(ref.x))
+        assert np.array_equal(res.y, np.asarray(ref.y))
+        assert res.rounds == CFG.K and not res.converged
+        # per-job bytes == the solo run's ledger, exactly
+        assert res.wire_bytes == ref.ledger.total_bytes
+
+
+def test_traced_mode_close_and_single_compile():
+    """Traced hp mode: one compile serves different hyper-parameter
+    sweeps (no retrace on a second wave), trajectories within the
+    documented ~1 ulp/round of solo."""
+    eng = ServeEngine(chunk_rounds=5, hp_mode="traced")
+    eng.submit([ho_spec(s, alpha=0.02 - 0.001 * s) for s in range(3)])
+    res1 = eng.run()
+    traces_after_wave1 = eng.stats.traces
+    assert traces_after_wave1 == 1       # one bucket program
+    # second wave: same signature, different sweep values
+    eng.submit([ho_spec(s + 10, alpha=0.01 + 0.002 * s, beta=0.018)
+                for s in range(3)])
+    res2 = eng.run()
+    assert eng.stats.traces == traces_after_wave1      # cache hit only
+    assert eng.stats.cache_hits > 0
+    for spec, res in zip([ho_spec(s, alpha=0.02 - 0.001 * s)
+                          for s in range(3)], res1):
+        ref = solo(spec)
+        np.testing.assert_allclose(res.x, np.asarray(ref.x),
+                                   atol=1e-6, rtol=1e-5)
+    assert all(np.isfinite(r.final_gap) for r in res1 + res2)
+
+
+def test_padded_slots_are_inert():
+    """3 jobs in a width-4 bucket: results identical to the jobs run
+    alone, and the padding slot contributes no sends to the ledger."""
+    specs = [ho_spec(s) for s in range(3)]
+    eng = ServeEngine(chunk_rounds=5, hp_mode="static")
+    eng.submit(specs)
+    results = eng.run()
+    led = list(eng.ledgers.values())[0]
+    per_job = led.per_job_bytes()
+    assert per_job.shape == (3,)          # only real jobs charged
+    assert per_job.sum() == led.total_bytes
+    for spec, res in zip(specs, results):
+        assert np.array_equal(res.x, np.asarray(solo(spec).x))
+    # identity comm: every job's sends = K * (M + U + 1)
+    want = CFG.K * (CFG.M + CFG.U + 1)
+    for res in results:
+        assert sum(res.sends.values()) == want
+
+
+def test_stack_problem_data_direct_vmap():
+    """The low-level job-axis API the engine is built from: stack
+    compatible problems with `stack_problem_data`, vmap
+    `dagm_run_chunk` with the axes from `data_batch_axes`, and recover
+    each job's solo trajectory (the engine's static hp mode is the
+    bit-exact packaging of this path)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import dagm_init_carry, dagm_run_chunk, \
+        stack_problem_data
+    from repro.core.mixing import make_mixing_op
+    specs = [ho_spec(s) for s in range(3)]
+    probs = [build_problem(s) for s in specs]
+    template = probs[0]
+    data = stack_problem_data(probs)
+    assert jax.tree.leaves(data)[0].shape[0] == 3
+    op = make_mixing_op(build_network(specs[0]))
+    carry = jax.tree.map(
+        lambda *ls: jnp.stack(ls),
+        *[dagm_init_carry(p, op, CFG, seed=3) for p in probs])
+
+    def run_job(data_j, carry_j):
+        return dagm_run_chunk(template.with_data(data_j), op, CFG,
+                              carry_j, CFG.K, lambda *a: {})
+
+    axes = (template.data_batch_axes(), 0)
+    ((x, y), _), _ = jax.jit(jax.vmap(run_job, in_axes=axes))(data, carry)
+    for j, spec in enumerate(specs):
+        ref = solo(spec)
+        np.testing.assert_allclose(np.asarray(x[j]), np.asarray(ref.x),
+                                   atol=1e-6, rtol=1e-5)
+
+    # incompatible shapes refuse to stack
+    other = build_problem(dataclasses.replace(
+        ho_spec(0), problem={"n": 8, "d": 32, "m_per": 10}))
+    with pytest.raises(ValueError, match="same family/shapes|leaf"):
+        stack_problem_data([template, other])
+
+
+def test_engine_rejects_degenerate_width_and_dup_ids():
+    with pytest.raises(ValueError, match="max_width"):
+        ServeEngine(max_width=1)
+    assert pad_width(1, max_width=2) == 2     # floor holds
+    assert pad_width(5, max_width=6) == 4     # powers of two only
+    eng = ServeEngine()
+    eng.submit([quad_spec(0, K=10)])
+    with pytest.raises(ValueError, match="duplicate job_id"):
+        eng.submit([dataclasses.replace(quad_spec(1, K=10),
+                                        job_id="job0")])
+
+
+# ---------------------------------------------------------------------------
+# continuous batching
+# ---------------------------------------------------------------------------
+
+def test_retire_and_backfill_preserves_trajectories():
+    """6 jobs through a width-2 bucket (3+ waves): every job still
+    matches its solo run bit-for-bit, whichever wave/slot it rode."""
+    specs = [quad_spec(s, alpha=0.05 - 0.002 * s) for s in range(6)]
+    eng = ServeEngine(chunk_rounds=10, max_width=2, hp_mode="static")
+    eng.submit(specs)
+    results = eng.run()
+    assert eng.stats.jobs_completed == 6
+    assert eng.stats.chunks > 4           # genuinely multiple waves
+    for spec, res in zip(specs, results):
+        assert np.array_equal(res.x, np.asarray(solo(spec).x))
+
+
+def test_early_retirement_on_tol():
+    """A loose-tol job retires mid-flight (fewer rounds, fewer bytes);
+    strict-tol jobs run their full budget."""
+    specs = [quad_spec(0, K=40, tol=1e2),      # converges immediately
+             quad_spec(1, K=40, tol=1e-12),    # never converges
+             quad_spec(2, K=40)]               # no tol: full budget
+    eng = ServeEngine(chunk_rounds=10, hp_mode="traced")
+    eng.submit(specs)
+    r0, r1, r2 = eng.run()
+    assert r0.converged and r0.rounds == 10      # first chunk boundary
+    assert not r1.converged and r1.rounds == 40
+    assert not r2.converged and r2.rounds == 40
+    assert r0.wire_bytes < r1.wire_bytes
+    assert r0.wire_bytes * 4 == r1.wire_bytes    # bytes ∝ rounds
+    led = list(eng.ledgers.values())[0]
+    assert led.per_job_bytes().sum() == led.total_bytes
+
+
+# ---------------------------------------------------------------------------
+# compile cache
+# ---------------------------------------------------------------------------
+
+def test_static_mode_cache_same_hp_no_retrace():
+    """Static mode re-traces on a new hp snapshot but serves an
+    identical resubmission from cache."""
+    sweep = [ho_spec(s, alpha=0.02, beta=0.02) for s in range(2)]
+    eng = ServeEngine(chunk_rounds=5, hp_mode="static")
+    eng.submit(sweep)
+    eng.run()
+    t1 = eng.stats.traces
+    eng.submit([ho_spec(s + 7, alpha=0.02, beta=0.02)
+                for s in range(2)])       # same hp, new data
+    eng.run()
+    assert eng.stats.traces == t1         # no retrace
+    eng.submit([ho_spec(0, alpha=0.011)])  # new hp snapshot
+    eng.run()
+    assert eng.stats.traces == t1 + 1
+
+
+def test_job_ids_and_result_order():
+    specs = [quad_spec(s, K=10) for s in range(3)]
+    specs[1] = dataclasses.replace(specs[1], job_id="my-job")
+    eng = ServeEngine(chunk_rounds=5)
+    ids = eng.submit(specs)
+    assert ids[1] == "my-job"
+    results = eng.run()
+    assert [r.job_id for r in results] == ids
+
+
+def test_compressed_bucket_runs_and_charges_wire_bytes():
+    """A comm="int8+ef" bucket: jobs run, per-job bytes reflect the
+    compressed wire (≈4× under f32), ledger additivity holds."""
+    cfg = DAGMConfig(alpha=0.05, beta=0.1, K=10, M=5, U=3,
+                     dihgp="matrix_free", curvature=6.0, comm="int8+ef")
+    specs = [JobSpec("quadratic", {"n": 6, "d1": 4, "d2": 8, "seed": s},
+                     cfg, seed=s) for s in range(2)]
+    eng = ServeEngine(chunk_rounds=5)
+    eng.submit(specs)
+    results = eng.run()
+    preview = cfg.comm_ledger(4, 8)      # exact per-job wire preview
+    for res in results:
+        assert np.isfinite(res.final_gap)
+        assert res.wire_bytes == preview.total_bytes
+        assert res.wire_floats == preview.total_floats
+        assert res.wire_bytes < res.wire_floats * 4   # compressed wire
+    led = list(eng.ledgers.values())[0]
+    assert led.per_job_bytes().sum() == led.total_bytes
