@@ -1,7 +1,7 @@
 """Compressed-gossip benchmark: bytes-to-suboptimality on the quadratic
 bilevel problem (the repro.comm subsystem's acceptance harness).
 
-Sweeps compressor spec × topology through `dagm_run` and records, per
+Sweeps compressor spec × topology through `repro.solve` and records, per
 run, the byte-accurate per-round traffic from the attached `CommLedger`
 together with the true suboptimality trajectory gap_k = ‖∇Φ(x̄_k)‖²
 (closed form: the quadratic problem's consensus inner solution is
@@ -42,8 +42,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import DAGMConfig, dagm_run, make_network, \
-    quadratic_bilevel
+from repro.core import make_network, quadratic_bilevel
+from repro.solve import dagm_spec, solve
 
 from .common import Row, timed
 
@@ -77,17 +77,17 @@ def _xbar_metrics(prob, W, x, y):
 
 def _dagm_case(prob, net, spec: str, K: int, M: int, U: int,
                curvature: float, seed: int = 0):
-    cfg = DAGMConfig(alpha=0.05, beta=0.1, K=K, M=M, U=U,
-                     dihgp="matrix_free", curvature=curvature,
-                     comm=spec)
+    cfg = dagm_spec(alpha=0.05, beta=0.1, K=K, M=M, U=U,
+                    dihgp="matrix_free", curvature=curvature,
+                    comm=spec)
     # start far from stationarity (the default x0 = 0 is near the bias
     # floor already) so the bytes-to-target curve has a real descent
     x0 = jnp.broadcast_to(
         2.0 * jax.random.normal(jax.random.PRNGKey(7), (prob.d1,)),
         (prob.n, prob.d1)).astype(jnp.float32)
-    res, us = timed(lambda: dagm_run(prob, net, cfg, x0=x0,
-                                     metrics_fn=_xbar_metrics,
-                                     seed=seed), iters=1)
+    res, us = timed(lambda: solve(prob, net, cfg, x0=x0,
+                                  metrics_fn=_xbar_metrics,
+                                  seed=seed), iters=1)
     gaps = _gap_trace(prob, np.asarray(res.metrics["xbar"]))
     # closed-form gap must agree with the problem's autodiff hypergrad
     check = float(jnp.sum(
@@ -136,7 +136,8 @@ import jax, jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 from repro.core import quadratic_bilevel
-from repro.distributed.dagm_sharded import (ShardedDAGMConfig,
+from repro.solve import sharded_spec
+from repro.distributed.dagm_sharded import (
                                             make_sharded_dagm,
                                             open_sharded_channels,
                                             sharded_comm_ledger)
@@ -155,9 +156,9 @@ out = {}
 for label, spec, persist in (("identity", "identity", False),
                              ("reset", "top_k:0.1+ef", False),
                              ("persist", "top_k:0.1+ef", True)):
-    cfg = ShardedDAGMConfig(alpha=0.05, beta=0.1, M=5, U=3,
-                            curvature=curv, comm=spec,
-                            persist_ef=persist)
+    cfg = sharded_spec(alpha=0.05, beta=0.1, M=5, U=3,
+                       curvature=curv, comm=spec,
+                       persist_ef=persist)
     step, _ = make_sharded_dagm(lambda x, y, b: prob.g(x, y, b),
                                 lambda x, y, b: prob.f(x, y, b),
                                 cfg, mesh)

@@ -15,8 +15,16 @@ identical).  Derived per row:
     from the engine's compile cache (serving steady state),
   * retraces_on_resubmit — must be 0: the cache-hit confirmation,
   * bitexact_vs_solo — every bucket job's final (x, y) equals its solo
-    `dagm_run` bit-for-bit (static hp mode, identity comm),
+    `solve` run bit-for-bit in BOTH hp modes (identity comm): since
+    the `repro.solve` redesign, hyper-parameters are traced per-round
+    operands in solo and serve alike, so the traced row records
+    bitexact_vs_solo=true too (the old ~1 ulp/round drift is gone),
   * bytes_per_job — exact per-job wire traffic from the bucket ledger.
+
+The `serve/traced_sweep_one_compile` row pins the schedule contract:
+three waves with disjoint α/β values (one of them decaying αₖ ∝ 1/√k)
+run through ONE compiled bucket program — zero retraces — while every
+job remains bit-exact with its solo run.
 
 Budgets: "smoke" (scripts/ci.sh tier 2: one tiny bucket + cache-hit
 check, no JSON rewrite), "small" (checked-in results: 64-job and
@@ -33,9 +41,10 @@ import time
 
 import numpy as np
 
-from repro.core import DAGMConfig, dagm_run
+from repro.optim import inverse_sqrt_schedule
 from repro.serve import (JobSpec, ServeEngine, build_network,
                          build_problem, pad_width)
+from repro.solve import ScheduleSpec, dagm_spec, solve
 
 from .common import Row
 
@@ -49,8 +58,8 @@ def _ho_sweep(n_jobs: int, n: int = 8, d: int = 16, K: int = 40,
     """n_jobs-point (α, β) grid on ho_regression — the §6.1 scenario
     as a service queue.  One compile signature by construction."""
     side = max(int(round(n_jobs ** 0.5)), 1)
-    cfg = DAGMConfig(alpha=0.02, beta=0.02, K=K, M=5, U=3,
-                     dihgp="matrix_free", curvature=60.0)
+    cfg = dagm_spec(alpha=0.02, beta=0.02, K=K, M=5, U=3,
+                    dihgp="matrix_free", curvature=60.0)
     specs = []
     for j in range(n_jobs):
         a = 0.010 + 0.002 * (j % side)
@@ -58,28 +67,31 @@ def _ho_sweep(n_jobs: int, n: int = 8, d: int = 16, K: int = 40,
         specs.append(JobSpec(
             "ho_regression", {"n": n, "d": d, "m_per": 10,
                               "seed": data_seed + j},
-            dataclasses.replace(cfg, alpha=a, beta=b), seed=3))
+            dataclasses.replace(cfg, schedule=ScheduleSpec(alpha=a,
+                                                           beta=b)),
+            seed=3))
     return specs
 
 
 def _quad_specs(n_jobs: int, K: int = 40, d2: int = 32,
                 tol: float | None = None) -> list[JobSpec]:
-    cfg = DAGMConfig(alpha=0.05, beta=0.1, K=K, M=5, U=3,
-                     dihgp="matrix_free", curvature=6.0)
+    cfg = dagm_spec(alpha=0.05, beta=0.1, K=K, M=5, U=3,
+                    dihgp="matrix_free", curvature=6.0)
     return [JobSpec("quadratic", {"n": 8, "d1": 4, "d2": d2, "seed": s},
-                    dataclasses.replace(cfg, alpha=0.05 - 0.001 * (s % 8)),
+                    dataclasses.replace(cfg, schedule=ScheduleSpec(
+                        alpha=0.05 - 0.001 * (s % 8), beta=0.1)),
                     seed=s, tol=tol) for s in range(n_jobs)]
 
 
 def _sequential(specs) -> tuple[float, list]:
-    """The solo-API baseline: one `dagm_run` per job, equal per-job
+    """The solo-API baseline: one `solve` per job, equal per-job
     hyper-parameters/data/seeds.  Each call traces its own program —
     the cost the serve tier amortizes."""
     t0 = time.perf_counter()
     outs = []
     for spec in specs:
-        res = dagm_run(build_problem(spec), build_network(spec),
-                       spec.config, seed=spec.seed)
+        res = solve(build_problem(spec), build_network(spec),
+                    spec.config, seed=spec.seed)
         outs.append(np.asarray(res.x))
     return time.perf_counter() - t0, outs
 
@@ -133,6 +145,65 @@ def _bucket_row(tag: str, specs, *, hp_mode: str = "static",
     return Row(f"serve/{tag}", wall * 1e6, derived)
 
 
+def _traced_sweep_row() -> Row:
+    """The one-compile contract: a traced-hp bucket is compiled once,
+    then served every further sweep — distinct per-job α/β grids AND
+    decaying αₖ schedules — with ZERO retraces, while every job stays
+    bit-exact with its solo `solve` run (schedules are runtime
+    operands of the shared chunk program)."""
+    eng = ServeEngine(chunk_rounds=10, max_width=16, hp_mode="traced")
+    waves = []
+    # wave 1: one constant grid
+    waves.append(_ho_sweep(8, d=16, K=40, data_seed=300))
+    # wave 2: a *different* constant grid (values the first compile
+    # never saw)
+    w2 = _ho_sweep(8, d=16, K=40, data_seed=340)
+    waves.append([dataclasses.replace(
+        s, config=dataclasses.replace(
+            s.config, schedule=ScheduleSpec(alpha=0.004 + 0.003 * i,
+                                            beta=0.019 - 0.001 * i)))
+        for i, s in enumerate(w2)])
+    # wave 3: decaying-alpha schedules (paper corollary sequences)
+    w3 = _ho_sweep(8, d=16, K=40, data_seed=380)
+    waves.append([dataclasses.replace(
+        s, config=dataclasses.replace(
+            s.config, schedule=ScheduleSpec(
+                alpha=inverse_sqrt_schedule(0.012 + 0.001 * i),
+                beta=0.015)))
+        for i, s in enumerate(w3)])
+
+    t0 = time.perf_counter()
+    results = []
+    traces_per_wave = []
+    for wave in waves:
+        eng.submit(wave)
+        results.append(eng.run())
+        traces_per_wave.append(eng.stats.traces)
+    wall = time.perf_counter() - t0
+
+    bit = all(
+        np.array_equal(res.x, np.asarray(
+            solve(build_problem(spec), build_network(spec), spec.config,
+                  seed=spec.seed).x))
+        for wave, outs in zip(waves, results)
+        for spec, res in zip(wave, outs))
+    from repro.serve import job_hp
+    hp_rows = {tuple(np.asarray(job_hp(s)).tobytes() for s in wave)
+               for wave in waves}
+    n_jobs = sum(len(w) for w in waves)
+    return Row("serve/traced_sweep_one_compile", wall * 1e6, {
+        "jobs": n_jobs,
+        "waves": len(waves),
+        "distinct_hp_rows": sum(len(h) for h in hp_rows),
+        "traces": traces_per_wave[0],
+        "retraces_across_sweeps": traces_per_wave[-1]
+        - traces_per_wave[0],
+        "decaying_schedule_wave": True,
+        "bitexact_vs_solo": bool(bit),
+        "jobs_per_s": round(n_jobs / wall, 2),
+    })
+
+
 def _continuous_row() -> Row:
     """Mixed-deadline queue through a narrow bucket: loose-tol jobs
     retire mid-flight and the queue backfills their slots."""
@@ -178,6 +249,8 @@ def run(budget: str = "small") -> list[Row]:
     rows.append(_bucket_row("bucket16_ho_regression_traced",
                             _ho_sweep(16, d=32, K=40, data_seed=100),
                             hp_mode="traced"))
+    # ---- zero-retrace multi-wave sweep incl. decaying schedules ----
+    rows.append(_traced_sweep_row())
     # ---- mid-flight retirement + backfill ----
     rows.append(_continuous_row())
 
@@ -186,9 +259,9 @@ def run(budget: str = "small") -> list[Row]:
                                 _quad_specs(32, K=40, d2=128),
                                 hp_mode="static"))
         # compressed-gossip bucket: int8+EF wire at the job level
-        cfg = DAGMConfig(alpha=0.05, beta=0.1, K=40, M=5, U=3,
-                         dihgp="matrix_free", curvature=6.0,
-                         comm="int8+ef")
+        cfg = dagm_spec(alpha=0.05, beta=0.1, K=40, M=5, U=3,
+                        dihgp="matrix_free", curvature=6.0,
+                        comm="int8+ef")
         specs = [JobSpec("quadratic",
                          {"n": 8, "d1": 4, "d2": 64, "seed": s}, cfg,
                          seed=s) for s in range(16)]

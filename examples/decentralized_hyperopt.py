@@ -14,8 +14,9 @@ import argparse
 
 import numpy as np
 
-from repro.core import DAGMConfig, dagm_run, make_network
+from repro.core import make_network
 from repro.core.problems import ho_logistic, ho_softmax, ho_svm
+from repro.solve import dagm_spec, solve
 
 MAKERS = {"softmax": lambda n, s: ho_softmax(n, d=16, n_classes=10,
                                              m_per=30, seed=s),
@@ -35,9 +36,9 @@ def main():
 
     net = make_network("erdos_renyi", args.agents, r=0.5, seed=0)
     prob = MAKERS[args.loss](args.agents, 0)
-    cfg = DAGMConfig(alpha=0.05, beta=0.05, K=args.rounds,
+    spec = dagm_spec(alpha=0.05, beta=0.05, K=args.rounds,
                      M=args.inner_steps, U=args.neumann_order)
-    res = dagm_run(prob, net, cfg)
+    res = solve(prob, net, spec)
 
     obj = np.asarray(res.metrics["outer_obj"])
     print(f"loss={args.loss} n={args.agents} sigma={net.sigma:.3f}")

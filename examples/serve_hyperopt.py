@@ -2,7 +2,10 @@
 hyper-parameter-optimization jobs served by the `repro.serve` engine.
 
 Each job is one small independent DAGM instance (regularized linear
-regression, per-job data shard and penalty/step-size point).  The
+regression, per-job data shard and penalty/step-size point — half the
+grid runs decaying alpha_k ~ 1/sqrt(k) schedules, which share the same
+bucket/compile as the constant jobs because schedules are runtime
+operands).  The
 engine groups the queue into compile-signature buckets (one per
 topology here), pads each to a power-of-two width, and runs every
 bucket as ONE vmapped `dagm_run_chunk` fleet with continuous batching
@@ -19,8 +22,9 @@ import time
 
 import numpy as np
 
-from repro.core import DAGMConfig
+from repro.optim import inverse_sqrt_schedule
 from repro.serve import JobSpec, ServeEngine
+from repro.solve import ScheduleSpec, dagm_spec
 
 
 def main():
@@ -39,8 +43,8 @@ def main():
                          "hyper-gradient estimate (norm squared)")
     args = ap.parse_args()
 
-    base = DAGMConfig(alpha=0.02, beta=0.02, K=args.rounds, M=5, U=3,
-                      dihgp="matrix_free", curvature=60.0)
+    base = dagm_spec(alpha=0.02, beta=0.02, K=args.rounds, M=5, U=3,
+                     dihgp="matrix_free", curvature=60.0)
     alphas = np.linspace(0.008, 0.02, args.grid)
     betas = np.linspace(0.008, 0.02, args.grid)
 
@@ -49,12 +53,18 @@ def main():
         gkw = {"r": 0.4, "seed": 0} if graph == "erdos_renyi" else {}
         for i, a in enumerate(alphas):
             for j, b in enumerate(betas):
+                # half the grid sweeps constants, half the decaying
+                # alpha_k = a/sqrt(k) schedule — same compile signature,
+                # so ALL of them share one bucket (and, in traced mode,
+                # one compiled program)
+                alpha = float(a) if (i + j) % 2 == 0 else \
+                    inverse_sqrt_schedule(float(a))
                 specs.append(JobSpec(
                     "ho_regression",
                     {"n": args.agents, "d": args.dim, "m_per": 10,
                      "seed": 17},
-                    dataclasses.replace(base, alpha=float(a),
-                                        beta=float(b)),
+                    dataclasses.replace(base, schedule=ScheduleSpec(
+                        alpha=alpha, beta=float(b))),
                     graph=graph, graph_kwargs=gkw, seed=3,
                     tol=args.tol,
                     job_id=f"{graph}/a{a:.3f}/b{b:.3f}"))

@@ -32,8 +32,10 @@ from jax.sharding import Mesh  # noqa: E402
 from repro.configs import get_config  # noqa: E402
 from repro.data import TokenDataConfig, make_token_batch  # noqa: E402
 from repro.data.synthetic import agent_domain_bias  # noqa: E402
+from repro.comm import parse_comm_spec  # noqa: E402
 from repro.distributed.dagm_sharded import (  # noqa: E402
-    ShardedDAGMConfig, make_sharded_dagm)
+    make_sharded_dagm)
+from repro.solve import sharded_spec  # noqa: E402
 from repro.models import build_model  # noqa: E402
 from repro.models.model_zoo import cross_entropy  # noqa: E402
 
@@ -48,7 +50,7 @@ def main():
     ap.add_argument("--het-q", type=float, default=0.5)
     ap.add_argument("--mixing-dtype", default="f32",
                     choices=["f32", "bf16"],
-                    help="gossip wire dtype (ShardedDAGMConfig"
+                    help="gossip wire dtype (sharded_spec"
                          ".comm_dtype): bf16 halves ring traffic "
                          "(ROADMAP bf16-drift study)")
     ap.add_argument("--comm", default="identity",
@@ -95,13 +97,12 @@ def main():
     def f_fn(x, y, batch):
         return weighted_ce(x, y, batch["val"], False)
 
-    dcfg = ShardedDAGMConfig(alpha=0.3, beta=0.1, M=2, U=2,
-                             curvature=8.0,
-                             comm_dtype=args.mixing_dtype,
-                             comm=args.comm)
+    dcfg = sharded_spec(alpha=0.3, beta=0.1, M=2, U=2, curvature=8.0,
+                        comm_dtype=args.mixing_dtype, comm=args.comm)
+    pol = parse_comm_spec(dcfg.comm.spec)
     step, w = make_sharded_dagm(g_fn, f_fn, dcfg, mesh)
-    stochastic = dcfg.comm_policy.stochastic
-    print(f"[dagm-lm] gossip: {dcfg.comm_policy.spec} "
+    stochastic = pol.stochastic
+    print(f"[dagm-lm] gossip: {pol.spec} "
           f"(mixing_dtype={args.mixing_dtype})")
 
     # ---- per-agent states + non-iid shards ----
@@ -150,7 +151,7 @@ def main():
         led = sharded_comm_ledger(dcfg, x[0], local, rounds=args.rounds)
         with open(args.json_out, "w") as f:
             json.dump({"arch": cfg.name, "rounds": args.rounds,
-                       "comm": dcfg.comm_policy.spec,
+                       "comm": pol.spec,
                        "mixing_dtype": args.mixing_dtype,
                        "outer_loss": hist,
                        "ledger": led.summary(args.rounds)}, f, indent=1)

@@ -19,6 +19,16 @@ run_tier() {
     fi
 }
 
+echo "=== tier 1: lint (ruff check src tests) ==="
+# correctness-critical subset only (syntax errors, undefined names,
+# malformed comparisons) — see ruff.toml; the container image may not
+# ship ruff, in which case the gate is skipped rather than faked
+if command -v ruff >/dev/null 2>&1; then
+    ruff check src tests
+else
+    echo "ruff not installed — skipping lint (config: ruff.toml)"
+fi
+
 echo "=== tier 1: fast suite (-m 'not slow') ==="
 run_tier "not slow" "$@"
 
@@ -37,6 +47,11 @@ echo "=== tier 2: bench smoke (compressed gossip) ==="
 python -m benchmarks.run --only comm --budget smoke
 
 echo "=== tier 2: bench smoke (serve engine) ==="
-# one tiny batched bucket vs the sequential dagm_run loop (solo parity,
+# one tiny batched bucket vs the sequential solo-solve loop (parity,
 # warm-cache check, per-job ledger additivity); no JSON rewrite
 python -m benchmarks.run --only serve --budget smoke
+
+echo "=== tier 2: example smoke (quickstart on repro.solve) ==="
+# end-to-end front-end check: solve() + ledger + a decaying-alpha
+# ScheduleSpec run, asserting the Thm-7 hyper-gradient descent
+python examples/quickstart.py

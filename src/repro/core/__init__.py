@@ -21,7 +21,8 @@ from .penalty import (F_objective, G_objective, grad_y_G, inner_dgd_step,
                       surrogate_hypergrad, consensus_error)
 from .dihgp import (dihgp_dense, dihgp_dense_c, dihgp_matrix_free,
                     dihgp_matrix_free_c, B_apply, B_apply_c)
-from .dagm import (DAGMConfig, DAGMResult, dagm_init_carry, dagm_run,
+from .dagm import (DAGMConfig, DAGMResult, RoundHP, chunk_hp,
+                   constant_round_hp, dagm_init_carry, dagm_run,
                    dagm_run_chunk, dagm_outer_step, dagm_outer_step_c,
                    dagm_validate)
 from .baselines import (BaselineResult, dgbo_run, dgtbo_run, fednest_run,

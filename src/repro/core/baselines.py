@@ -11,35 +11,39 @@ benchmarks/table2 can compare measured bytes with the closed forms.
 These are deterministic full-gradient variants (the paper's Table 1/2
 setting is deterministic); stochastic mini-batching is orthogonal.
 
+Entry surface: `repro.solve.solve(prob, net, SolverSpec(method=...))`
+with method "dgbo" | "dgtbo" | "ma_dbo" | "fednest" — hyper-parameters
+are runtime per-round operands there, so the step-size sequences of
+Chen, Huang & Ma (2022) / Dong et al. (2023) are expressible.  The
+historical ``dgbo_run(prob, net, alpha=..., beta=...)`` kwargs survive
+below as deprecation shims lowering onto SolverSpec; with constant
+schedules they reproduce the pre-redesign trajectories bit-for-bit
+(multiplications by traced scalars are identical to folded literals,
+and MA-DBO's penalty division is the same float32-reciprocal multiply
+as DAGM's — regression-tested in tests/test_comm.py).
+
 Every gossip/consensus application routes through `mixing.mix_apply` on
-a `MixingOp` (the `mixing=` kwarg, default "auto"), so the baselines run
-on the same topology-aware sparse backend as DAGM — their Table 2 cost
-gap vs DAGM is in *what* they communicate (matrices), not in how the
-mixing is executed.
+a `MixingOp`, so the baselines run on the same topology-aware sparse
+backend as DAGM — their Table 2 cost gap vs DAGM is in *what* they
+communicate (matrices), not in how the mixing is executed.
 
 Communication accounting is two-sided: `comm_floats_per_round` keeps
 the Appendix-S1 *closed forms* (what the papers charge), while
 `BaselineResult.ledger` is the `repro.comm.CommLedger` charged from the
-gossips this implementation *actually executes* — benchmarks/table2
-reports both, so the closed forms can genuinely disagree with the
-measurement (e.g. DGBO's Jacobian/extra-vector terms that this
-deterministic variant never ships).  The `comm=` kwarg compresses the
-gossips through the same channel protocol as DAGM (FedNest's star
-routing has no gossip to compress and gets a static ledger).
+gossips this implementation *actually executes*.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
-from .dagm import default_metrics
+from .dagm import RoundHP, default_metrics
 from .dihgp import dihgp_dense_c
-from .mixing import (Network, laplacian_apply, laplacian_apply_c,
-                     make_mixing_op, mix_apply, mix_apply_c)
-from .penalty import inner_dgd_step, inner_dgd_step_c
+from .mixing import Network, laplacian_apply_c, make_mixing_op, \
+    mix_apply_c
+from .penalty import inner_dgd_step_c
 from .problems import BilevelProblem
 
 Array = jnp.ndarray
@@ -56,18 +60,34 @@ class BaselineResult:
     ledger: "object | None" = None  # measured traffic (CommLedger)
 
 
-def _open_channels(W, templates: dict[str, Array], seed: int):
+def _open_channels(W, templates: dict, seed: int):
     """Comm channels on the MixingOp, one per gossiped variable (the
     shared key-derivation protocol lives in repro.comm)."""
     from repro.comm import open_channels
     return open_channels(W, templates, seed)
 
 
-def _run_scan(body, carry0, K):
+def _mixing_op(net: Network, spec):
+    from repro.solve.spec import mixing_kwargs
+    return make_mixing_op(net, **mixing_kwargs(spec))
+
+
+def _init_xy(prob: BilevelProblem, x0, y0, seed: int):
+    n, d1, d2 = prob.n, prob.d1, prob.d2
+    if x0 is None:
+        x0 = jnp.zeros((n, d1), jnp.float32)
+    if y0 is None:
+        y0 = 0.01 * jax.random.normal(jax.random.PRNGKey(seed), (n, d2))
+    return x0, y0
+
+
+def _run_scan(body, carry0, hp: RoundHP, K: int):
+    hp = RoundHP(*(jnp.asarray(a, jnp.float32) for a in hp))
+
     @jax.jit
-    def run(carry0):
-        return jax.lax.scan(body, carry0, None, length=K)
-    return run(carry0)
+    def run(carry0, hp):
+        return jax.lax.scan(body, carry0, hp, length=K)
+    return run(carry0, hp)
 
 
 # ---------------------------------------------------------------------------
@@ -75,29 +95,24 @@ def _run_scan(body, carry0, K):
 # full d2×d2 Hessian estimate in its inner Neumann loop (Appendix S1-II).
 # ---------------------------------------------------------------------------
 
-def dgbo_run(prob: BilevelProblem, net: Network, *, alpha: float,
-             beta: float, K: int, M: int = 10, b: int = 3,
-             x0: Array | None = None, y0: Array | None = None,
-             seed: int = 0, mixing: str = "auto",
-             mixing_interpret: bool = True,
-             mixing_dtype: str = "f32",
-             comm: str = "identity") -> BaselineResult:
+def dgbo_solve(prob: BilevelProblem, net: Network, spec, hp: RoundHP,
+               x0=None, y0=None, seed: int = 0):
     """Deterministic DGBO: gossip consensus on x, y, grads, Jacobians and
     a gossip+Neumann estimate of the *global mean* Hessian (d2×d2 matrix
-    communication — the expensive part the paper improves on)."""
-    W = make_mixing_op(net, backend=mixing, interpret=mixing_interpret,
-                       dtype=mixing_dtype, comm=comm)
+    communication — the expensive part the paper improves on).
+
+    Hyper-parameters arrive as (K,) runtime operands in `hp`."""
+    W = _mixing_op(net, spec)
     n, d1, d2 = prob.n, prob.d1, prob.d2
-    if x0 is None:
-        x0 = jnp.zeros((n, d1), jnp.float32)
-    if y0 is None:
-        y0 = 0.01 * jax.random.normal(jax.random.PRNGKey(seed), (n, d2))
+    M, b = spec.M, spec.b
+    x0, y0 = _init_xy(prob, x0, y0, seed)
     cs0 = _open_channels(
         W, {"inner_y": y0, "hess_nu": jnp.zeros((n, d2, d2)),
             "outer_x": x0}, seed)
 
-    def body(carry, _):
+    def body(carry, hp_t):
         (x, y), cs = carry
+        alpha, beta = hp_t.alpha, hp_t.beta
         # inner: gossip DGD on the *mean* inner objective (Steps 5)
         def inner(t, c):
             yy, st = c
@@ -125,13 +140,12 @@ def dgbo_run(prob: BilevelProblem, net: Network, *, alpha: float,
         cs = {"inner_y": y_st, "hess_nu": nu_st, "outer_x": x_st}
         return ((x1, y1), cs), default_metrics(prob, x, y1)
 
-    ((x, y), cs), metrics = _run_scan(body, ((x0, y0), cs0), K)
+    ((x, y), cs), metrics = _run_scan(body, ((x0, y0), cs0), hp, spec.K)
     W.ledger.charge_states(cs.values())
     # per-agent floats per round: x,y,grad-est vectors + b Hessian matrices
     # + one d1×d2 Jacobian (Appendix S1: K(b d2² + 2(d1+d2) + d1 d2))
-    comm = b * d2 * d2 + 2 * (d1 + d2) + d1 * d2 + M * d2
-    return BaselineResult(x, y, metrics, comm, name="DGBO",
-                          ledger=W.ledger)
+    floats = b * d2 * d2 + 2 * (d1 + d2) + d1 * d2 + M * d2
+    return x, y, metrics, cs, W.ledger, floats, "DGBO"
 
 
 # ---------------------------------------------------------------------------
@@ -139,22 +153,14 @@ def dgbo_run(prob: BilevelProblem, net: Network, *, alpha: float,
 # communicates d2×d1 matrices (Appendix S1-III).
 # ---------------------------------------------------------------------------
 
-def dgtbo_run(prob: BilevelProblem, net: Network, *, alpha: float,
-              beta: float, K: int, M: int = 10, N: int = 5,
-              x0: Array | None = None, y0: Array | None = None,
-              seed: int = 0, mixing: str = "auto",
-              mixing_interpret: bool = True,
-              mixing_dtype: str = "f32",
-              comm: str = "identity") -> BaselineResult:
+def dgtbo_solve(prob: BilevelProblem, net: Network, spec, hp: RoundHP,
+                x0=None, y0=None, seed: int = 0):
     """Deterministic DGTBO: JHIP solves Z ≈ −J H^{-1} (d1×d2) by N
     decentralized Richardson iterations, each gossiping the full Z matrix."""
-    W = make_mixing_op(net, backend=mixing, interpret=mixing_interpret,
-                       dtype=mixing_dtype, comm=comm)
+    W = _mixing_op(net, spec)
     n, d1, d2 = prob.n, prob.d1, prob.d2
-    if x0 is None:
-        x0 = jnp.zeros((n, d1), jnp.float32)
-    if y0 is None:
-        y0 = 0.01 * jax.random.normal(jax.random.PRNGKey(seed), (n, d2))
+    M, N = spec.M, spec.N
+    x0, y0 = _init_xy(prob, x0, y0, seed)
     cs0 = _open_channels(
         W, {"inner_y": y0, "jhip_z": jnp.zeros((n, d1, d2)),
             "outer_x": x0}, seed)
@@ -167,8 +173,9 @@ def dgtbo_run(prob: BilevelProblem, net: Network, *, alpha: float,
             return jac.T                       # (d2, d1) -> (d1, d2)
         return jax.vmap(one)(x, y, prob.data)
 
-    def body(carry, _):
+    def body(carry, hp_t):
         (x, y), cs = carry
+        alpha, beta = hp_t.alpha, hp_t.beta
         def inner(t, c):            # gossip DGD inner loop (Steps 8–9)
             yy, st = c
             mixed, st = mix_apply_c(W, yy, st)
@@ -196,28 +203,26 @@ def dgtbo_run(prob: BilevelProblem, net: Network, *, alpha: float,
         cs = {"inner_y": y_st, "jhip_z": z_st, "outer_x": x_st}
         return ((x1, y1), cs), default_metrics(prob, x, y1)
 
-    ((x, y), cs), metrics = _run_scan(body, ((x0, y0), cs0), K)
+    ((x, y), cs), metrics = _run_scan(body, ((x0, y0), cs0), hp, spec.K)
     W.ledger.charge_states(cs.values())
     # Appendix S1: K n (M d2 + d1 + n N d1 d2) / n per agent per round:
-    comm = M * d2 + d1 + N * d1 * d2
-    return BaselineResult(x, y, metrics, comm, name="DGTBO",
-                          ledger=W.ledger)
+    floats = M * d2 + d1 + N * d1 * d2
+    return x, y, metrics, cs, W.ledger, floats, "DGTBO"
 
 
 # ---------------------------------------------------------------------------
 # FedNest  [Tarzanagh et al., ICML 2022] — star topology (federated).
 # ---------------------------------------------------------------------------
 
-def fednest_run(prob: BilevelProblem, net: Network | None, *, alpha: float,
-                beta: float, K: int, M: int = 10, U: int = 3,
-                x0: Array | None = None, y0: Array | None = None,
-                seed: int = 0) -> BaselineResult:
+def fednest_solve(prob: BilevelProblem, net: Network | None, spec,
+                  hp: RoundHP, x0=None, y0=None, seed: int = 0):
     """Centralized-server bilevel: the server holds global (x, y); each
     round clients send gradients/HVPs (vectors) up and receive the global
     iterate back.  Hyper-gradient via U-term Neumann series on the *mean*
     Hessian using client HVPs (FedIHGP) — vector communication, but all
     through the center (2n vector transfers per exchange)."""
     n, d1, d2 = prob.n, prob.d1, prob.d2
+    M, U = spec.M, spec.U
     key = jax.random.PRNGKey(seed)
     xg = jnp.zeros((d1,), jnp.float32) if x0 is None else jnp.mean(x0, 0)
     yg = 0.01 * jax.random.normal(key, (d2,)) if y0 is None else jnp.mean(y0, 0)
@@ -225,8 +230,9 @@ def fednest_run(prob: BilevelProblem, net: Network | None, *, alpha: float,
     def stacked(z):
         return jnp.broadcast_to(z, (n,) + z.shape)
 
-    def body(carry, _):
+    def body(carry, hp_t):
         x, y = carry
+        alpha, beta = hp_t.alpha, hp_t.beta
         xs = stacked(x)
         def inner(t, yy):
             gy = jnp.mean(prob.grad_y_g(xs, stacked(yy)), 0)
@@ -248,19 +254,19 @@ def fednest_run(prob: BilevelProblem, net: Network | None, *, alpha: float,
         x1 = x - alpha * d
         return (x1, y1), default_metrics(prob, stacked(x), ys)
 
-    (x, y), metrics = _run_scan(body, (xg, yg), K)
+    (x, y), metrics = _run_scan(body, (xg, yg), hp, spec.K)
     # per client per round: M+U+2 vector up/downs through the center
-    comm = 2 * ((M + 1) * d2 + (U + 1) * d2 + d1)
+    floats = 2 * ((M + 1) * d2 + (U + 1) * d2 + d1)
     # star routing never touches a MixingOp — static ledger describing
     # the up+down transfers the simulation's means stand in for
     from repro.comm import static_ledger
     ledger = static_ledger("identity", [
-        ("inner_updown", (d2,), K * 2 * (M + 1)),
-        ("ihgp_updown", (d2,), K * 2 * (U + 1)),
-        ("outer_updown", (d1,), K * 2),
+        ("inner_updown", (d2,), spec.K * 2 * (M + 1)),
+        ("ihgp_updown", (d2,), spec.K * 2 * (U + 1)),
+        ("outer_updown", (d1,), spec.K * 2),
     ], name="fednest")
-    return BaselineResult(stacked(x), stacked(y), metrics, comm,
-                          name="FedNest", ledger=ledger)
+    return stacked(x), stacked(y), metrics, None, ledger, floats, \
+        "FedNest"
 
 
 # ---------------------------------------------------------------------------
@@ -268,28 +274,20 @@ def fednest_run(prob: BilevelProblem, net: Network | None, *, alpha: float,
 # bilevel (vector communication, momentum on the hyper-gradient).
 # ---------------------------------------------------------------------------
 
-def madbo_run(prob: BilevelProblem, net: Network, *, alpha: float,
-              beta: float, K: int, M: int = 10, U: int = 3,
-              momentum: float = 0.9, x0: Array | None = None,
-              y0: Array | None = None, seed: int = 0,
-              mixing: str = "auto",
-              mixing_interpret: bool = True,
-              mixing_dtype: str = "f32",
-              comm: str = "identity") -> BaselineResult:
-    W = make_mixing_op(net, backend=mixing, interpret=mixing_interpret,
-                       dtype=mixing_dtype, comm=comm)
-    n, d1, d2 = prob.n, prob.d1, prob.d2
-    if x0 is None:
-        x0 = jnp.zeros((n, d1), jnp.float32)
-    if y0 is None:
-        y0 = 0.01 * jax.random.normal(jax.random.PRNGKey(seed), (n, d2))
+def madbo_solve(prob: BilevelProblem, net: Network, spec, hp: RoundHP,
+                x0=None, y0=None, seed: int = 0):
+    W = _mixing_op(net, spec)
+    M, U, momentum = spec.M, spec.U, spec.momentum
+    x0, y0 = _init_xy(prob, x0, y0, seed)
+    d1, d2 = prob.d1, prob.d2
     v0 = jnp.zeros_like(x0)
     cs0 = _open_channels(
         W, {"inner_y": y0, "dihgp_h": y0, "lap_x": x0, "tracker_v": v0},
         seed)
 
-    def body(carry, _):
+    def body(carry, hp_t):
         (x, y, v), cs = carry
+        alpha, beta, gamma = hp_t.alpha, hp_t.beta, hp_t.gamma
         def inner(t, c):
             yy, st = c
             return inner_dgd_step_c(prob, W, beta, x, yy, st)
@@ -297,7 +295,7 @@ def madbo_run(prob: BilevelProblem, net: Network, *, alpha: float,
         h, h_st = dihgp_dense_c(prob, W, beta, x, y1, U,
                                 cs["dihgp_h"].reset_hat())
         lap_x, lx_st = laplacian_apply_c(W, x, cs["lap_x"])
-        d = lap_x / alpha + prob.grad_x_f(x, y1) \
+        d = lap_x * gamma + prob.grad_x_f(x, y1) \
             + beta * prob.cross_xy_g_times(x, y1, h)
         v1 = momentum * v + (1.0 - momentum) * d
         v1, v_st = mix_apply_c(W, v1, cs["tracker_v"])   # gossip tracker
@@ -306,8 +304,89 @@ def madbo_run(prob: BilevelProblem, net: Network, *, alpha: float,
               "tracker_v": v_st}
         return ((x1, y1, v1), cs), default_metrics(prob, x, y1)
 
-    ((x, y, _), cs), metrics = _run_scan(body, ((x0, y0, v0), cs0), K)
+    ((x, y, _), cs), metrics = _run_scan(body, ((x0, y0, v0), cs0), hp,
+                                         spec.K)
     W.ledger.charge_states(cs.values())
-    comm = M * d2 + U * d2 + 2 * d1            # extra d1 for the tracker
-    return BaselineResult(x, y, metrics, comm, name="MA-DBO",
-                          ledger=W.ledger)
+    floats = M * d2 + U * d2 + 2 * d1          # extra d1 for the tracker
+    return x, y, metrics, cs, W.ledger, floats, "MA-DBO"
+
+
+BASELINE_SOLVERS = {
+    "dgbo": dgbo_solve,
+    "dgtbo": dgtbo_solve,
+    "fednest": fednest_solve,
+    "ma_dbo": madbo_solve,
+}
+
+
+# ---------------------------------------------------------------------------
+# Legacy kwargs shims (deprecated — lower onto SolverSpec + solve)
+# ---------------------------------------------------------------------------
+
+def _baseline_shim(method: str, legacy_name: str, prob, net, *,
+                   alpha, beta, K, M, x0, y0, seed,
+                   mixing="auto", mixing_interpret=True,
+                   mixing_dtype="f32", comm="identity", **method_kw):
+    from repro.solve import solve
+    from repro.solve._compat import warn_once
+    from repro.solve.spec import (CommSpec, MixingSpec, ScheduleSpec,
+                                  SolverSpec)
+    warn_once(
+        legacy_name,
+        f"{legacy_name}(prob, net, alpha=..., beta=...) is deprecated: "
+        f"use repro.solve.solve(prob, net, "
+        f"SolverSpec(method={method!r}, ...)) — schedules replace the "
+        f"scalar kwargs")
+    spec = SolverSpec(
+        method=method, tier="reference", K=K, M=M,
+        schedule=ScheduleSpec(alpha=alpha, beta=beta),
+        mixing=MixingSpec(backend=mixing, interpret=mixing_interpret,
+                          dtype=mixing_dtype),
+        comm=CommSpec(spec=comm), **method_kw)
+    res = solve(prob, net, spec, x0=x0, y0=y0, seed=seed)
+    return BaselineResult(
+        res.x, res.y, res.metrics,
+        res.extras["comm_floats_per_round"],
+        name=res.extras["name"], ledger=res.ledger)
+
+
+def dgbo_run(prob: BilevelProblem, net: Network, *, alpha: float,
+             beta: float, K: int, M: int = 10, b: int = 3,
+             x0: Array | None = None, y0: Array | None = None,
+             seed: int = 0, **mix_kw) -> BaselineResult:
+    """Deprecated shim — `solve(prob, net, SolverSpec(method="dgbo"))`."""
+    return _baseline_shim("dgbo", "dgbo_run", prob, net, alpha=alpha,
+                          beta=beta, K=K, M=M, x0=x0, y0=y0, seed=seed,
+                          b=b, **mix_kw)
+
+
+def dgtbo_run(prob: BilevelProblem, net: Network, *, alpha: float,
+              beta: float, K: int, M: int = 10, N: int = 5,
+              x0: Array | None = None, y0: Array | None = None,
+              seed: int = 0, **mix_kw) -> BaselineResult:
+    """Deprecated shim — `solve(prob, net, SolverSpec(method="dgtbo"))`."""
+    return _baseline_shim("dgtbo", "dgtbo_run", prob, net, alpha=alpha,
+                          beta=beta, K=K, M=M, x0=x0, y0=y0, seed=seed,
+                          N=N, **mix_kw)
+
+
+def fednest_run(prob: BilevelProblem, net: Network | None, *,
+                alpha: float, beta: float, K: int, M: int = 10,
+                U: int = 3, x0: Array | None = None,
+                y0: Array | None = None, seed: int = 0
+                ) -> BaselineResult:
+    """Deprecated shim — `solve(prob, None, SolverSpec(method="fednest"))`."""
+    return _baseline_shim("fednest", "fednest_run", prob, net,
+                          alpha=alpha, beta=beta, K=K, M=M, x0=x0,
+                          y0=y0, seed=seed, U=U)
+
+
+def madbo_run(prob: BilevelProblem, net: Network, *, alpha: float,
+              beta: float, K: int, M: int = 10, U: int = 3,
+              momentum: float = 0.9, x0: Array | None = None,
+              y0: Array | None = None, seed: int = 0,
+              **mix_kw) -> BaselineResult:
+    """Deprecated shim — `solve(prob, net, SolverSpec(method="ma_dbo"))`."""
+    return _baseline_shim("ma_dbo", "madbo_run", prob, net, alpha=alpha,
+                          beta=beta, K=K, M=M, x0=x0, y0=y0, seed=seed,
+                          U=U, momentum=momentum, **mix_kw)

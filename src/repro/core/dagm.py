@@ -2,43 +2,82 @@
 
 Each outer iteration k (of K):
   1. M inner DGD steps on the penalized inner problem (Eq. 15–16):
-         y ← W y − β ∇_y g(x, y)            [M neighbor exchanges of d2]
+         y ← W y − βₖ ∇_y g(x, y)           [M neighbor exchanges of d2]
   2. DIHGP (Algorithm 1) for h ≈ −H^{-1}∇_y f  [U neighbor exchanges]
   3. Outer step with the Eq. (17b) hyper-gradient estimate:
-         ∇̂F = (1/α)(I−Ẃ)x + ∇_x f(x, ỹ) + β ∇²_xy g(x, ỹ) h
-         x ← x − α ∇̂F = Ẃ x − α(∇_x f + β ∇²_xy g·h)
+         ∇̂F = γₖ(I−Ẃ)x + ∇_x f(x, ỹ) + βₖ ∇²_xy g(x, ỹ) h
+         x ← x − αₖ ∇̂F
                                              [1 neighbor exchange of d1]
 
 Only matrix-vector products and vector communication — the paper's core
 communication-efficiency claim, preserved structurally here: the mixing
 ops are the only cross-agent operations.
 
-`dagm_run` is the reference-tier driver (stacked (n, d) arrays, any
-connected W); the pod-scale sharded version lives in
-`repro.distributed.dagm_sharded` and reuses the same update algebra.
+Hyper-parameters enter the round body as **runtime operands** (a
+`RoundHP` of traced f32 scalars, one slice per round of the
+`repro.solve` schedules): one compiled program serves any (αₖ, βₖ, γₖ)
+sequence, which is what makes the serve tier's traced-hp buckets
+bit-exact with solo runs and the paper's decaying-step-size
+corollaries runnable.  γ defaults to 1/α (the paper's penalty
+coupling) computed as float32(1)/float32(α) — bit-identical to the
+division-by-literal folding of the legacy Python-float configs, so
+constant schedules reproduce the historical trajectories exactly
+(regression-tested).
+
+`repro.solve.solve` is the public entry point; `DAGMConfig`/`dagm_run`
+survive as deprecation shims that lower onto `SolverSpec`.  The
+pod-scale sharded version lives in `repro.distributed.dagm_sharded`
+and reuses the same update algebra.
 """
 from __future__ import annotations
 
 import dataclasses
-import warnings
-from functools import partial
-from typing import Callable
+from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from .dihgp import (dihgp_dense, dihgp_dense_c, dihgp_matrix_free,
                     dihgp_matrix_free_c)
-from .mixing import (Network, laplacian_apply, laplacian_apply_c,
-                     make_mixing_op, mix_apply)
+from .mixing import Network, laplacian_apply, laplacian_apply_c
 from .penalty import consensus_error, inner_dgd_step, inner_dgd_step_c
 from .problems import BilevelProblem
 
 Array = jnp.ndarray
 
 
+class RoundHP(NamedTuple):
+    """One outer round's hyper-parameters, as jit operands.
+
+    Scalars inside the round body; (rounds,) arrays when passed to
+    `dagm_run_chunk` (the scan slices them per round).  `gamma` is the
+    outer penalty coefficient multiplying (I−Ẃ)x — pass
+    float32(1)/float32(alpha) for the paper's coupling (that product
+    is bit-identical to the legacy `/ alpha` literal division)."""
+    alpha: Any
+    beta: Any
+    gamma: Any
+
+
+def constant_round_hp(cfg) -> RoundHP:
+    """RoundHP of f32 constants from any config surface (round-0 values
+    of the spec's schedules — the legacy single-step semantics)."""
+    from repro.solve.spec import as_solver_spec
+    sched = as_solver_spec(cfg).schedule.materialize(1)
+    return RoundHP(alpha=sched.alpha[0], beta=sched.beta[0],
+                   gamma=sched.gamma[0])
+
+
 @dataclasses.dataclass(frozen=True)
 class DAGMConfig:
+    """DEPRECATED — construct a `repro.solve.SolverSpec` (or the
+    `repro.solve.dagm_spec(...)` kwargs mirror) instead.
+
+    Survives as a thin shim that lowers onto SolverSpec: every field
+    keeps its meaning, but hyper-parameters are Python constants here —
+    runtime schedules (decaying αₖ/βₖ, growing γₖ) need the SolverSpec
+    surface.  Constructing one emits a DeprecationWarning once per
+    process."""
     alpha: float = 1e-2          # outer step / outer penalty 1/α
     beta: float = 1e-2           # inner step / inner penalty 1/β
     K: int = 100                 # outer iterations
@@ -46,34 +85,18 @@ class DAGMConfig:
     U: int = 3                   # Neumann truncation order (paper uses 3)
     dihgp: str = "dense"         # "dense" | "matrix_free" | "exact"
     curvature: float | None = None   # fixed λmax bound for matrix_free
-    mixing: str = "auto"         # MixingOp backend: "auto" | "dense" |
-    #                              "circulant[_pallas]" |
-    #                              "sparse_gather[_pallas]" — selects the
-    #                              (I−W)·Y execution path for the whole
-    #                              run (repro.topology.ops.MixingOp)
-    mixing_interpret: bool = True    # Pallas interpret mode (CPU) when
-    #                                  mixing="*_pallas"; flip to False
-    #                                  on real TPU.  (When "auto"
-    #                                  upgrades via kernels.ops
-    #                                  .use_pallas, *that* call's
-    #                                  interpret flag governs instead.)
-    mixing_dtype: str = "f32"    # "f32" | "bf16": bf16 stores/gossips
-    #                              the mixed state in bfloat16 with f32
-    #                              accumulation — the reference-tier
-    #                              twin of ShardedDAGMConfig.comm_dtype
-    #                              (shared vocabulary:
-    #                              topology.resolve_mixing_dtype)
-    comm: str = "identity"       # repro.comm gossip spec: "identity" |
-    #                              "bf16" | "int8[+ef]" | "int4[+ef]" |
-    #                              "top_k:<frac>[+ef]" |
-    #                              "rand_k:<frac>[+ef]" — compresses
-    #                              every neighbor exchange (inner DGD,
-    #                              DIHGP, outer step) and generalizes
-    #                              mixing_dtype ("bf16" here quantizes
-    #                              only the wire copy; mixing_dtype
-    #                              additionally rounds storage).
-    #                              "identity" is bit-exact with the
-    #                              uncompressed trajectories.
+    mixing: str = "auto"         # MixingOp backend (repro.topology)
+    mixing_interpret: bool = True    # Pallas interpret mode (CPU)
+    mixing_dtype: str = "f32"    # "f32" | "bf16" storage/gossip dtype
+    comm: str = "identity"       # repro.comm gossip spec
+
+    def __post_init__(self):
+        from repro.solve._compat import warn_once
+        warn_once(
+            "DAGMConfig",
+            "DAGMConfig is deprecated: use repro.solve.SolverSpec "
+            "(dagm_spec(...) mirrors these kwargs) with "
+            "repro.solve.solve(problem, network, spec)")
 
     def comm_channels(self, d1: int, d2: int) -> list[tuple]:
         """(name, per-agent payload shape, sends per outer round) for
@@ -98,15 +121,15 @@ class DAGMConfig:
     def comm_vectors_per_round(self) -> dict[str, int]:
         """Deprecated: per-agent vector exchanges per outer round.
 
-        Kept for Appendix-S1 compatibility (legacy key names); now
-        derived from `comm_channels` instead of a hand-kept dict, so it
-        honours the configured dihgp backend.  Prefer
-        `comm_ledger(d1, d2)` which also knows payload shapes and wire
-        bytes."""
-        warnings.warn(
+        Kept for Appendix-S1 compatibility (legacy key names); derived
+        from `comm_channels`, so it honours the configured dihgp
+        backend.  Prefer `comm_ledger(d1, d2)` which also knows payload
+        shapes and wire bytes.  Warns once per process."""
+        from repro.solve._compat import warn_once
+        warn_once(
+            "comm_vectors_per_round",
             "DAGMConfig.comm_vectors_per_round() is deprecated; use "
-            "DAGMConfig.comm_ledger(d1, d2) / DAGMResult.ledger",
-            DeprecationWarning, stacklevel=2)
+            "DAGMConfig.comm_ledger(d1, d2) / DAGMResult.ledger")
         sends = {name: per_round for name, _, per_round
                  in self.comm_channels(1, 1)}
         return {"inner_d2": sends["inner_y"],
@@ -123,24 +146,34 @@ class DAGMResult:
     #                                  the run's traced send counters
 
 
-def hypergrad_estimate(prob: BilevelProblem, W, cfg: DAGMConfig,
-                       x: Array, y: Array) -> Array:
-    """∇̂F(x, y) of Eq. (17b) with the configured DIHGP backend."""
+def _dihgp_h(prob: BilevelProblem, W, cfg, x: Array, y: Array,
+             beta, curvature):
+    """h ≈ −H⁻¹∇_y f with the configured DIHGP backend (uncompressed)."""
     if cfg.dihgp == "dense":
-        h = dihgp_dense(prob, W, cfg.beta, x, y, cfg.U)
-    elif cfg.dihgp == "matrix_free":
+        return dihgp_dense(prob, W, beta, x, y, cfg.U)
+    if cfg.dihgp == "matrix_free":
         hvp = lambda v: prob.hvp_yy_g(x, y, v)
-        curv = None if cfg.curvature is None else \
-            jnp.full((prob.n,), cfg.curvature, jnp.float32)
-        h = dihgp_matrix_free(hvp, prob.grad_y_f(x, y), W, cfg.beta, cfg.U,
-                              curvature=curv)
-    elif cfg.dihgp == "exact":
+        curv = None if curvature is None else \
+            jnp.full((prob.n,), curvature, jnp.float32)
+        return dihgp_matrix_free(hvp, prob.grad_y_f(x, y), W, beta,
+                                 cfg.U, curvature=curv)
+    if cfg.dihgp == "exact":
         from .penalty import exact_ihgp
-        h = exact_ihgp(prob, W, cfg.beta, x, y)
-    else:
-        raise ValueError(f"unknown dihgp backend {cfg.dihgp!r}")
-    return laplacian_apply(W, x) / cfg.alpha + prob.grad_x_f(x, y) \
-        + cfg.beta * prob.cross_xy_g_times(x, y, h)
+        return exact_ihgp(prob, W, beta, x, y)
+    raise ValueError(f"unknown dihgp backend {cfg.dihgp!r}")
+
+
+def hypergrad_estimate(prob: BilevelProblem, W, cfg,
+                       x: Array, y: Array, hp: RoundHP | None = None,
+                       curvature=None) -> Array:
+    """∇̂F(x, y) of Eq. (17b) with the configured DIHGP backend."""
+    if hp is None:
+        hp = constant_round_hp(cfg)
+    if curvature is None:
+        curvature = cfg.curvature
+    h = _dihgp_h(prob, W, cfg, x, y, hp.beta, curvature)
+    return laplacian_apply(W, x) * hp.gamma + prob.grad_x_f(x, y) \
+        + hp.beta * prob.cross_xy_g_times(x, y, h)
 
 
 def default_metrics(prob: BilevelProblem, x: Array, y: Array
@@ -157,40 +190,49 @@ def default_metrics(prob: BilevelProblem, x: Array, y: Array
     return m
 
 
-def hypergrad_estimate_c(prob: BilevelProblem, W, cfg: DAGMConfig,
-                         x: Array, y: Array, h_st, x_st):
+def hypergrad_estimate_c(prob: BilevelProblem, W, cfg,
+                         x: Array, y: Array, h_st, x_st,
+                         hp: RoundHP | None = None, curvature=None):
     """`hypergrad_estimate` with both gossips (the U DIHGP exchanges of
     h and the single (I−Ẃ)x exchange) routed through their compressed
     channels.  Returns (∇̂F, h-channel state, x-channel state)."""
+    if hp is None:
+        hp = constant_round_hp(cfg)
+    if curvature is None:
+        curvature = cfg.curvature
     if cfg.dihgp == "dense":
-        h, h_st = dihgp_dense_c(prob, W, cfg.beta, x, y, cfg.U, h_st)
+        h, h_st = dihgp_dense_c(prob, W, hp.beta, x, y, cfg.U, h_st)
     elif cfg.dihgp == "matrix_free":
         hvp = lambda v: prob.hvp_yy_g(x, y, v)
-        curv = None if cfg.curvature is None else \
-            jnp.full((prob.n,), cfg.curvature, jnp.float32)
+        curv = None if curvature is None else \
+            jnp.full((prob.n,), curvature, jnp.float32)
         h, h_st = dihgp_matrix_free_c(hvp, prob.grad_y_f(x, y), W,
-                                      cfg.beta, cfg.U, h_st,
+                                      hp.beta, cfg.U, h_st,
                                       curvature=curv)
     elif cfg.dihgp == "exact":
         from .penalty import exact_ihgp
-        h = exact_ihgp(prob, W, cfg.beta, x, y)
+        h = exact_ihgp(prob, W, hp.beta, x, y)
     else:
         raise ValueError(f"unknown dihgp backend {cfg.dihgp!r}")
     lap_x, x_st = laplacian_apply_c(W, x, x_st)
-    return lap_x / cfg.alpha + prob.grad_x_f(x, y) \
-        + cfg.beta * prob.cross_xy_g_times(x, y, h), h_st, x_st
+    return lap_x * hp.gamma + prob.grad_x_f(x, y) \
+        + hp.beta * prob.cross_xy_g_times(x, y, h), h_st, x_st
 
 
-def dagm_outer_step(prob: BilevelProblem, W, cfg: DAGMConfig,
+def dagm_outer_step(prob: BilevelProblem, W, cfg,
                     x: Array, y: Array,
-                    metrics_fn: Callable | None = None):
+                    metrics_fn: Callable | None = None,
+                    hp: RoundHP | None = None, curvature=None):
     """One full outer iteration of Algorithm 2 (lines 3–13)."""
+    if hp is None:
+        hp = constant_round_hp(cfg)
     def inner(t, yy):
-        return inner_dgd_step(prob, W, cfg.beta, x, yy)        # Eq. 16
+        return inner_dgd_step(prob, W, hp.beta, x, yy)         # Eq. 16
     y_tilde = jax.lax.fori_loop(0, cfg.M, inner, y)            # lines 4–9
 
-    d = hypergrad_estimate(prob, W, cfg, x, y_tilde)           # lines 10–12
-    x_next = x - cfg.alpha * d                                 # line 13
+    d = hypergrad_estimate(prob, W, cfg, x, y_tilde, hp=hp,
+                           curvature=curvature)                # lines 10–12
+    x_next = x - hp.alpha * d                                  # line 13
     # custom metrics callbacks receive W exactly as configured (a
     # MixingOp under dagm_run, or whatever array the caller passed) —
     # use mixing.as_matrix(W) inside the callback for raw entries.
@@ -204,28 +246,32 @@ def dagm_outer_step(prob: BilevelProblem, W, cfg: DAGMConfig,
     return x_next, y_tilde, metrics
 
 
-def dagm_outer_step_c(prob: BilevelProblem, W, cfg: DAGMConfig,
+def dagm_outer_step_c(prob: BilevelProblem, W, cfg,
                       x: Array, y: Array, cs: dict,
-                      metrics_fn: Callable | None = None):
+                      metrics_fn: Callable | None = None,
+                      hp: RoundHP | None = None, curvature=None):
     """One outer iteration with every gossip on its comm channel.
 
     `cs` maps {"inner_y", "dihgp_h", "outer_x"} to ChannelStates; with
     `comm="identity"` each exchange short-circuits to exactly the
     uncompressed op, so this is bit-identical to `dagm_outer_step`
     (regression-tested) while the send counters still tick."""
+    if hp is None:
+        hp = constant_round_hp(cfg)
     # the DIHGP h vector is re-initialized every round: neighbors'
     # error-feedback replicas restart at zero with it
     cs = dict(cs, dihgp_h=cs["dihgp_h"].reset_hat())
 
     def inner(t, carry):
         yy, st = carry
-        return inner_dgd_step_c(prob, W, cfg.beta, x, yy, st)   # Eq. 16
+        return inner_dgd_step_c(prob, W, hp.beta, x, yy, st)    # Eq. 16
     y_tilde, y_st = jax.lax.fori_loop(0, cfg.M, inner,
                                       (y, cs["inner_y"]))       # lines 4–9
     d, h_st, x_st = hypergrad_estimate_c(prob, W, cfg, x, y_tilde,
                                          cs["dihgp_h"],
-                                         cs["outer_x"])         # lines 10–12
-    x_next = x - cfg.alpha * d                                  # line 13
+                                         cs["outer_x"], hp=hp,
+                                         curvature=curvature)   # lines 10–12
+    x_next = x - hp.alpha * d                                   # line 13
     if metrics_fn is None:
         metrics = default_metrics(prob, x, y_tilde)
     else:
@@ -235,27 +281,30 @@ def dagm_outer_step_c(prob: BilevelProblem, W, cfg: DAGMConfig,
         {"inner_y": y_st, "dihgp_h": h_st, "outer_x": x_st}
 
 
-def dagm_validate(cfg: DAGMConfig) -> None:
-    """Config validation shared by `dagm_run` and the `repro.serve`
-    engine (which runs the same chunk machinery without this driver)."""
-    if cfg.comm != "identity" and cfg.dihgp == "exact":
-        raise ValueError(
-            "dihgp='exact' solves the penalized system densely and has "
-            "no gossip to compress; use 'dense' or 'matrix_free' with "
-            f"comm={cfg.comm!r}")
+def dagm_validate(cfg) -> None:
+    """Chunk-machinery validation for any config surface (SolverSpec or
+    legacy DAGMConfig/ShardedDAGMConfig) — the serve engine routes
+    every job through this before it can mint a bucket
+    (`serve.jobs.compile_signature`); `solve()` validates the spec
+    directly."""
+    from repro.solve.spec import as_solver_spec, validate_spec
+    spec = as_solver_spec(cfg)
+    # legacy sharded lowering pins tier="sharded"; this validator only
+    # guards the reference/serve chunk machinery, so check tier-free
+    validate_spec(dataclasses.replace(spec, tier="reference")
+                  if spec.tier == "sharded" else spec)
 
 
-def dagm_init_carry(prob: BilevelProblem, W, cfg: DAGMConfig,
+def dagm_init_carry(prob: BilevelProblem, W, cfg,
                     x0: Array | None = None, y0: Array | None = None,
                     seed: int = 0):
     """The round-0 chunk carry ((x0, y0), channel states).
 
-    This is the single init protocol shared by `dagm_run` and the
-    `repro.serve` engine (a serve slot admitting job `seed` holds
-    exactly this carry, so batched trajectories can match solo runs
-    bit-for-bit): x0 = 0 (the paper's analysis assumption), y0 =
-    0.01·N(0, I) from PRNGKey(seed), comm channels keyed on a stream
-    disjoint from y0's."""
+    This is the single init protocol shared by every tier (a serve
+    slot admitting job `seed` holds exactly this carry, so batched
+    trajectories match solo runs bit-for-bit): x0 = 0 (the paper's
+    analysis assumption), y0 = 0.01·N(0, I) from PRNGKey(seed), comm
+    channels keyed on a stream disjoint from y0's."""
     key = jax.random.PRNGKey(seed)
     if x0 is None:   # paper's analysis assumes x_0 = 0
         x0 = jnp.zeros((prob.n, prob.d1), jnp.float32)
@@ -267,15 +316,35 @@ def dagm_init_carry(prob: BilevelProblem, W, cfg: DAGMConfig,
     return ((x0, y0), cs0)
 
 
-def dagm_run_chunk(prob: BilevelProblem, W, cfg: DAGMConfig, carry,
-                   rounds: int, metrics_fn: Callable | None = None):
+def chunk_hp(cfg, rounds: int, start: int = 0) -> RoundHP:
+    """RoundHP of (rounds,) schedule slices [start, start+rounds) for
+    any config surface — the operands `dagm_run_chunk` scans over."""
+    from repro.solve.spec import as_solver_spec
+    spec = as_solver_spec(cfg)
+    sched = spec.schedule.materialize(max(spec.K, start + rounds))
+    sl = slice(start, start + rounds)
+    return RoundHP(alpha=sched.alpha[sl], beta=sched.beta[sl],
+                   gamma=sched.gamma[sl])
+
+
+def dagm_run_chunk(prob: BilevelProblem, W, cfg, carry,
+                   rounds: int, metrics_fn: Callable | None = None,
+                   hp: RoundHP | None = None, curvature=None):
     """`rounds` outer iterations of Algorithm 2, carry in / carry out.
 
-    The round-sliced core of `dagm_run`: carry is ((x, y), channel
-    states) as produced by `dagm_init_carry` or a previous chunk.
-    Pure and un-jitted — callers jit it (`dagm_run` with rounds=K) or
-    vmap it over a leading job axis (`repro.serve`'s continuous
-    batching, which retires converged jobs at chunk boundaries).
+    The round-sliced core shared by `solve`, the legacy `dagm_run`
+    shim and the serve engine: carry is ((x, y), channel states) as
+    produced by `dagm_init_carry` or a previous chunk.  Pure and
+    un-jitted — callers jit it (`solve` with rounds=K) or vmap it over
+    a leading job axis (`repro.serve`'s continuous batching, which
+    retires converged jobs at chunk boundaries).
+
+    `hp` carries the chunk's hyper-parameter slices as (rounds,)
+    arrays — runtime operands, so one compiled chunk serves any
+    schedule values; None materializes rounds [0, rounds) of `cfg`'s
+    schedules (constants for legacy configs).  `curvature` is the
+    matrix-free DIHGP bound (scalar operand; defaults to the config's).
+
     Chunking is exact: running K rounds as K/T chunks of T (T > 1)
     reproduces the single K-round scan bit-for-bit.  (T = 1 is legal
     but XLA fully unrolls a length-1 scan and may fuse the round body
@@ -285,45 +354,38 @@ def dagm_run_chunk(prob: BilevelProblem, W, cfg: DAGMConfig, carry,
 
     Returns (carry, metrics) with metrics stacked over the chunk's
     rounds."""
-    def body(c, _):
+    if hp is None:
+        hp = chunk_hp(cfg, rounds)
+    hp = RoundHP(*(jnp.asarray(a, jnp.float32) for a in hp))
+
+    def body(c, hp_t):
         (x, y), cs = c
         x, y, m, cs = dagm_outer_step_c(prob, W, cfg, x, y, cs,
-                                        metrics_fn)
+                                        metrics_fn, hp=RoundHP(*hp_t),
+                                        curvature=curvature)
         return ((x, y), cs), m
-    return jax.lax.scan(body, carry, None, length=rounds)
+    return jax.lax.scan(body, carry, hp, length=rounds)
 
 
-def dagm_run(prob: BilevelProblem, net: Network, cfg: DAGMConfig,
+def dagm_run(prob: BilevelProblem, net: Network, cfg,
              x0: Array | None = None, y0: Array | None = None,
              metrics_fn: Callable | None = None, seed: int = 0
              ) -> DAGMResult:
-    """Run K outer iterations of Algorithm 2 (reference tier).
+    """Legacy reference-tier entry — lowers onto `repro.solve.solve`.
 
-    `cfg.mixing` picks the MixingOp backend once, here; every W·y /
-    (I−W)·y below (inner DGD, DIHGP, outer step, metrics) runs on it,
-    and `cfg.comm` wraps each of those gossips in the compressed
-    channel protocol.  The returned `DAGMResult.ledger` holds the
-    byte-accurate traffic accounting charged from the run itself.
-
-    Composition: this driver is `dagm_init_carry` + one jitted
-    `dagm_run_chunk` of K rounds + a ledger charge; `repro.serve`
-    stacks the same pieces over a job axis."""
-    dagm_validate(cfg)
-    W = make_mixing_op(net, backend=cfg.mixing,
-                       interpret=cfg.mixing_interpret,
-                       dtype=cfg.mixing_dtype, comm=cfg.comm)
-    carry0 = dagm_init_carry(prob, W, cfg, x0, y0, seed)
-
-    @jax.jit
-    def run(carry):
-        return dagm_run_chunk(prob, W, cfg, carry, cfg.K, metrics_fn)
-
-    ((x, y), cs), metrics = run(carry0)
-    W.ledger.charge_states(cs.values())
-    return DAGMResult(x=x, y=y, metrics=metrics, ledger=W.ledger)
+    Accepts a (deprecated) `DAGMConfig` or a `SolverSpec`; the run is
+    identical to ``solve(prob, net, spec, ...)`` — one jitted K-round
+    `dagm_run_chunk` with the schedules as traced operands — repackaged
+    in the historical `DAGMResult`."""
+    from repro.solve import solve
+    from repro.solve.spec import as_solver_spec
+    res = solve(prob, net, as_solver_spec(cfg), x0=x0, y0=y0,
+                metrics_fn=metrics_fn, seed=seed)
+    return DAGMResult(x=res.x, y=res.y, metrics=res.metrics,
+                      ledger=res.ledger)
 
 
-def dagm_comm_bytes(cfg: DAGMConfig, net: Network, d1: int, d2: int,
+def dagm_comm_bytes(cfg, net: Network, d1: int, d2: int,
                     bytes_per: int = 4) -> int:
     """Total bytes moved over K rounds: each agent sends its payload to
     every neighbor each exchange ⇒ 2·|E| directed sends per exchange.
@@ -333,6 +395,7 @@ def dagm_comm_bytes(cfg: DAGMConfig, net: Network, d1: int, d2: int,
     compressor sets the wire format."""
     led = cfg.comm_ledger(d1, d2)
     sends = led.network_multiplier(net.num_edges)
-    if cfg.comm == "identity":
+    comm = cfg.comm if isinstance(cfg, DAGMConfig) else cfg.comm.spec
+    if comm == "identity":
         return led.total_floats * bytes_per * sends
     return led.total_bytes * sends

@@ -20,9 +20,9 @@ step for a given mesh.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Callable
+from typing import Any, Callable, NamedTuple
 
+import numpy as np
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
@@ -35,8 +35,42 @@ from .collectives import (RingWeights, ring_laplacian, ring_laplacian_c,
 Pytree = Any
 
 
+class ShardedRoundCoeffs(NamedTuple):
+    """One outer round's scalar coefficients, as jit operands.
+
+    The sharded update algebra only ever *multiplies* by (combinations
+    of) α, β and the scalar preconditioner D̃ — every reciprocal is
+    taken on the host in float64, exactly as the legacy Python-float
+    config did — so feeding these as traced f32 scalars reproduces the
+    literal-constant program bit-for-bit while letting one compiled
+    step serve any (αₖ, βₖ) schedule (`repro.solve` tier="sharded")."""
+    neg_beta: Any       # −β   (inner DGD step)
+    beta: Any           # β    (HVP + cross terms)
+    d: Any              # D̃ = β·c + 2(1−w_ii)
+    neg_inv_d: Any      # −1/D̃ (DIHGP init)
+    inv_d: Any          # 1/D̃  (DIHGP rescale)
+    neg_alpha: Any      # −α   (outer step)
+
+
+def sharded_round_coeffs(alpha: float, beta: float, curvature: float,
+                         w_self: float) -> ShardedRoundCoeffs:
+    """Host-side (float64) coefficient math matching the legacy config
+    path, rounded to f32 once at the use sites' precision."""
+    d = beta * curvature + 2.0 * (1.0 - w_self)
+    return ShardedRoundCoeffs(
+        neg_beta=np.float32(-beta), beta=np.float32(beta),
+        d=np.float32(d), neg_inv_d=np.float32(-1.0 / d),
+        inv_d=np.float32(1.0 / d), neg_alpha=np.float32(-alpha))
+
+
 @dataclasses.dataclass(frozen=True)
 class ShardedDAGMConfig:
+    """DEPRECATED — construct a `repro.solve.SolverSpec` with
+    tier="sharded" (or the `repro.solve.sharded_spec(...)` kwargs
+    mirror) instead.  Survives as a thin shim lowered by
+    `repro.solve.spec.as_solver_spec`; every `repro.distributed` entry
+    point accepts both.  Constructing one emits a DeprecationWarning
+    once per process."""
     alpha: float = 1e-2
     beta: float = 1e-2
     M: int = 5                 # inner DGD steps per outer step
@@ -88,6 +122,14 @@ class ShardedDAGMConfig:
     #                             (fori_loop bodies are counted once);
     #                             used by the dagm_dryrun accounting
 
+    def __post_init__(self):
+        from repro.solve._compat import warn_once
+        warn_once(
+            "ShardedDAGMConfig",
+            "ShardedDAGMConfig is deprecated: use repro.solve."
+            "SolverSpec with tier='sharded' (sharded_spec(...) mirrors "
+            "these kwargs); make_sharded_dagm accepts it directly")
+
     @property
     def comm_jnp_dtype(self):
         from repro.topology import resolve_mixing_dtype
@@ -106,6 +148,36 @@ class ShardedDAGMConfig:
         return parse_comm_spec(spec)
 
 
+def _as_sharded_cfg(cfg) -> ShardedDAGMConfig:
+    """Normalize a SolverSpec (tier='sharded') or a legacy
+    ShardedDAGMConfig to the internal per-round plan.  SolverSpec
+    schedules contribute their round-0 constants (the raw step is one
+    round per call; `repro.solve.solve` feeds per-round
+    `ShardedRoundCoeffs` operands for real schedules)."""
+    if isinstance(cfg, ShardedDAGMConfig):
+        return cfg
+    from repro.solve._compat import silently
+    from repro.solve.spec import SolverSpec
+    if not isinstance(cfg, SolverSpec):
+        raise TypeError(
+            f"expected SolverSpec or ShardedDAGMConfig, got "
+            f"{type(cfg).__name__}")
+    if cfg.curvature is None:
+        raise ValueError(
+            "the sharded tier's scalar-preconditioned DIHGP needs "
+            "SolverSpec.curvature (a λmax bound on the local inner "
+            "Hessians)")
+    sched = cfg.schedule.materialize(max(cfg.K, 1))
+    with silently():
+        return ShardedDAGMConfig(
+            alpha=float(sched.alpha[0]), beta=float(sched.beta[0]),
+            M=cfg.M, U=cfg.U, curvature=cfg.curvature,
+            axis=cfg.sharded.axis, comm_dtype=cfg.mixing.dtype,
+            comm=cfg.comm.spec, persist_ef=cfg.comm.persist_ef,
+            mix_every=cfg.sharded.mix_every,
+            unroll_loops=cfg.sharded.unroll_loops)
+
+
 def _agent_index(axis):
     """Flat agent index inside shard_map, for tuple axes too."""
     if isinstance(axis, tuple):
@@ -117,9 +189,10 @@ def _agent_index(axis):
 
 
 def dagm_local_round(g_fn: Callable, f_fn: Callable,
-                     cfg: ShardedDAGMConfig, w: RingWeights,
+                     cfg, w: RingWeights,
                      x: Pytree, y: Pytree, batch: Pytree,
-                     key=None, channels: dict | None = None):
+                     key=None, channels: dict | None = None,
+                     hp: ShardedRoundCoeffs | None = None):
     """One DAGM outer round from a single agent's perspective.
 
     g_fn(x, y, batch) -> scalar local inner loss  (strongly-convex-ish)
@@ -141,10 +214,19 @@ def dagm_local_round(g_fn: Callable, f_fn: Callable,
     resets its hat: the h vector itself re-initializes every round),
     keys advance inside the states, and the send counters accumulate
     across the whole run.  The caller threads the returned dict into
-    the next round."""
+    the next round.
+
+    `hp` (schedule mode): this round's `ShardedRoundCoeffs`, as traced
+    scalars — `repro.solve`'s tier="sharded" driver feeds one per round
+    so a single compiled step serves a whole (αₖ, βₖ) schedule.  None
+    reproduces the config's constants (bit-identical: the coefficients
+    are the very same host-float64 expressions either way)."""
     from repro.comm import channel_init
+    cfg = _as_sharded_cfg(cfg)
     axis = cfg.axis
-    beta, alpha = cfg.beta, cfg.alpha
+    if hp is None:
+        hp = sharded_round_coeffs(cfg.alpha, cfg.beta, cfg.curvature,
+                                  w.w_self)
     pol = cfg.comm_policy
 
     grad_y_g = jax.grad(g_fn, argnums=1)
@@ -187,7 +269,7 @@ def dagm_local_round(g_fn: Callable, f_fn: Callable,
                 lambda z, s: (z, s), yy, st)
         else:
             mixed, st = ring_mix_c(yy, axis, w, pol, st)
-        return taxpy(-beta, grad_y_g(x, yy, batch), mixed), st
+        return taxpy(hp.neg_beta, grad_y_g(x, yy, batch), mixed), st
     if cfg.unroll_loops:
         for t in range(cfg.M):
             y, st_y = inner(t, (y, st_y))
@@ -198,19 +280,17 @@ def dagm_local_round(g_fn: Callable, f_fn: Callable,
     def hvp(v):
         return jax.jvp(lambda yy: grad_y_g(x, yy, batch), (y,), (v,))[1]
 
-    d_scalar = beta * cfg.curvature + 2.0 * (1.0 - w.w_self)
-
     def H_apply(hh, st):
         lap, st = ring_laplacian_c(hh, axis, w, pol, st)
-        return taxpy(beta, hvp(hh), lap), st
+        return taxpy(hp.beta, hvp(hh), lap), st
 
     p = grad_y_f(x, y, batch)
-    h = tscale(-1.0 / d_scalar, p)
+    h = tscale(hp.neg_inv_d, p)
     def dihgp_iter(_, carry):
         hh, st = carry
         bh_mix, st = H_apply(hh, st)
-        bh = tsub(tscale(d_scalar, hh), bh_mix)        # B̃ h
-        return tscale(1.0 / d_scalar, tsub(bh, p)), st
+        bh = tsub(tscale(hp.d, hh), bh_mix)            # B̃ h
+        return tscale(hp.inv_d, tsub(bh, p)), st
     if cfg.unroll_loops:
         for _ in range(cfg.U):
             h, st_h = dihgp_iter(0, (h, st_h))
@@ -222,9 +302,9 @@ def dagm_local_round(g_fn: Callable, f_fn: Callable,
         return tdot(jax.grad(g_fn, argnums=1)(xx, y, batch), h)
     cross_term = jax.grad(cross)(x)
 
-    d_dir = taxpy(beta, cross_term, grad_x_f(x, y, batch))
+    d_dir = taxpy(hp.beta, cross_term, grad_x_f(x, y, batch))
     mixed_x, st_x = ring_mix_c(x, axis, w, pol, st_x)
-    x_new = taxpy(-alpha, d_dir, mixed_x)              # Ẃx − α(...)
+    x_new = taxpy(hp.neg_alpha, d_dir, mixed_x)        # Ẃx − α(...)
 
     metrics = {
         "outer_loss": f_fn(x, y, batch),
@@ -244,10 +324,17 @@ def dagm_local_round(g_fn: Callable, f_fn: Callable,
 
 
 def make_sharded_dagm(g_fn: Callable, f_fn: Callable,
-                      cfg: ShardedDAGMConfig, mesh: Mesh,
+                      cfg, mesh: Mesh,
                       x_spec=None, y_spec=None, batch_spec=None,
-                      manual_axes=None, jit_step: bool = True):
+                      manual_axes=None, jit_step: bool = True,
+                      schedule_hp: bool = False):
     """Jitted global DAGM step over `mesh`.
+
+    `cfg` is a `repro.solve.SolverSpec` (tier="sharded") or a legacy
+    `ShardedDAGMConfig`.  With ``schedule_hp=True`` the returned step
+    takes a trailing `ShardedRoundCoeffs` operand (replicated) so one
+    compiled step serves a whole per-round schedule — the
+    `repro.solve` tier="sharded" driver's mode.
 
     Global layout: x and y pytrees carry a leading agent axis of size
     n_agents = mesh size of cfg.axis (sharded 1-per-agent); batch leaves
@@ -271,6 +358,7 @@ def make_sharded_dagm(g_fn: Callable, f_fn: Callable,
     (keys live inside the states, so stochastic policies need no
     per-round key argument in this mode).
     """
+    cfg = _as_sharded_cfg(cfg)
     ax = cfg.axis
     ax_names = ax if isinstance(ax, tuple) else (ax,)
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
@@ -287,19 +375,19 @@ def make_sharded_dagm(g_fn: Callable, f_fn: Callable,
     squeeze = lambda t: jax.tree.map(lambda a: a[0], t)
     expand = lambda t: jax.tree.map(lambda a: a[None], t)
 
-    def local_step(x, y, batch, key=None):
+    def local_step(x, y, batch, key=None, hp=None):
         # strip the (size-1) leading agent axis inside the shard
         x1, y1, m = dagm_local_round(g_fn, f_fn, cfg, w,
                                      squeeze(x), squeeze(y),
-                                     squeeze(batch), key=key)
+                                     squeeze(batch), key=key, hp=hp)
         m = jax.tree.map(lambda s: jax.lax.pmean(s, ax), m)
         return expand(x1), expand(y1), m
 
-    def local_step_persist(x, y, batch, cs):
+    def local_step_persist(x, y, batch, cs, hp=None):
         x1, y1, m, cs1 = dagm_local_round(g_fn, f_fn, cfg, w,
                                           squeeze(x), squeeze(y),
                                           squeeze(batch),
-                                          channels=squeeze(cs))
+                                          channels=squeeze(cs), hp=hp)
         m = jax.tree.map(lambda s: jax.lax.pmean(s, ax), m)
         return expand(x1), expand(y1), m, expand(cs1)
 
@@ -307,22 +395,41 @@ def make_sharded_dagm(g_fn: Callable, f_fn: Callable,
     if manual != frozenset(mesh.axis_names):
         kw["axis_names"] = manual
     if cfg.persist_ef:
-        step = shard_map(local_step_persist, mesh=mesh,
-                         in_specs=(xs, ys, bs, P(ax)),
-                         out_specs=(xs, ys, P(), P(ax)),
-                         check_vma=False, **kw)
+        if schedule_hp:
+            step = shard_map(local_step_persist, mesh=mesh,
+                             in_specs=(xs, ys, bs, P(ax), P()),
+                             out_specs=(xs, ys, P(), P(ax)),
+                             check_vma=False, **kw)
+        else:
+            step = shard_map(lambda x, y, b, cs:
+                             local_step_persist(x, y, b, cs),
+                             mesh=mesh, in_specs=(xs, ys, bs, P(ax)),
+                             out_specs=(xs, ys, P(), P(ax)),
+                             check_vma=False, **kw)
     elif stochastic:
-        step = shard_map(local_step, mesh=mesh,
-                         in_specs=(xs, ys, bs, P()),
+        if schedule_hp:
+            step = shard_map(local_step, mesh=mesh,
+                             in_specs=(xs, ys, bs, P(), P()),
+                             out_specs=(xs, ys, P()), check_vma=False,
+                             **kw)
+        else:
+            step = shard_map(lambda x, y, b, k: local_step(x, y, b, k),
+                             mesh=mesh, in_specs=(xs, ys, bs, P()),
+                             out_specs=(xs, ys, P()), check_vma=False,
+                             **kw)
+    elif schedule_hp:
+        step = shard_map(lambda x, y, b, hp:
+                         local_step(x, y, b, hp=hp),
+                         mesh=mesh, in_specs=(xs, ys, bs, P()),
                          out_specs=(xs, ys, P()), check_vma=False, **kw)
     else:
         step = shard_map(lambda x, y, b: local_step(x, y, b),
-                         mesh=mesh, in_specs=(xs, ys, bs),
-                         out_specs=(xs, ys, P()), check_vma=False, **kw)
+                        mesh=mesh, in_specs=(xs, ys, bs),
+                        out_specs=(xs, ys, P()), check_vma=False, **kw)
     return (jax.jit(step) if jit_step else step), w
 
 
-def open_sharded_channels(cfg: ShardedDAGMConfig, x: Pytree, y: Pytree,
+def open_sharded_channels(cfg, x: Pytree, y: Pytree,
                           seed: int = 0) -> dict:
     """Globally-stacked gossip ChannelStates for the persist_ef step.
 
@@ -334,7 +441,7 @@ def open_sharded_channels(cfg: ShardedDAGMConfig, x: Pytree, y: Pytree,
     traced send counter.  Shard with `P(cfg.axis)` — the step's
     in/out_specs already do."""
     from repro.comm import ChannelState
-    pol = cfg.comm_policy
+    pol = _as_sharded_cfg(cfg).comm_policy
     n = jax.tree.leaves(y)[0].shape[0]
     keys = jax.vmap(lambda i: jax.random.split(
         jax.random.fold_in(jax.random.PRNGKey(seed), i), 3))(
@@ -353,7 +460,7 @@ def open_sharded_channels(cfg: ShardedDAGMConfig, x: Pytree, y: Pytree,
             "outer_x": mk("outer_x", x, keys[:, 2])}
 
 
-def sharded_comm_ledger(cfg: ShardedDAGMConfig, x: Pytree, y: Pytree,
+def sharded_comm_ledger(cfg, x: Pytree, y: Pytree,
                         rounds: int = 1):
     """Byte-accurate CommLedger for the sharded DAGM round.
 
@@ -367,6 +474,7 @@ def sharded_comm_ledger(cfg: ShardedDAGMConfig, x: Pytree, y: Pytree,
     total at runtime.  The diagnostic full-precision consensus exchange
     is excluded (it is not part of the algorithm's traffic)."""
     from repro.comm import CommLedger
+    cfg = _as_sharded_cfg(cfg)
     comp = cfg.comm_policy.compressor
     spec = cfg.comm_policy.spec
 

@@ -36,8 +36,8 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import get_config
-from repro.distributed.dagm_sharded import (ShardedDAGMConfig,
-                                            make_sharded_dagm)
+from repro.distributed.dagm_sharded import make_sharded_dagm
+from repro.solve import sharded_spec
 from repro.distributed.sharding import make_rules
 from repro.launch.dryrun import collective_bytes_from_hlo
 from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,
@@ -48,7 +48,7 @@ N_DOMAINS = 8
 
 
 def build_dagm_bilevel(cfg, *, seq_len: int, batch_per_agent: int,
-                       dcfg: ShardedDAGMConfig):
+                       dcfg):
     """Per-agent bilevel objectives for decentralized loss-weight tuning
     (same formulation as examples/train_lm_dagm.py, dry-run sized)."""
     from repro.models import transformer as tf
@@ -105,10 +105,10 @@ def run(arch: str, *, multi_pod: bool = False, seq_len: int = 4096,
     # laid out so consecutive agents are ICI neighbors and exactly two
     # edges cross the pod boundary (DESIGN.md §2)
     agent_axis = ("pod", "data") if multi_pod else "data"
-    dcfg = ShardedDAGMConfig(alpha=0.3, beta=0.1, M=M, U=U,
-                             curvature=8.0, axis=agent_axis,
-                             comm_dtype=comm_dtype, mix_every=mix_every,
-                             unroll_loops=True)
+    dcfg = sharded_spec(alpha=0.3, beta=0.1, M=M, U=U,
+                        curvature=8.0, axis=agent_axis,
+                        comm_dtype=comm_dtype, mix_every=mix_every,
+                        unroll_loops=True)
     g_fn, f_fn = build_dagm_bilevel(cfg, seq_len=seq_len,
                                     batch_per_agent=batch_per_agent,
                                     dcfg=dcfg)

@@ -1,3 +1,4 @@
 from .optimizers import (Optimizer, adamw, sgd, apply_updates,
                          clip_by_global_norm, global_norm,
-                         cosine_schedule, constant_schedule)
+                         cosine_schedule, constant_schedule,
+                         inverse_sqrt_schedule, power_schedule)

@@ -64,6 +64,32 @@ def cosine_schedule(lr: float, warmup: int, total: int,
     return sched
 
 
+def power_schedule(base: float, power: float,
+                   offset: float = 1.0) -> Schedule:
+    """base · ((step + offset)/offset)^power.
+
+    Negative powers give the decaying step-size sequences of the
+    decentralized-bilevel theory (αₖ, βₖ ∝ k^{-p}); positive powers
+    give growing sequences (the penalty coefficient γₖ of the paper's
+    corollaries grows as alpha shrinks).  `offset` shifts the origin so
+    the schedule starts at exactly `base` and avoids the k=0 pole."""
+    if offset <= 0:
+        raise ValueError(f"power_schedule offset must be > 0 "
+                         f"(got {offset})")
+
+    def sched(step):
+        t = (step.astype(jnp.float32) + offset) / offset
+        return jnp.asarray(base, jnp.float32) * t ** power
+    return sched
+
+
+def inverse_sqrt_schedule(base: float, offset: float = 1.0) -> Schedule:
+    """base / √((step + offset)/offset) — the classic O(1/√k) decay
+    (Chen, Huang & Ma 2022 run DAGM-class methods with exactly this
+    family)."""
+    return power_schedule(base, -0.5, offset)
+
+
 # ---------------------------------------------------------------------------
 # SGD (+ momentum)
 # ---------------------------------------------------------------------------

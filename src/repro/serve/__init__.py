@@ -26,7 +26,8 @@ convergence, wall-clock share and exact wire bytes from the bucket
     results = eng.run()
 """
 from .jobs import (JobResult, JobSpec, build_network, build_problem,
-                   compile_signature, job_hp)
+                   compile_signature, job_hp, schedule_rows,
+                   solver_spec)
 from .batching import (WIDTHS, BucketState, bucketize, chunk_rounds_for,
                        pad_width)
 from .engine import HP_MODES, EngineStats, ServeEngine
@@ -35,5 +36,5 @@ __all__ = [
     "BucketState", "EngineStats", "HP_MODES", "JobResult", "JobSpec",
     "ServeEngine", "WIDTHS", "bucketize", "build_network",
     "build_problem", "chunk_rounds_for", "compile_signature", "job_hp",
-    "pad_width",
+    "pad_width", "schedule_rows", "solver_spec",
 ]

@@ -39,8 +39,8 @@ from repro.core.dagm import dagm_init_carry
 from repro.core.problems import BilevelProblem
 from repro.topology import Network
 
-from .jobs import (JobSpec, Signature, compile_signature, config_hp,
-                   job_hp)
+from .jobs import (JobSpec, Signature, compile_signature, job_hp,
+                   schedule_rows, solver_spec)
 
 #: Bucket widths (powers of two, floor 2 — see module docstring).
 WIDTHS = (2, 4, 8, 16, 32, 64)
@@ -100,6 +100,7 @@ class RetiredJob:
     final_gap: float
     sends: dict
     wall_s: float
+    metrics: dict | None = None   # per-round trajectory, when recorded
 
 
 class BucketState:
@@ -113,28 +114,31 @@ class BucketState:
     the solo run's); `retire` reads the slot back out."""
 
     def __init__(self, signature: Signature, width: int,
-                 template: BilevelProblem, net: Network, op, cfg):
+                 template: BilevelProblem, net: Network, op, spec):
         self.signature = signature
         self.width = width
         self.template = template
         self.net = net
         self.op = op
-        self.cfg = cfg                     # static fields authoritative
-        self.has_curvature = cfg.curvature is not None
+        self.spec = spec                   # SolverSpec; static fields
+        #                                    authoritative for the bucket
+        self.has_curvature = spec.curvature is not None
         self.slots: list[JobSpec | None] = [None] * width
         self.active = np.zeros(width, bool)
         self.rounds = np.zeros(width, np.int64)
         self.wall = np.zeros(width, np.float64)
         self.retired: list[RetiredJob] = []
+        # per-slot chunk metric slices (engine appends when recording)
+        self.metric_log: list[list] = [[] for _ in range(width)]
         # template-filled stacked state: padding slots replicate the
         # template job so every slot always computes well-defined math
         self.data = jax.tree.map(
             lambda leaf: jnp.broadcast_to(
                 leaf[None], (width,) + leaf.shape), template.data)
-        # padding slots carry the template config's hp row
-        self.hp = np.tile(np.asarray(config_hp(cfg), np.float32),
-                          (width, 1))
-        carry1 = dagm_init_carry(template, op, cfg, seed=0)
+        # padding slots carry the template spec's schedule rows
+        self.sched = np.tile(schedule_rows(spec)[None], (width, 1, 1))
+        self.curv = np.full((width,), spec.curvature or 0.0, np.float32)
+        carry1 = dagm_init_carry(template, op, spec, seed=0)
         self.carry = jax.tree.map(
             lambda leaf: jnp.broadcast_to(
                 leaf[None], (width,) + leaf.shape), carry1)
@@ -149,11 +153,15 @@ class BucketState:
         self.active[slot] = True
         self.rounds[slot] = 0
         self.wall[slot] = 0.0
-        self.hp[slot] = np.asarray(job_hp(spec), np.float32)
+        self.metric_log[slot] = []
+        self.sched[slot] = job_hp(spec)
+        if self.has_curvature:
+            self.curv[slot] = np.float32(solver_spec(spec).curvature)
         self.data = jax.tree.map(
             lambda stack, leaf: stack.at[slot].set(leaf),
             self.data, prob.data)
-        carry1 = dagm_init_carry(prob, self.op, self.cfg, seed=spec.seed)
+        carry1 = dagm_init_carry(prob, self.op, self.spec,
+                                 seed=spec.seed)
         self.carry = jax.tree.map(
             lambda stack, leaf: stack.at[slot].set(leaf),
             self.carry, carry1)
@@ -163,16 +171,22 @@ class BucketState:
         """Read a finished job back out of `slot` and free it."""
         spec = self.slots[slot]
         (x, y), cs = self.carry
+        metrics = None
+        if self.metric_log[slot]:
+            chunks = self.metric_log[slot]
+            metrics = {k: np.concatenate([c[k] for c in chunks])
+                       for k in chunks[0]}
         rec = RetiredJob(
             spec=spec,
             x=np.asarray(x[slot]), y=np.asarray(y[slot]),
             rounds=int(self.rounds[slot]), converged=bool(converged),
             final_gap=float(final_gap),
             sends={name: int(st.sends[slot]) for name, st in cs.items()},
-            wall_s=float(self.wall[slot]))
+            wall_s=float(self.wall[slot]), metrics=metrics)
         self.retired.append(rec)
         self.slots[slot] = None
         self.active[slot] = False
+        self.metric_log[slot] = []
         return rec
 
     # -- views -------------------------------------------------------------
@@ -183,11 +197,32 @@ class BucketState:
     def active_mask(self):
         return jnp.asarray(self.active)
 
-    def hp_arrays(self) -> tuple:
-        """Per-slot hyper-parameter columns (alpha, beta[, curvature])."""
-        return tuple(jnp.asarray(self.hp[:, i])
-                     for i in range(self.hp.shape[1]))
+    def chunk_starts(self, T: int) -> np.ndarray:
+        """Per-slot schedule offsets for the next T-round chunk: each
+        slot consumes its own rounds [r, r+T) of the (K,) schedule rows
+        (slots mid-flight and freshly-backfilled slots differ).
+        Inactive slots are clamped into range — their carry is frozen
+        behind the mask, so the values they scan are irrelevant."""
+        K = self.spec.K
+        return np.minimum(self.rounds, max(K - T, 0)).astype(np.int64)
 
-    def hp_key(self) -> tuple:
-        """Hashable per-slot hp snapshot (static-hp compile key)."""
-        return tuple(map(tuple, self.hp.tolist()))
+    def hp_chunk(self, T: int) -> dict:
+        """The chunk's hyper-parameter operands: per-slot (T,) α/β/γ
+        schedule slices (+ the (width,) curvature column when the
+        bucket carries one), gathered at `chunk_starts`."""
+        starts = self.chunk_starts(T)
+        sl = np.stack([self.sched[i, s:s + T] for i, s
+                       in enumerate(starts)])          # (width, T, 3)
+        hp = {"alpha": sl[:, :, 0], "beta": sl[:, :, 1],
+              "gamma": sl[:, :, 2]}
+        if self.has_curvature:
+            hp["curvature"] = self.curv
+        return hp
+
+    def hp_key(self, T: int) -> tuple:
+        """Hashable snapshot of the chunk's hp operands (static-hp
+        compile key — constant schedules give the same key for every
+        chunk; genuinely per-round schedules re-key per slice, which is
+        why schedules want hp_mode="traced")."""
+        hp = self.hp_chunk(T)
+        return tuple(sorted((k, v.tobytes()) for k, v in hp.items()))

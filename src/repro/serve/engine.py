@@ -9,26 +9,27 @@ The scheduling loop per bucket signature:
 
 Every chunk call advances *all* slots T outer rounds through one fused
 `lax.scan`; converged jobs retire mid-flight at chunk boundaries and
-queued jobs take their slots, so the accelerator never idles on a
+queued jobs backfill their slots, so the accelerator never idles on a
 straggler-free queue.  Per-job results carry the exact wire bytes from
 the bucket ledger's per-slot send counters, the rounds actually run,
 and the wall-clock share.
 
 Hyper-parameter modes (`hp_mode`)
 ---------------------------------
-* ``"traced"`` (default): α/β/curvature enter the chunk program as
+Hyper-parameters are full (K,) α/β/γ *schedule rows* per slot (see
+`repro.solve.ScheduleSpec`); each chunk scans its per-slot (T,) slice.
+
+* ``"traced"`` (default): the slices enter the chunk program as
   runtime arguments.  ONE compile serves every sweep of the same
-  signature — backfill, new waves, new hyper-parameter grids, no
-  retrace.  The cost: XLA folds literal hyper-parameters differently
-  from traced ones (division-by-constant becomes multiply-by-
-  reciprocal), so trajectories agree with the solo `dagm_run` program
-  only to ~1 ulp/round (bounded, measured in `benchmarks/bench_serve`)
-  — while remaining bit-exact across bucket widths, slots and waves.
-* ``"static"``: the per-slot hp vector is baked into the trace as a
-  constant.  Trajectories are **bit-exact against solo `dagm_run`**
-  (the reproducibility mode the serve tests pin down, matrix_free
-  dihgp); the compile cache keys on the hp snapshot, so changing a
-  slot's hp (e.g. backfilling a different sweep point) re-traces.
+  signature — backfill, new waves, new hyper-parameter grids, decaying
+  schedules, no retrace — and because `repro.solve` feeds the solo
+  program the same traced operands, batched trajectories are
+  **bit-exact with solo runs** (measured in `benchmarks/bench_serve`).
+* ``"static"``: the slices are baked into the trace as constants.
+  Identical trajectories (constants and operands multiply identically);
+  the compile cache keys on the hp snapshot, so changing a slot's
+  schedule (e.g. backfilling a different sweep point) re-traces.
+  Kept for cache-behavior studies and as the historical mode.
 
 Both modes share the width-invariance guarantee (widths ≥ 2) because
 the bucket program treats every slot identically; padding slots are
@@ -44,12 +45,12 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.dagm import dagm_run_chunk
+from repro.core.dagm import RoundHP, dagm_run_chunk
 from repro.topology import make_mixing_op
 
 from .batching import (BucketState, bucketize, chunk_rounds_for,
                        pad_width)
-from .jobs import JobResult, JobSpec, Signature
+from .jobs import JobResult, JobSpec, Signature, solver_spec
 
 HP_MODES = ("traced", "static")
 
@@ -83,11 +84,16 @@ class ServeEngine:
     metrics_fn:   optional per-round metrics callback threaded to
                   `dagm_outer_step_c` (default records nothing beyond
                   the convergence signal).
+    record_metrics: keep each job's per-round metric trajectory and
+                  attach it to `JobResult.metrics` (the serve tier of
+                  `repro.solve.solve` uses this to return the same
+                  trajectory a reference-tier run would).
     """
 
     def __init__(self, chunk_rounds: int = 10, max_width: int = 64,
                  hp_mode: str = "traced", metrics_fn=None,
-                 cache_capacity: int = 64):
+                 cache_capacity: int = 64,
+                 record_metrics: bool = False):
         if hp_mode not in HP_MODES:
             raise ValueError(f"unknown hp_mode {hp_mode!r}; expected "
                              f"one of {HP_MODES}")
@@ -101,6 +107,7 @@ class ServeEngine:
         self.hp_mode = hp_mode
         self.metrics_fn = metrics_fn if metrics_fn is not None \
             else _no_metrics
+        self.record_metrics = bool(record_metrics)
         self.stats = EngineStats()
         self.ledgers: dict[Signature, object] = {}
         self._queue: list[JobSpec] = []
@@ -142,9 +149,13 @@ class ServeEngine:
     # -- chunk program cache ----------------------------------------------
 
     def _chunk_fn(self, bucket: BucketState, T: int):
-        key = (bucket.signature, bucket.width, T, self.hp_mode)
+        # metrics_fn is part of the compiled program (the chunk closes
+        # over it), so swapping it must miss the cache, not serve a
+        # program that still records the old metrics
+        key = (bucket.signature, bucket.width, T, self.hp_mode,
+               self.metrics_fn)
         if self.hp_mode == "static":
-            key += (bucket.hp_key(),)
+            key += (bucket.hp_key(T),)
         fn = self._cache.get(key)
         if fn is not None:
             self.stats.cache_hits += 1
@@ -162,7 +173,7 @@ class ServeEngine:
         # through the `data` argument, so the closure must not pin the
         # creating wave's data arrays for the cache entry's lifetime
         template = bucket.template.with_data(None)
-        op, cfg = bucket.op, bucket.cfg
+        op, spec = bucket.op, bucket.spec
         has_curv = bucket.has_curvature
         metrics_fn = self.metrics_fn
         trace_log = self._trace_log
@@ -170,11 +181,11 @@ class ServeEngine:
 
         def one_job(data_j, hp_j, carry, active):
             prob_j = template.with_data(data_j)
-            curv = hp_j[2] if has_curv else None
-            cfg_j = dataclasses.replace(cfg, alpha=hp_j[0], beta=hp_j[1],
-                                        curvature=curv)
-            c2, m = dagm_run_chunk(prob_j, op, cfg_j, carry, T,
-                                   metrics_fn)
+            curv = hp_j["curvature"] if has_curv else None
+            hp = RoundHP(alpha=hp_j["alpha"], beta=hp_j["beta"],
+                         gamma=hp_j["gamma"])
+            c2, m = dagm_run_chunk(prob_j, op, spec, carry, T,
+                                   metrics_fn, hp=hp, curvature=curv)
             # inert padding/retired slots: freeze the whole carry
             # (state, EF replicas, send counters) behind the mask
             c2 = jax.tree.map(lambda new, old: jnp.where(active, new, old),
@@ -182,10 +193,11 @@ class ServeEngine:
             return c2, m
 
         if self.hp_mode == "static":
-            # hp columns enter as concrete closure constants: jit bakes
-            # them into the program (the bit-exact-vs-solo mode)
-            hp_const = tuple(jnp.asarray(bucket.hp[:, i])
-                             for i in range(bucket.hp.shape[1]))
+            # hp slices enter as concrete closure constants: jit bakes
+            # them into the program (same trajectories as traced mode —
+            # multiplications by constants and operands are identical)
+            hp_const = {k: jnp.asarray(v)
+                        for k, v in bucket.hp_chunk(T).items()}
 
             def chunk(data, carry, active):
                 trace_log["count"] += 1
@@ -216,14 +228,15 @@ class ServeEngine:
                     results: dict) -> None:
         from .jobs import build_network
         spec0, prob0 = items[0]
-        cfg = spec0.config
+        sspec = solver_spec(spec0)
         net = build_network(spec0)
-        op = make_mixing_op(net, backend=cfg.mixing,
-                            interpret=cfg.mixing_interpret,
-                            dtype=cfg.mixing_dtype, comm=cfg.comm)
+        op = make_mixing_op(net, backend=sspec.mixing.backend,
+                            interpret=sspec.mixing.interpret,
+                            dtype=sspec.mixing.dtype,
+                            comm=sspec.comm.spec)
         width = pad_width(len(items), self.max_width)
-        T = chunk_rounds_for(cfg.K, self.chunk_rounds)
-        bucket = BucketState(sig, width, prob0, net, op, cfg)
+        T = chunk_rounds_for(sspec.K, self.chunk_rounds)
+        bucket = BucketState(sig, width, prob0, net, op, sspec)
         pending = deque(items)
         for slot in range(width):
             if pending:
@@ -236,8 +249,10 @@ class ServeEngine:
                 carry, metrics = fn(bucket.data, bucket.carry,
                                     bucket.active_mask())
             else:
-                carry, metrics = fn(bucket.data, bucket.hp_arrays(),
-                                    bucket.carry, bucket.active_mask())
+                hp = {k: jnp.asarray(v)
+                      for k, v in bucket.hp_chunk(T).items()}
+                carry, metrics = fn(bucket.data, hp, bucket.carry,
+                                    bucket.active_mask())
             jax.block_until_ready(carry)
             dt = time.perf_counter() - t0
             self.stats.chunks += 1
@@ -246,12 +261,17 @@ class ServeEngine:
             active = np.nonzero(bucket.active)[0]
             bucket.rounds[active] += T
             bucket.wall[active] += dt / max(len(active), 1)
+            if self.record_metrics:
+                host = jax.tree.map(np.asarray, metrics)
+                for slot in active:
+                    bucket.metric_log[slot].append(
+                        {k: v[slot] for k, v in host.items()})
             gaps = np.asarray(metrics["hypergrad_est_norm_sq"])[:, -1]
             for slot in active:
                 spec = bucket.slots[slot]
                 converged = spec.tol is not None \
                     and float(gaps[slot]) <= spec.tol
-                if converged or bucket.rounds[slot] >= cfg.K:
+                if converged or bucket.rounds[slot] >= sspec.K:
                     rec = bucket.retire(slot, float(gaps[slot]),
                                         converged)
                     results[rec.spec.job_id] = self._make_result(
@@ -276,7 +296,7 @@ class ServeEngine:
             converged=rec.converged, final_gap=rec.final_gap,
             wire_bytes=int(wire_bytes), wire_floats=int(wire_floats),
             sends=dict(rec.sends), wall_clock_s=rec.wall_s,
-            signature=bucket.signature)
+            signature=bucket.signature, metrics=rec.metrics)
 
     def _finalize_ledger(self, bucket: BucketState) -> None:
         """Charge the bucket ledger with per-job send arrays (ordered

@@ -2,10 +2,11 @@
 
 A `JobSpec` is one independent DAGM instance — a problem-zoo family
 (`core.problems.PROBLEM_FAMILIES`) instantiated with its own data/seed,
-plus the `DAGMConfig` knobs for the run.  The engine never executes a
-JobSpec directly: specs are grouped by `compile_signature` (everything
-that shapes the trace), padded into fixed-width buckets, and run as one
-vmapped `dagm_run_chunk` per bucket (`repro.serve.engine`).
+plus a `repro.solve.SolverSpec` for the run (legacy `DAGMConfig`s are
+lowered transparently).  The engine never executes a JobSpec directly:
+specs are grouped by `compile_signature` (everything that shapes the
+trace), padded into fixed-width buckets, and run as one vmapped
+`dagm_run_chunk` per bucket (`repro.serve.engine`).
 
 The signature split:
 
@@ -15,12 +16,12 @@ The signature split:
   bound is supplied.  Two jobs with equal signatures share one compiled
   program.
 * **per-job** (vary freely inside a bucket): the data *values*, the
-  init seed, and the hyper-parameters α / β / curvature — the
-  (topology, penalty, step-size) sweep axes of the paper's §6
-  experiments, which is exactly what a hyperopt-as-a-service queue
-  varies.  Whether the hyper-parameters enter the trace as runtime
-  arguments or baked constants is the engine's `hp_mode` (see
-  engine.ServeEngine).
+  init seed, the curvature bound, and the full α/β/γ **schedules** —
+  constant or per-round (decaying step sizes, growing penalties).
+  Schedule values enter the chunk program as traced operands in the
+  engine's default ``hp_mode="traced"``, so any sweep of them shares
+  ONE compile and — since `repro.solve` feeds the solo program the
+  same operands — batched trajectories are bit-exact with solo runs.
 
 `JobResult` reports the per-job outcome *including the exact wire
 bytes* the job's gossip cost, attributed from the bucket ledger's
@@ -31,8 +32,10 @@ from __future__ import annotations
 import dataclasses
 from typing import Any
 
-from repro.core.dagm import DAGMConfig, dagm_validate
+import numpy as np
+
 from repro.core.problems import BilevelProblem, problem_family
+from repro.solve.spec import SolverSpec, as_solver_spec
 from repro.topology import Network, make_network
 
 Signature = tuple
@@ -42,25 +45,29 @@ Signature = tuple
 class JobSpec:
     """One bilevel solve request.
 
-    family:   `core.problems.PROBLEM_FAMILIES` key.
+    family:   `core.problems.PROBLEM_FAMILIES` key, or a callable
+              constructor (called with the `problem` kwargs) for
+              problems outside the zoo — `repro.solve`'s serve tier
+              wraps ad-hoc problem instances this way.
     problem:  constructor kwargs for the family (n, d, m_per, seed, ...).
               Everything that changes a data *shape* changes the
               compile signature; the data values ride per-job.
-    config:   DAGMConfig for the run.  alpha / beta / curvature are
-              per-job; the remaining fields are bucket-static.
-    graph:    topology kind for `make_network` (+ graph_kwargs), shared
-              across a bucket — a job sweeping topologies lands in one
-              bucket per topology.
+    config:   `SolverSpec` (or legacy `DAGMConfig`) for the run.  The
+              schedules and curvature are per-job; the remaining
+              fields are bucket-static.
+    graph:    topology kind for `make_network` (+ graph_kwargs), or a
+              prebuilt `Network`; shared across a bucket — a job
+              sweeping topologies lands in one bucket per topology.
     seed:     init seed (y0 draw + comm channel keys), per-job.
     tol:      optional convergence threshold on the Eq. (17b) estimate
               ‖∇̂F‖²; a job whose last chunked round reaches it retires
               early and its slot is backfilled from the queue.
     job_id:   caller's handle (auto-assigned when None).
     """
-    family: str
+    family: Any
     problem: dict
-    config: DAGMConfig
-    graph: str = "ring"
+    config: Any
+    graph: Any = "ring"
     graph_kwargs: dict = dataclasses.field(default_factory=dict)
     seed: int = 0
     tol: float | None = None
@@ -81,16 +88,31 @@ class JobResult:
     sends: dict               # per-channel send counts
     wall_clock_s: float       # engine wall time attributed to this job
     signature: Signature      # bucket the job ran in
+    metrics: dict | None = None   # per-round trajectory (rounds, ...)
+    #                               when the engine records metrics
+
+
+def solver_spec(spec: JobSpec) -> SolverSpec:
+    """The job's normalized SolverSpec (tier pinned to "reference":
+    the chunk machinery is tier-agnostic and the job already *is* the
+    serve tier)."""
+    s = as_solver_spec(spec.config)
+    return dataclasses.replace(s, tier="reference") \
+        if s.tier != "reference" else s
 
 
 def build_problem(spec: JobSpec) -> BilevelProblem:
-    """Instantiate the spec's problem-zoo family."""
-    return problem_family(spec.family)(**spec.problem)
+    """Instantiate the spec's problem-zoo family (or ad-hoc callable)."""
+    maker = spec.family if callable(spec.family) \
+        else problem_family(spec.family)
+    return maker(**spec.problem)
 
 
 def build_network(spec: JobSpec) -> Network:
     """Topology shared by the spec's bucket (n defaults to the
-    problem's agent count)."""
+    problem's agent count); prebuilt Networks pass through."""
+    if isinstance(spec.graph, Network):
+        return spec.graph
     kw = dict(spec.graph_kwargs)
     n = int(kw.pop("n", _graph_n(spec)))
     return make_network(spec.graph, n, **kw)
@@ -105,22 +127,17 @@ def _graph_n(spec: JobSpec) -> int:
     return int(n)
 
 
-def config_hp(cfg: DAGMConfig) -> tuple:
-    """(alpha, beta[, curvature]) in the order the engine's chunk
-    runner consumes them.  curvature is only present when the config
-    supplies a bound — a bucket-static choice (it is part of the
-    compile signature), so every hp row in a bucket has the same
-    length.  Single source of truth for job rows and the padding
-    slots' template row alike."""
-    hp = (float(cfg.alpha), float(cfg.beta))
-    if cfg.curvature is not None:
-        hp += (float(cfg.curvature),)
-    return hp
+def schedule_rows(cfg) -> np.ndarray:
+    """(K, 3) float32 materialized (α, β, γ) schedule columns in the
+    order the engine's chunk runner consumes them.  Single source of
+    truth for job rows and the padding slots' template rows alike."""
+    spec = as_solver_spec(cfg)
+    return spec.schedule.materialize(spec.K).rows()
 
 
-def job_hp(spec: JobSpec) -> tuple:
-    """The per-job hyper-parameter row (see `config_hp`)."""
-    return config_hp(spec.config)
+def job_hp(spec: JobSpec) -> np.ndarray:
+    """The per-job hyper-parameter schedule rows (see `schedule_rows`)."""
+    return schedule_rows(spec.config)
 
 
 def compile_signature(spec: JobSpec, prob: BilevelProblem) -> Signature:
@@ -128,15 +145,28 @@ def compile_signature(spec: JobSpec, prob: BilevelProblem) -> Signature:
 
     Jobs with equal signatures run under ONE trace: same problem family
     at the same data shapes, same topology, same mixing/comm execution
-    path, same loop bounds.  Per-job data values, seeds and α/β/
-    curvature deliberately stay out (they are the sweep axes)."""
-    dagm_validate(spec.config)
-    cfg = spec.config
+    path, same loop bounds.  Per-job data values, seeds, curvature
+    bounds and schedule *values* deliberately stay out (they are the
+    sweep axes)."""
+    from repro.core.dagm import dagm_validate
+    s = solver_spec(spec)
+    dagm_validate(s)
     import jax
     leaf_shapes = tuple(sorted(
         (jax.tree_util.keystr(path), tuple(leaf.shape))
         for path, leaf in jax.tree_util.tree_leaves_with_path(prob.data)))
-    graph = (spec.graph,) + tuple(sorted(spec.graph_kwargs.items()))
+    if isinstance(spec.graph, Network):
+        # content-addressed: two prebuilt Networks with equal (name, n)
+        # but different W must NOT share a bucket — the bucket runs on
+        # the first job's graph, which would silently solve the others
+        # on the wrong topology
+        import hashlib
+        digest = hashlib.sha1(
+            np.ascontiguousarray(spec.graph.W).tobytes()).hexdigest()
+        graph = ("net", spec.graph.name, spec.graph.n, digest)
+    else:
+        graph = (spec.graph,) + tuple(sorted(spec.graph_kwargs.items()))
     return (spec.family, prob.n, prob.d1, prob.d2, leaf_shapes, graph,
-            cfg.mixing, cfg.mixing_dtype, cfg.mixing_interpret, cfg.comm,
-            cfg.dihgp, cfg.K, cfg.M, cfg.U, cfg.curvature is not None)
+            s.mixing.backend, s.mixing.dtype, s.mixing.interpret,
+            s.comm.spec, s.dihgp, s.K, s.M, s.U,
+            s.curvature is not None)

@@ -1,0 +1,33 @@
+"""repro.solve — one solver front-end across every method and tier.
+
+The paper's penalty-based DAGM, the comparison baselines, the sharded
+shard_map program and the batched serve engine all run through
+
+    solve(problem, network, SolverSpec(method=..., tier=..., ...))
+
+with layered frozen specs: `ScheduleSpec` (runtime αₖ/βₖ/γₖ
+sequences — decaying step sizes, growing penalties), `MixingSpec`
+(topology execution backend), `CommSpec` (compressed-gossip wire) and
+`ShardedSpec` (mesh wiring).  Hyper-parameters are traced per-round
+operands everywhere, so a compiled chunk/bucket program serves any
+sweep (the serve engine's cache retraces nothing across waves) and
+the serve tier's batched runs are bit-exact with solo runs.
+
+Legacy surfaces (`DAGMConfig`/`dagm_run`, `ShardedDAGMConfig`, the
+baselines' ``alpha=/beta=`` kwargs) survive as deprecation shims that
+lower onto `SolverSpec`; constant schedules reproduce their historical
+trajectories bit-for-bit.
+"""
+from ._compat import reset_deprecation_state, silently, warn_once
+from .api import SolveResult, solve
+from .spec import (METHODS, TIERS, CommSpec, MixingSpec, RoundSchedules,
+                   ScheduleSpec, ShardedSpec, SolverSpec, as_solver_spec,
+                   dagm_spec, mixing_kwargs, sharded_spec, validate_spec)
+
+__all__ = [
+    "CommSpec", "METHODS", "MixingSpec", "RoundSchedules",
+    "ScheduleSpec", "ShardedSpec", "SolveResult", "SolverSpec", "TIERS",
+    "as_solver_spec", "dagm_spec", "mixing_kwargs",
+    "reset_deprecation_state", "sharded_spec", "silently", "solve",
+    "validate_spec", "warn_once",
+]

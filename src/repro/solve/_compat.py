@@ -1,0 +1,47 @@
+"""Deprecation machinery for the legacy solver surfaces.
+
+The `repro.solve` redesign keeps `DAGMConfig`, `ShardedDAGMConfig` and
+the baseline ``alpha=/beta=`` kwargs alive as thin shims that lower
+onto `SolverSpec`.  Each shim announces itself with a
+`DeprecationWarning` **exactly once per process** (a module-level
+registry, not the `warnings` module's per-location dedup, so the
+guarantee is deterministic under pytest's filter resets), and internal
+code constructs the legacy dataclasses through `silently()` so no
+library call site ever triggers a warning — regression-tested under
+``-W error::DeprecationWarning``.
+"""
+from __future__ import annotations
+
+import contextlib
+import warnings
+
+_warned: set[str] = set()
+_silent_depth = 0
+
+
+def warn_once(key: str, message: str, stacklevel: int = 3) -> None:
+    """Emit `message` as a DeprecationWarning the first time `key` is
+    seen in this process; later calls are no-ops.  Suppressed entirely
+    inside a `silently()` block (internal lowering)."""
+    if _silent_depth or key in _warned:
+        return
+    _warned.add(key)
+    warnings.warn(message, DeprecationWarning, stacklevel=stacklevel)
+
+
+@contextlib.contextmanager
+def silently():
+    """Internal-use scope: legacy constructors inside do not warn (the
+    shims lower through the very classes they deprecate)."""
+    global _silent_depth
+    _silent_depth += 1
+    try:
+        yield
+    finally:
+        _silent_depth -= 1
+
+
+def reset_deprecation_state() -> None:
+    """Forget which warnings fired (tests asserting the exactly-once
+    contract call this to get a clean slate)."""
+    _warned.clear()

@@ -386,6 +386,13 @@ class MixingOp:
 
         d_scalar: per-agent D̃ diagonal, broadcastable against h as
         (n,) + (1,)*… (see dihgp.dihgp_matrix_free)."""
+        if not isinstance(beta, (int, float, np.floating)):
+            # traced β (repro.solve runtime schedules): the Pallas
+            # kernel bakes beta as a compile-time constant, so fold the
+            # traced scalar into its operand instead — β·hvp_h with
+            # β=1.0 in-kernel multiplies by exactly 1.0, value-exact
+            hvp_h = beta * hvp_h
+            beta = 1.0
         flat = h.reshape(h.shape[0], -1)
         path = self._resolve(self.backend, flat)
         if path == "circulant_pallas" and self.storage_dtype is None:

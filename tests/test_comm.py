@@ -75,14 +75,22 @@ def test_ledger_counts_from_run_exactly():
 
 
 def test_comm_vectors_per_round_deprecated_and_dihgp_aware():
+    """The shim warns exactly once per process (deterministic registry,
+    not the warnings module's per-location dedup) and keeps honouring
+    the dihgp backend."""
+    import warnings
+    from repro.solve import reset_deprecation_state
+    reset_deprecation_state()
     cfg = DAGMConfig(K=10, M=7, U=3)
+    # dihgp="exact" never gossips h — the old hand-kept dict charged U
+    exact = DAGMConfig(K=10, M=7, U=3, dihgp="exact")
     with pytest.deprecated_call():
         assert cfg.comm_vectors_per_round() == \
             {"inner_d2": 7, "dihgp_d2": 3, "outer_d1": 1}
-    # dihgp="exact" never gossips h — the old hand-kept dict charged U
-    with pytest.deprecated_call():
-        v = DAGMConfig(K=10, M=7, U=3, dihgp="exact") \
-            .comm_vectors_per_round()
+    # second call: the once-per-process contract — no further warning
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        v = exact.comm_vectors_per_round()
     assert v["dihgp_d2"] == 0
 
 
