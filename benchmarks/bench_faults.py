@@ -1,0 +1,218 @@
+"""Robustness benchmark: convergence vs fault rate (the repro.faults
+acceptance harness).
+
+The paper's Assumption A3 fixes one doubly-stochastic W for all K
+rounds; `repro.faults` degrades it per round (link drops, stragglers,
+churn) while every realized W_k stays symmetric and doubly stochastic.
+This benchmark records what that degradation costs:
+
+  * gap / gap_vs_clean — final ‖∇F(x̄)‖² under 10/30/50% iid link
+    drop, a 1-straggler schedule and a churn schedule, against the
+    fault-free run of the SAME compiled program (the clean row scans
+    an all-ones mask, which is bitwise a no-op — recorded as
+    `clean_bitexact_vs_fault_free`),
+  * rounds_to_target / bytes_to_target — rounds (and wire bytes) until
+    the faulted run first reaches the clean run's half-budget gap;
+    bytes are the nominal ledger rate scaled by the trace's realized-
+    link fraction up to that round (a dropped link moves no bytes),
+  * alive_fraction — realized / nominal directed sends over the run,
+  * retraces — MUST be 0 on every row: all ring-graph fault schedules
+    (clean included) replay through ONE jitted program; the masks are
+    traced per-round operands exactly like the α/β/γ schedules.  The
+    ER-graph row owns its (single) compile and pins the same contract.
+
+Budgets: "smoke" (scripts/ci.sh tier 2: clean + one drop rate through
+one compile, no JSON rewrite), "small" (checked-in results: the full
+ring sweep + ER row at K=40), "full" (same at K=80, deeper churn).
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.dagm import RoundHP, dagm_init_carry, dagm_run_chunk
+from repro.core.mixing import make_mixing_op
+from repro.core.problems import quadratic_bilevel
+from repro.faults import FaultSpec, lower_faults
+from repro.solve import dagm_spec, solve
+from repro.solve.spec import mixing_kwargs
+from repro.topology import make_network
+
+from .common import Row
+
+SMOKE_AWARE = True   # genuine cheap smoke tier (benchmarks.run contract)
+RESULTS = os.path.join(os.path.dirname(__file__), "results",
+                       "bench_faults.json")
+
+GAP = "true_hypergrad_norm_sq"
+
+
+def _spec(K: int):
+    # sparse_gather: the padded neighbor-table backend the masked path
+    # reuses — the all-ones-mask row is bitwise the fault-free program
+    return dagm_spec(alpha=0.05, beta=0.1, K=K, M=5, U=3,
+                     dihgp="matrix_free", curvature=6.0,
+                     mixing="sparse_gather")
+
+
+class _Runner:
+    """One compiled masked-chunk program per (problem, graph); every
+    fault schedule it serves is a traced operand."""
+
+    def __init__(self, prob, net, spec):
+        self.prob, self.net, self.spec = prob, net, spec
+        self.W = make_mixing_op(net, **mixing_kwargs(spec))
+        self.carry0 = dagm_init_carry(prob, self.W, spec, seed=0)
+        sched = spec.schedule.materialize(spec.K)
+        self.hp = RoundHP(*(jnp.asarray(a, jnp.float32)
+                            for a in (sched.alpha, sched.beta,
+                                      sched.gamma)))
+        self.traces = 0
+        prob_, W_, spec_ = prob, self.W, spec
+
+        @jax.jit
+        def run(carry, hp, masks):
+            self.traces += 1
+            return dagm_run_chunk(prob_, W_, spec_, carry, spec_.K,
+                                  hp=hp, masks=masks)
+        self._run = run
+
+    def ones_masks(self):
+        K = self.spec.K
+        return jnp.ones((K,) + self.W.sparse.neighbors.shape,
+                        jnp.float32)
+
+    def __call__(self, masks):
+        ((x, y), _), metrics = self._run(self.carry0, self.hp, masks)
+        jax.block_until_ready(x)
+        return np.asarray(x), np.asarray(metrics[GAP])
+
+
+def _bytes_per_round(prob, net, spec) -> float:
+    """Nominal wire bytes per outer round, measured from a fault-free
+    run's ledger (the faulted rows scale it by alive_fraction)."""
+    res = solve(prob, net, spec)
+    return float(res.ledger.bytes_per_round(spec.K))
+
+
+def _row(tag: str, runner: _Runner, fault: FaultSpec | None,
+         clean_gaps: np.ndarray | None, nominal_bpr: float):
+    spec, net = runner.spec, runner.net
+    if fault is None:
+        trace, masks, alive = None, runner.ones_masks(), 1.0
+    else:
+        trace = lower_faults(fault, net, spec.K)
+        masks = jnp.asarray(trace.table_masks(runner.W.sparse),
+                            jnp.float32)
+        alive = trace.alive_fraction()
+
+    t0 = time.perf_counter()
+    x, gaps = runner(masks)
+    wall = time.perf_counter() - t0
+
+    derived = {
+        "K": spec.K,
+        "gap": float(gaps[-1]),
+        "alive_fraction": round(float(alive), 4),
+        "traces": runner.traces,
+        "retraces": runner.traces - 1,   # acceptance: 0 on every row
+    }
+    if clean_gaps is not None:
+        target = float(clean_gaps[spec.K // 2])
+        derived["gap_vs_clean"] = round(float(gaps[-1])
+                                        / max(float(clean_gaps[-1]),
+                                              1e-30), 3)
+        hit = np.nonzero(gaps <= target)[0]
+        if hit.size:
+            r = int(hit[0]) + 1
+            frac = (trace.alive_fraction(r) if trace is not None
+                    else 1.0)
+            derived["rounds_to_target"] = r
+            derived["bytes_to_target"] = int(round(
+                r * nominal_bpr * frac))
+        else:
+            derived["rounds_to_target"] = -1   # never reached target
+            derived["bytes_to_target"] = -1
+    return Row(f"faults/{tag}", wall * 1e6, derived), x, gaps
+
+
+def _ring_suite(K: int, budget: str) -> list[Row]:
+    n = 8
+    prob = quadratic_bilevel(n, 4, 16, seed=0)
+    net = make_network("ring", n)
+    spec = _spec(K)
+    runner = _Runner(prob, net, spec)
+    nominal_bpr = _bytes_per_round(prob, net, spec)
+
+    rows = []
+    clean_row, clean_x, clean_gaps = _row("ring_clean", runner, None,
+                                          None, nominal_bpr)
+    # the all-ones-mask program must be bitwise the fault-free one
+    ref = solve(prob, net, spec)
+    clean_row.derived["clean_bitexact_vs_fault_free"] = bool(
+        np.array_equal(clean_x, np.asarray(ref.x)))
+    clean_row.derived["gap_vs_clean"] = 1.0
+    rows.append(clean_row)
+
+    drops = [0.3] if budget == "smoke" else [0.1, 0.3, 0.5]
+    for p in drops:
+        row, _, _ = _row(f"ring_drop{int(p * 100)}", runner,
+                         FaultSpec(drop_prob=p, seed=7), clean_gaps,
+                         nominal_bpr)
+        rows.append(row)
+
+    if budget != "smoke":
+        row, _, _ = _row("ring_straggler1", runner,
+                         FaultSpec(stragglers=(3,), straggle_prob=0.5,
+                                   seed=7), clean_gaps, nominal_bpr)
+        rows.append(row)
+        churn = ((2, K // 4, K // 2), (5, K // 2, 3 * K // 4))
+        row, _, _ = _row("ring_churn2", runner, FaultSpec(churn=churn),
+                         clean_gaps, nominal_bpr)
+        rows.append(row)
+    return rows
+
+
+def _er_row(K: int) -> Row:
+    """The ER-graph row: its own (single) compile, same zero-retrace
+    contract — clean and drop30 masks share the one program."""
+    n = 8
+    prob = quadratic_bilevel(n, 4, 16, seed=1)
+    net = make_network("erdos_renyi", n, r=0.5, seed=0)
+    spec = _spec(K)
+    runner = _Runner(prob, net, spec)
+    nominal_bpr = _bytes_per_round(prob, net, spec)
+    _, _, clean_gaps = _row("er_warm", runner, None, None, nominal_bpr)
+    row, _, _ = _row("er_drop30", runner,
+                     FaultSpec(drop_prob=0.3, seed=11), clean_gaps,
+                     nominal_bpr)
+    row.derived["graph"] = "erdos_renyi(r=0.5)"
+    return row
+
+
+def run(budget: str = "small") -> list[Row]:
+    if budget == "smoke":
+        # scripts/ci.sh tier 2: clean + drop30 through one compile
+        return _ring_suite(12, budget)
+
+    K = 80 if budget == "full" else 40
+    rows = _ring_suite(K, budget)
+    rows.append(_er_row(K))
+
+    os.makedirs(os.path.dirname(RESULTS), exist_ok=True)
+    with open(RESULTS, "w") as f:
+        json.dump([{"name": r.name,
+                    "us_per_call": round(r.us_per_call, 1),
+                    "derived": r.derived} for r in rows], f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run(sys.argv[1] if len(sys.argv) > 1 else "small"):
+        print(row.csv())

@@ -11,9 +11,9 @@ import argparse
 import sys
 import time
 
-from . import (bench_comm, bench_mixing, bench_serve, fig2_synthetic,
-               fig3_real, fig4_hyperrep, fig5_fairloss, roofline,
-               table1_convergence, table2_comm)
+from . import (bench_comm, bench_faults, bench_mixing, bench_serve,
+               fig2_synthetic, fig3_real, fig4_hyperrep, fig5_fairloss,
+               roofline, table1_convergence, table2_comm)
 
 MODULES = {
     "table1": table1_convergence,
@@ -26,6 +26,7 @@ MODULES = {
     "mixing": bench_mixing,
     "comm": bench_comm,
     "serve": bench_serve,
+    "faults": bench_faults,
 }
 
 

@@ -51,6 +51,18 @@ echo "=== tier 2: bench smoke (serve engine) ==="
 # warm-cache check, per-job ledger additivity); no JSON rewrite
 python -m benchmarks.run --only serve --budget smoke
 
+echo "=== tier 2: bench smoke (fault injection) ==="
+# clean + 30%-link-drop DAGM through ONE compiled masked program
+# (retraces must be 0; the all-ones-mask row is bit-exact with the
+# fault-free run); no JSON rewrite
+python -m benchmarks.run --only faults --budget smoke
+
+echo "=== tier 2: restart smoke (serve crash safety) ==="
+# kill-and-resume: a subprocess engine dies mid-run via the crash hook,
+# a fresh engine restores from the chunk-boundary checkpoints and must
+# finish bit-exactly equal to an uninterrupted baseline
+python scripts/restart_smoke.py
+
 echo "=== tier 2: example smoke (quickstart on repro.solve) ==="
 # end-to-end front-end check: solve() + ledger + a decaying-alpha
 # ScheduleSpec run, asserting the Thm-7 hyper-gradient descent

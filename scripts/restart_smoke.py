@@ -1,0 +1,111 @@
+"""Kill-and-resume restart smoke for the serve engine's crash safety.
+
+Protocol (scripts/ci.sh tier 2):
+
+1. spawn THIS script as a subprocess in --phase crash mode: an engine
+   with a checkpoint directory and the deterministic crash hook
+   (`crash_after_chunks=2`) runs a 4-job bucket, dies mid-run with
+   `SimulatedCrash`, and exits 86 — leaving chunk-boundary checkpoints
+   (carry/ledger/channel npz + host-state sidecar) on disk,
+2. a FRESH engine pointed at the same directory restores the run
+   (stats.restarts == 1), finishes the surviving chunks, and must
+   produce final iterates bit-exactly equal to an uninterrupted
+   baseline run — byte-for-byte x, y, rounds and per-channel sends,
+3. success clears the checkpoint directory.
+
+The subprocess boundary is the point: the resumed engine shares no
+process state (no compile cache, no Python objects) with the crashed
+one — everything it knows came off disk.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+CRASH_EXIT = 86
+JOBS = 4
+K = 12
+
+
+def _specs():
+    from repro.serve import JobSpec
+    from repro.solve import dagm_spec
+    cfg = dagm_spec(alpha=0.05, beta=0.1, K=K, M=3, U=2,
+                    dihgp="matrix_free", curvature=6.0)
+    return [JobSpec("quadratic", {"n": 8, "d1": 4, "d2": 8, "seed": s},
+                    cfg, seed=s, job_id=f"job{s}") for s in range(JOBS)]
+
+
+def _engine(ckpt_dir, **kw):
+    from repro.serve import ServeEngine
+    return ServeEngine(chunk_rounds=4, max_width=4, hp_mode="traced",
+                       checkpoint_dir=ckpt_dir, **kw)
+
+
+def crash_phase(ckpt_dir: str) -> int:
+    """Run until the hook kills chunk 2, then exit CRASH_EXIT."""
+    from repro.serve import SimulatedCrash
+    eng = _engine(ckpt_dir, crash_after_chunks=2)
+    eng.submit(_specs())
+    try:
+        eng.run()
+    except SimulatedCrash:
+        return CRASH_EXIT
+    print("ERROR: crash hook never fired", file=sys.stderr)
+    return 1
+
+
+def main() -> int:
+    ckpt_dir = tempfile.mkdtemp(prefix="restart_smoke_")
+
+    # the crashing run lives in its own interpreter
+    proc = subprocess.run(
+        [sys.executable, os.path.abspath(__file__), "--phase", "crash",
+         ckpt_dir],
+        env={**os.environ,
+             "PYTHONPATH": os.pathsep.join(
+                 [os.path.join(os.path.dirname(__file__), "..", "src"),
+                  os.environ.get("PYTHONPATH", "")])})
+    assert proc.returncode == CRASH_EXIT, \
+        f"crash phase exited {proc.returncode}, wanted {CRASH_EXIT}"
+    left = sorted(os.listdir(ckpt_dir))
+    assert left, "crashed engine left no checkpoints behind"
+    print(f"crash phase left {len(left)} checkpoint files")
+
+    # resume in a fresh engine: everything it knows came off disk
+    eng = _engine(ckpt_dir)
+    results = eng.run()
+    assert eng.stats.restarts == 1, \
+        f"expected exactly one restart, got {eng.stats.restarts}"
+    assert len(results) == JOBS, f"resumed run returned {len(results)}"
+    assert not os.listdir(ckpt_dir), \
+        "completed run must clear its checkpoints"
+
+    # uninterrupted baseline, clean engine, no checkpoint dir
+    from repro.serve import ServeEngine
+    base = ServeEngine(chunk_rounds=4, max_width=4, hp_mode="traced")
+    base.submit(_specs())
+    baseline = {r.job_id: r for r in base.run()}
+
+    import numpy as np
+    for r in results:
+        b = baseline[r.job_id]
+        assert np.array_equal(r.x, b.x) and np.array_equal(r.y, b.y), \
+            f"{r.job_id}: resumed iterates drifted from baseline"
+        assert r.rounds == b.rounds and r.sends == b.sends, \
+            f"{r.job_id}: rounds/sends mismatch after resume"
+    print(f"restart smoke OK: {JOBS} jobs bit-exact after "
+          f"kill -> restore -> resume (restarts=1)")
+    os.rmdir(ckpt_dir)
+    return 0
+
+
+if __name__ == "__main__":
+    if len(sys.argv) == 4 and sys.argv[1] == "--phase" \
+            and sys.argv[2] == "crash":
+        sys.exit(crash_phase(sys.argv[3]))
+    sys.exit(main())

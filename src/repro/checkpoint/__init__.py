@@ -1,1 +1,9 @@
-from .checkpoint import save_checkpoint, restore_checkpoint, latest_step
+from .checkpoint import (checkpoint_steps, latest_step, load_arrays,
+                         prune_checkpoints, restore_checkpoint,
+                         restore_into, save_checkpoint, sweep_stale)
+
+__all__ = [
+    "checkpoint_steps", "latest_step", "load_arrays",
+    "prune_checkpoints", "restore_checkpoint", "restore_into",
+    "save_checkpoint", "sweep_stale",
+]

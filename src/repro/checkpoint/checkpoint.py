@@ -1,8 +1,11 @@
 """Minimal pytree checkpointing: params/opt-state ⇄ compressed .npz.
 
 Layout: <dir>/step_<N>.npz with flattened key paths; restore rebuilds
-into a provided template pytree (shape/dtype checked).  Good enough for
-single-host experiments and CI; a production deployment would swap in a
+into a provided template pytree (shape/dtype checked).  Writes are
+atomic (tmp + rename), `sweep_stale` clears the `*.tmp.npz` debris a
+crash mid-save leaves behind, and `keep_last` bounds the directory so
+long serve runs don't fill the disk.  Good enough for single-host
+experiments and CI; a production deployment would swap in a
 tensorstore/OCDBT backend behind the same interface.
 """
 from __future__ import annotations
@@ -24,38 +27,95 @@ def _flatten(tree: Any) -> dict[str, np.ndarray]:
     return flat
 
 
-def save_checkpoint(directory: str, step: int, tree: Any) -> str:
+def _step_path(directory: str, step: int) -> str:
+    return os.path.join(directory, f"step_{step:08d}.npz")
+
+
+def save_checkpoint(directory: str, step: int, tree: Any, *,
+                    keep_last: int | None = None) -> str:
+    """Atomically write `tree` as step `step`; a crash mid-save leaves
+    only a `*.tmp.npz` (swept here on the next save, and invisible to
+    `latest_step`).  `keep_last=N` prunes all but the newest N steps
+    after a successful write."""
     os.makedirs(directory, exist_ok=True)
-    path = os.path.join(directory, f"step_{step:08d}.npz")
+    sweep_stale(directory)
+    path = _step_path(directory, step)
     tmp = path + ".tmp.npz"          # savez keeps names ending in .npz
     np.savez_compressed(tmp, **_flatten(tree))
     os.replace(tmp, path)
+    if keep_last is not None:
+        prune_checkpoints(directory, keep_last)
     return path
 
 
-def latest_step(directory: str) -> int | None:
+def sweep_stale(directory: str) -> list[str]:
+    """Remove `*.tmp.npz` files a crashed `save_checkpoint` left next
+    to the real checkpoints; returns the removed paths."""
     if not os.path.isdir(directory):
-        return None
-    steps = [int(m.group(1)) for f in os.listdir(directory)
-             if (m := re.fullmatch(r"step_(\d+)\.npz", f))]
-    return max(steps) if steps else None
+        return []
+    removed = []
+    for f in sorted(os.listdir(directory)):
+        if f.endswith(".tmp.npz"):
+            p = os.path.join(directory, f)
+            os.remove(p)
+            removed.append(p)
+    return removed
+
+
+def checkpoint_steps(directory: str) -> list[int]:
+    """Ascending step numbers of the completed (non-tmp) checkpoints."""
+    if not os.path.isdir(directory):
+        return []
+    return sorted(int(m.group(1)) for f in os.listdir(directory)
+                  if (m := re.fullmatch(r"step_(\d+)\.npz", f)))
+
+
+def latest_step(directory: str) -> int | None:
+    steps = checkpoint_steps(directory)
+    return steps[-1] if steps else None
+
+
+def prune_checkpoints(directory: str, keep_last: int) -> list[int]:
+    """Delete all but the newest `keep_last` checkpoint steps; returns
+    the pruned step numbers."""
+    if keep_last < 1:
+        raise ValueError(f"keep_last must be >= 1 (got {keep_last}); "
+                         f"pruning every checkpoint defeats the point")
+    steps = checkpoint_steps(directory)
+    pruned = steps[:-keep_last] if keep_last < len(steps) else []
+    for s in pruned:
+        os.remove(_step_path(directory, s))
+    return pruned
+
+
+def load_arrays(directory: str, step: int) -> dict[str, np.ndarray]:
+    """The raw flattened-keypath arrays of one checkpoint — for callers
+    (the serve engine's resume path) that rebuild their template before
+    knowing which keys it will have."""
+    with np.load(_step_path(directory, step)) as data:
+        return {k: data[k] for k in data.files}
+
+
+def restore_into(arrays: dict[str, np.ndarray], template: Any) -> Any:
+    """Rebuild `template`'s pytree from flattened-keypath arrays
+    (shape-checked; ml_dtypes leaves round-trip through their raw void
+    records)."""
+    leaves_paths, treedef = jax.tree_util.tree_flatten_with_path(
+        template)
+    new_leaves = []
+    for path_t, leaf in leaves_paths:
+        key = "/".join(str(p) for p in path_t)
+        arr = arrays[key]
+        if arr.dtype.kind == "V":
+            # ml_dtypes (bfloat16, ...) round-trip through .npz as
+            # raw void records; view them back as the template dtype.
+            arr = arr.view(np.dtype(leaf.dtype))
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(
+                f"shape mismatch for {key}: {arr.shape} vs {leaf.shape}")
+        new_leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)
 
 
 def restore_checkpoint(directory: str, step: int, template: Any) -> Any:
-    path = os.path.join(directory, f"step_{step:08d}.npz")
-    with np.load(path) as data:
-        leaves_paths, treedef = jax.tree_util.tree_flatten_with_path(
-            template)
-        new_leaves = []
-        for path_t, leaf in leaves_paths:
-            key = "/".join(str(p) for p in path_t)
-            arr = data[key]
-            if arr.dtype.kind == "V":
-                # ml_dtypes (bfloat16, ...) round-trip through .npz as
-                # raw void records; view them back as the template dtype.
-                arr = arr.view(np.dtype(leaf.dtype))
-            if tuple(arr.shape) != tuple(leaf.shape):
-                raise ValueError(
-                    f"shape mismatch for {key}: {arr.shape} vs {leaf.shape}")
-            new_leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
-    return jax.tree_util.tree_unflatten(treedef, new_leaves)
+    return restore_into(load_arrays(directory, step), template)

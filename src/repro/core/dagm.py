@@ -39,7 +39,8 @@ import jax.numpy as jnp
 
 from .dihgp import (dihgp_dense, dihgp_dense_c, dihgp_matrix_free,
                     dihgp_matrix_free_c)
-from .mixing import Network, laplacian_apply, laplacian_apply_c
+from .mixing import (MixingOp, Network, laplacian_apply,
+                     laplacian_apply_c)
 from .penalty import consensus_error, inner_dgd_step, inner_dgd_step_c
 from .problems import BilevelProblem
 
@@ -249,15 +250,32 @@ def dagm_outer_step(prob: BilevelProblem, W, cfg,
 def dagm_outer_step_c(prob: BilevelProblem, W, cfg,
                       x: Array, y: Array, cs: dict,
                       metrics_fn: Callable | None = None,
-                      hp: RoundHP | None = None, curvature=None):
+                      hp: RoundHP | None = None, curvature=None,
+                      mask=None):
     """One outer iteration with every gossip on its comm channel.
 
     `cs` maps {"inner_y", "dihgp_h", "outer_x"} to ChannelStates; with
     `comm="identity"` each exchange short-circuits to exactly the
     uncompressed op, so this is bit-identical to `dagm_outer_step`
-    (regression-tested) while the send counters still tick."""
+    (regression-tested) while the send counters still tick.
+
+    `mask` is this round's fault mask ((n, k_max) padded-table layout,
+    see `repro.faults`): every gossip of the round — the M inner
+    exchanges, the U DIHGP exchanges and the outer (I−Ẃ)x exchange —
+    runs on the degraded view `W.masked(mask)`, i.e. the round's
+    realized W_k.  The DIHGP preconditioner D̃ keeps the *nominal*
+    self-weights: realized self-weights only grow under link drops
+    (w_ii + folded weight ≥ w_ii), so D̃ ⪰ D_k and the Neumann
+    contraction bound still holds (possibly conservatively)."""
     if hp is None:
         hp = constant_round_hp(cfg)
+    if mask is not None:
+        if not isinstance(W, MixingOp):
+            raise ValueError(
+                "fault masks require a MixingOp (the masked path lives "
+                "in the padded neighbor-table operand space); wrap W "
+                "with make_mixing_op first")
+        W = W.masked(mask)
     # the DIHGP h vector is re-initialized every round: neighbors'
     # error-feedback replicas restart at zero with it
     cs = dict(cs, dihgp_h=cs["dihgp_h"].reset_hat())
@@ -329,7 +347,8 @@ def chunk_hp(cfg, rounds: int, start: int = 0) -> RoundHP:
 
 def dagm_run_chunk(prob: BilevelProblem, W, cfg, carry,
                    rounds: int, metrics_fn: Callable | None = None,
-                   hp: RoundHP | None = None, curvature=None):
+                   hp: RoundHP | None = None, curvature=None,
+                   masks=None):
     """`rounds` outer iterations of Algorithm 2, carry in / carry out.
 
     The round-sliced core shared by `solve`, the legacy `dagm_run`
@@ -352,19 +371,40 @@ def dagm_run_chunk(prob: BilevelProblem, W, cfg, carry,
     serve engine therefore never slices chunks below T = 2 unless
     K = 1.)
 
+    `masks` scans a fault trace through the chunk: a (rounds, n, k_max)
+    float array of per-round padded-table edge masks (see
+    `repro.faults.FaultTrace.table_masks`), a traced operand exactly
+    like `hp` — one compiled chunk replays any fault schedule, zero
+    retraces.  None keeps today's unmasked scan program (structurally
+    unchanged, so existing compiled trajectories stay bit-exact).
+
     Returns (carry, metrics) with metrics stacked over the chunk's
     rounds."""
     if hp is None:
         hp = chunk_hp(cfg, rounds)
     hp = RoundHP(*(jnp.asarray(a, jnp.float32) for a in hp))
 
-    def body(c, hp_t):
+    if masks is None:
+        def body(c, hp_t):
+            (x, y), cs = c
+            x, y, m, cs = dagm_outer_step_c(prob, W, cfg, x, y, cs,
+                                            metrics_fn,
+                                            hp=RoundHP(*hp_t),
+                                            curvature=curvature)
+            return ((x, y), cs), m
+        return jax.lax.scan(body, carry, hp, length=rounds)
+
+    masks = jnp.asarray(masks, jnp.float32)
+
+    def body_m(c, operands):
+        hp_t, mask_t = operands
         (x, y), cs = c
         x, y, m, cs = dagm_outer_step_c(prob, W, cfg, x, y, cs,
                                         metrics_fn, hp=RoundHP(*hp_t),
-                                        curvature=curvature)
+                                        curvature=curvature,
+                                        mask=mask_t)
         return ((x, y), cs), m
-    return jax.lax.scan(body, carry, hp, length=rounds)
+    return jax.lax.scan(body_m, carry, (hp, masks), length=rounds)
 
 
 def dagm_run(prob: BilevelProblem, net: Network, cfg,

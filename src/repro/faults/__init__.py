@@ -1,0 +1,19 @@
+"""repro.faults: fault injection and dynamic-network degradation.
+
+See `repro.faults.faults` for the degradation semantics (realized W_k
+stays symmetric doubly stochastic) and `repro.topology.ops.MixingOp
+.masked` for the zero-retrace execution path.
+"""
+from repro.faults.faults import (
+    FaultSpec,
+    FaultTrace,
+    lower_faults,
+    realized_W,
+)
+
+__all__ = [
+    "FaultSpec",
+    "FaultTrace",
+    "lower_faults",
+    "realized_W",
+]

@@ -30,11 +30,12 @@ from .jobs import (JobResult, JobSpec, build_network, build_problem,
                    solver_spec)
 from .batching import (WIDTHS, BucketState, bucketize, chunk_rounds_for,
                        pad_width)
-from .engine import HP_MODES, EngineStats, ServeEngine
+from .engine import HP_MODES, EngineStats, ServeEngine, SimulatedCrash
 
 __all__ = [
     "BucketState", "EngineStats", "HP_MODES", "JobResult", "JobSpec",
-    "ServeEngine", "WIDTHS", "bucketize", "build_network",
-    "build_problem", "chunk_rounds_for", "compile_signature", "job_hp",
-    "pad_width", "schedule_rows", "solver_spec",
+    "ServeEngine", "SimulatedCrash", "WIDTHS", "bucketize",
+    "build_network", "build_problem", "chunk_rounds_for",
+    "compile_signature", "job_hp", "pad_width", "schedule_rows",
+    "solver_spec",
 ]

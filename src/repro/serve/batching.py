@@ -101,6 +101,8 @@ class RetiredJob:
     sends: dict
     wall_s: float
     metrics: dict | None = None   # per-round trajectory, when recorded
+    quarantined: bool = False     # retired by the poison detector, not
+    #                               by convergence/budget
 
 
 class BucketState:
@@ -166,8 +168,8 @@ class BucketState:
             lambda stack, leaf: stack.at[slot].set(leaf),
             self.carry, carry1)
 
-    def retire(self, slot: int, final_gap: float, converged: bool
-               ) -> RetiredJob:
+    def retire(self, slot: int, final_gap: float, converged: bool,
+               quarantined: bool = False) -> RetiredJob:
         """Read a finished job back out of `slot` and free it."""
         spec = self.slots[slot]
         (x, y), cs = self.carry
@@ -182,12 +184,42 @@ class BucketState:
             rounds=int(self.rounds[slot]), converged=bool(converged),
             final_gap=float(final_gap),
             sends={name: int(st.sends[slot]) for name, st in cs.items()},
-            wall_s=float(self.wall[slot]), metrics=metrics)
+            wall_s=float(self.wall[slot]), metrics=metrics,
+            quarantined=bool(quarantined))
         self.retired.append(rec)
         self.slots[slot] = None
         self.active[slot] = False
         self.metric_log[slot] = []
         return rec
+
+    # -- checkpoint support (engine chunk-boundary persistence) ------------
+
+    def snapshot_host(self) -> dict:
+        """Picklable host-side slot state (everything that is not a
+        device array — the carry/data arrays go through
+        `repro.checkpoint` separately).  With `restore_host` this is
+        the bucket's crash-restart protocol: restoring both halves at a
+        chunk boundary reproduces the interrupted run bit-exactly."""
+        return {
+            "slots": list(self.slots),
+            "active": self.active.copy(),
+            "rounds": self.rounds.copy(),
+            "wall": self.wall.copy(),
+            "sched": self.sched.copy(),
+            "curv": self.curv.copy(),
+            "retired": list(self.retired),
+            "metric_log": [list(m) for m in self.metric_log],
+        }
+
+    def restore_host(self, snap: dict) -> None:
+        self.slots = list(snap["slots"])
+        self.active = np.asarray(snap["active"], bool).copy()
+        self.rounds = np.asarray(snap["rounds"], np.int64).copy()
+        self.wall = np.asarray(snap["wall"], np.float64).copy()
+        self.sched = np.asarray(snap["sched"], np.float32).copy()
+        self.curv = np.asarray(snap["curv"], np.float32).copy()
+        self.retired = list(snap["retired"])
+        self.metric_log = [list(m) for m in snap["metric_log"]]
 
     # -- views -------------------------------------------------------------
 

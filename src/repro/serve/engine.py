@@ -34,10 +34,38 @@ Hyper-parameters are full (K,) α/β/γ *schedule rows* per slot (see
 Both modes share the width-invariance guarantee (widths ≥ 2) because
 the bucket program treats every slot identically; padding slots are
 frozen by the active mask (see `batching`).
+
+Crash safety (`repro.faults` arc)
+---------------------------------
+An engine built with ``checkpoint_dir=...`` persists every chunk
+boundary through `repro.checkpoint`: the device state (bucket carry —
+iterates, channel error-feedback replicas, send counters — plus the
+per-slot data stack) goes into an atomic ``step_<chunks>.npz``, and the
+host state (run order, finished results, remaining buckets, slot
+bookkeeping, stats) into a ``state_<chunks>.pkl`` sidecar.  A NEW
+engine pointed at the same directory resumes the interrupted `run()`
+**bit-exactly**: chunking is bitwise-exact and the restored carry is
+the exact chunk-boundary state, so the resumed trajectory equals the
+uninterrupted one (regression-tested; `EngineStats.restarts` counts
+resumptions).  Checkpoints are swept on successful completion, pruned
+to ``keep_last`` while running, and stale ``*.tmp.npz`` debris from a
+crash mid-save is removed on the next touch.
+
+Poisoned chunks degrade instead of killing the run: device/runtime
+errors are retried with exponential backoff (`EngineStats.retries`),
+and a chunk that turns a slot's iterates non-finite rolls that slot
+back to its pre-chunk state, retires it as ``quarantined``
+(`JobResult.quarantined`, `EngineStats.quarantined`) and backfills the
+slot — the other tenants' trajectories are untouched (the rollback is
+per-slot, and slot trajectories are independent by the width-invariance
+guarantee).
 """
 from __future__ import annotations
 
 import dataclasses
+import os
+import pickle
+import re
 import time
 from collections import deque
 
@@ -45,14 +73,20 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.dagm import RoundHP, dagm_run_chunk
+from repro.core.dagm import RoundHP, dagm_run_chunk, dagm_validate
 from repro.topology import make_mixing_op
 
 from .batching import (BucketState, bucketize, chunk_rounds_for,
                        pad_width)
-from .jobs import JobResult, JobSpec, Signature, solver_spec
+from .jobs import (JobResult, JobSpec, Signature, build_problem,
+                   compile_signature, solver_spec)
 
 HP_MODES = ("traced", "static")
+
+
+class SimulatedCrash(RuntimeError):
+    """Raised by the `crash_after_chunks` test hook right after a
+    checkpoint lands — the restart smoke's stand-in for kill -9."""
 
 
 def _no_metrics(prob, W, x, y):
@@ -72,6 +106,10 @@ class EngineStats:
     buckets: int = 0           # bucket flights completed
     jobs_completed: int = 0
     wall_s: float = 0.0        # engine wall time inside run()
+    retries: int = 0           # chunk invocations retried after errors
+    quarantined: int = 0       # job slots retired by the poison detector
+    restarts: int = 0          # run() resumptions from a checkpoint
+    checkpoints: int = 0       # chunk-boundary checkpoints written
 
 
 class ServeEngine:
@@ -88,12 +126,30 @@ class ServeEngine:
                   attach it to `JobResult.metrics` (the serve tier of
                   `repro.solve.solve` uses this to return the same
                   trajectory a reference-tier run would).
+    checkpoint_dir: directory for chunk-boundary crash checkpoints
+                  (None disables; see module docstring).  A resuming
+                  engine must be constructed with the same
+                  chunk_rounds / hp_mode / metrics_fn as the one that
+                  wrote the checkpoint — the first two are verified.
+    checkpoint_every: write a checkpoint every N-th chunk.
+    keep_last:    checkpoints retained while running (older pruned).
+    max_chunk_retries: device/runtime chunk errors retried (with
+                  exponential backoff) before the run gives up.
+    retry_backoff_s: base backoff; attempt i sleeps base·2^i.
+    crash_after_chunks: test hook — raise `SimulatedCrash` once
+                  `stats.chunks` reaches this count, right after the
+                  checkpoint lands (the restart smoke's kill switch).
     """
 
     def __init__(self, chunk_rounds: int = 10, max_width: int = 64,
                  hp_mode: str = "traced", metrics_fn=None,
                  cache_capacity: int = 64,
-                 record_metrics: bool = False):
+                 record_metrics: bool = False,
+                 checkpoint_dir: str | None = None,
+                 checkpoint_every: int = 1, keep_last: int = 3,
+                 max_chunk_retries: int = 2,
+                 retry_backoff_s: float = 0.05,
+                 crash_after_chunks: int | None = None):
         if hp_mode not in HP_MODES:
             raise ValueError(f"unknown hp_mode {hp_mode!r}; expected "
                              f"one of {HP_MODES}")
@@ -108,6 +164,12 @@ class ServeEngine:
         self.metrics_fn = metrics_fn if metrics_fn is not None \
             else _no_metrics
         self.record_metrics = bool(record_metrics)
+        self.checkpoint_dir = checkpoint_dir
+        self.checkpoint_every = max(int(checkpoint_every), 1)
+        self.keep_last = int(keep_last)
+        self.max_chunk_retries = int(max_chunk_retries)
+        self.retry_backoff_s = float(retry_backoff_s)
+        self.crash_after_chunks = crash_after_chunks
         self.stats = EngineStats()
         self.ledgers: dict[Signature, object] = {}
         self._queue: list[JobSpec] = []
@@ -129,11 +191,18 @@ class ServeEngine:
         """Enqueue job specs (auto-assigning missing job_ids); returns
         the job ids in submission order.  Caller-supplied ids must be
         unique within the queued batch — results are keyed by id, so a
-        duplicate would silently shadow the first job's outcome."""
+        duplicate would silently shadow the first job's outcome.
+
+        Specs are validated here, at the API edge: config conflicts
+        (`dagm_validate`), K/chunk_rounds incompatibilities and
+        unpicklable checkpointed jobs all fail with an actionable
+        ValueError instead of a shape error deep inside the vmapped
+        chunk (or a torn checkpoint) mid-run."""
         ids = []
         queued = {spec.job_id for spec in self._queue}
         for spec in ([specs] if isinstance(specs, JobSpec) else
                      list(specs)):
+            self._validate_submit(spec)
             if spec.job_id is None:
                 spec = dataclasses.replace(
                     spec, job_id=f"job{self._auto_id}")
@@ -145,6 +214,35 @@ class ServeEngine:
             self._queue.append(spec)
             ids.append(spec.job_id)
         return ids
+
+    def _validate_submit(self, spec: JobSpec) -> None:
+        sspec = solver_spec(spec)     # TypeError for non-config objects
+        dagm_validate(sspec)          # schedule lengths, tier conflicts
+        if sspec.faults is not None:
+            raise ValueError(
+                "serve jobs do not thread fault masks yet: a bucket's "
+                "compiled program carries per-slot hyper-parameter "
+                "operands only, so a per-job FaultSpec would be "
+                "silently ignored — run faulted solves through "
+                "repro.solve with tier='reference', or drop "
+                "SolverSpec.faults")
+        T = chunk_rounds_for(sspec.K, self.chunk_rounds)
+        if spec.tol is not None and T >= sspec.K \
+                and sspec.K > self.chunk_rounds:
+            raise ValueError(
+                f"JobSpec.tol needs a chunk boundary to retire at, but "
+                f"K={sspec.K} and chunk_rounds={self.chunk_rounds} "
+                f"share no divisor ≥ 2 — the whole run would be one "
+                f"chunk and the tolerance could only fire at the full "
+                f"budget; pick K with a small factor (e.g. "
+                f"{sspec.K + 1}) or raise chunk_rounds")
+        if self.checkpoint_dir is not None and callable(spec.family):
+            raise ValueError(
+                "a checkpointing engine (checkpoint_dir=...) must be "
+                "able to pickle every queued JobSpec, and callable "
+                "problem families (repro.solve's inline serve-tier "
+                "wrapper) do not survive a restart — use a problem-zoo "
+                "family name, or drop checkpoint_dir")
 
     # -- chunk program cache ----------------------------------------------
 
@@ -214,20 +312,32 @@ class ServeEngine:
     # -- scheduling loop ---------------------------------------------------
 
     def run(self) -> list[JobResult]:
-        """Drain the queue; returns JobResults in submission order."""
-        t0 = time.perf_counter()
-        queue, self._queue = self._queue, []
-        order = [spec.job_id for spec in queue]
-        results: dict[str, JobResult] = {}
-        for sig, items in bucketize(queue).items():
-            self._run_bucket(sig, items, results)
-        self.stats.wall_s += time.perf_counter() - t0
-        return [results[jid] for jid in order]
+        """Drain the queue; returns JobResults in submission order.
 
-    def _run_bucket(self, sig: Signature, items: list,
-                    results: dict) -> None:
+        With `checkpoint_dir` set and a checkpoint present, resumes the
+        interrupted run first (bit-exactly) — any newly queued jobs run
+        after the restored ones."""
+        t0 = time.perf_counter()
+        ctx = self._restore_run_state()
+        if ctx is None:
+            queue, self._queue = self._queue, []
+            ctx = {"order": [spec.job_id for spec in queue],
+                   "buckets": list(bucketize(queue).values()),
+                   "bucket_index": 0, "results": {}, "resume": None}
+        while ctx["bucket_index"] < len(ctx["buckets"]):
+            items = ctx["buckets"][ctx["bucket_index"]]
+            self._run_bucket(items, ctx)
+            ctx["bucket_index"] += 1
+            ctx["resume"] = None
+        self._clear_checkpoints()
+        self.stats.wall_s += time.perf_counter() - t0
+        return [ctx["results"][jid] for jid in ctx["order"]]
+
+    def _run_bucket(self, items: list, ctx: dict) -> None:
         from .jobs import build_network
+        results = ctx["results"]
         spec0, prob0 = items[0]
+        sig = compile_signature(spec0, prob0)
         sspec = solver_spec(spec0)
         net = build_network(spec0)
         op = make_mixing_op(net, backend=sspec.mixing.backend,
@@ -237,28 +347,52 @@ class ServeEngine:
         width = pad_width(len(items), self.max_width)
         T = chunk_rounds_for(sspec.K, self.chunk_rounds)
         bucket = BucketState(sig, width, prob0, net, op, sspec)
-        pending = deque(items)
-        for slot in range(width):
-            if pending:
-                bucket.admit(slot, *pending.popleft())
+        resume = ctx["resume"]
+        if resume is None:
+            pending = deque(items)
+            for slot in range(width):
+                if pending:
+                    bucket.admit(slot, *pending.popleft())
+        else:
+            # chunk-boundary restore: host bookkeeping from the pickle
+            # sidecar, device state through repro.checkpoint — together
+            # the exact state the interrupted run held at the boundary
+            from repro import checkpoint as ckpt
+            bucket.restore_host(resume["bucket_host"])
+            template = {"carry": bucket.carry, "data": bucket.data}
+            dev = ckpt.restore_into(
+                ckpt.load_arrays(self.checkpoint_dir, resume["step"]),
+                template)
+            bucket.carry, bucket.data = dev["carry"], dev["data"]
+            ids = set(resume["pending_ids"])
+            pending = deque(it for it in items if it[0].job_id in ids)
 
         while bucket.any_active():
             fn = self._chunk_fn(bucket, T)
+            prev_carry = bucket.carry
             t0 = time.perf_counter()
             if self.hp_mode == "static":
-                carry, metrics = fn(bucket.data, bucket.carry,
-                                    bucket.active_mask())
+                carry, metrics = self._invoke_chunk(
+                    fn, (bucket.data, bucket.carry,
+                         bucket.active_mask()))
             else:
                 hp = {k: jnp.asarray(v)
                       for k, v in bucket.hp_chunk(T).items()}
-                carry, metrics = fn(bucket.data, hp, bucket.carry,
-                                    bucket.active_mask())
-            jax.block_until_ready(carry)
+                carry, metrics = self._invoke_chunk(
+                    fn, (bucket.data, hp, bucket.carry,
+                         bucket.active_mask()))
             dt = time.perf_counter() - t0
             self.stats.chunks += 1
             bucket.carry = carry
 
-            active = np.nonzero(bucket.active)[0]
+            ran = bucket.active.copy()   # slots that ran this chunk
+            bad = self._poisoned_slots(bucket)
+            if bad.any():
+                self._quarantine(bucket, prev_carry, bad, results,
+                                 pending)
+            # freshly backfilled slots (quarantine replacements) start
+            # at the NEXT chunk; only surviving runners earn this one
+            active = np.nonzero(ran & ~bad)[0]
             bucket.rounds[active] += T
             bucket.wall[active] += dt / max(len(active), 1)
             if self.record_metrics:
@@ -279,9 +413,177 @@ class ServeEngine:
                     self.stats.jobs_completed += 1
                     if pending:
                         bucket.admit(slot, *pending.popleft())
+            self._maybe_checkpoint(bucket, ctx, pending)
 
         self._finalize_ledger(bucket)
         self.stats.buckets += 1
+
+    # -- fault tolerance ---------------------------------------------------
+
+    def _invoke_chunk(self, fn, args):
+        """Run one compiled chunk, retrying device/runtime errors with
+        exponential backoff (transient-failure classes only — a
+        ValueError/TypeError is a bug, not weather, and raises
+        immediately)."""
+        attempt = 0
+        while True:
+            try:
+                out = fn(*args)
+                jax.block_until_ready(out)
+                return out
+            except (RuntimeError, OSError):
+                if attempt >= self.max_chunk_retries:
+                    raise
+                self.stats.retries += 1
+                time.sleep(self.retry_backoff_s * (2.0 ** attempt))
+                attempt += 1
+
+    def _poisoned_slots(self, bucket: BucketState) -> np.ndarray:
+        """(width,) bool: active slots whose post-chunk iterates went
+        non-finite (divergent hyper-parameters, poisoned data)."""
+        (x, y), _ = bucket.carry
+        finite = np.asarray(
+            jnp.isfinite(x).all(axis=tuple(range(1, x.ndim)))
+            & jnp.isfinite(y).all(axis=tuple(range(1, y.ndim))))
+        return bucket.active & ~finite
+
+    def _quarantine(self, bucket: BucketState, prev_carry, bad,
+                    results: dict, pending: deque) -> None:
+        """Roll the poisoned slots back to their pre-chunk state (the
+        other tenants keep the chunk's results), retire them as
+        quarantined and backfill.  Rounds/sends roll back with the
+        carry — the poisoned chunk never happened for these slots."""
+        mask = jnp.asarray(bad)
+        bucket.carry = jax.tree.map(
+            lambda new, old: jnp.where(
+                mask.reshape((-1,) + (1,) * (new.ndim - 1)), old, new),
+            bucket.carry, prev_carry)
+        for slot in np.nonzero(bad)[0]:
+            rec = bucket.retire(slot, float("nan"), False,
+                                quarantined=True)
+            results[rec.spec.job_id] = self._make_result(bucket, rec)
+            self.stats.quarantined += 1
+            if pending:
+                bucket.admit(slot, *pending.popleft())
+
+    # -- crash checkpoints (repro.checkpoint) ------------------------------
+
+    def _state_path(self, step: int) -> str:
+        return os.path.join(self.checkpoint_dir,
+                            f"state_{step:08d}.pkl")
+
+    def _maybe_checkpoint(self, bucket: BucketState, ctx: dict,
+                          pending: deque) -> None:
+        if self.checkpoint_dir is None:
+            return
+        if self.stats.chunks % self.checkpoint_every == 0:
+            self._save_run_state(bucket, ctx, pending)
+        if self.crash_after_chunks is not None \
+                and self.stats.chunks >= self.crash_after_chunks:
+            raise SimulatedCrash(
+                f"crash_after_chunks hook fired at chunk "
+                f"{self.stats.chunks}")
+
+    def _save_run_state(self, bucket: BucketState, ctx: dict,
+                        pending: deque) -> None:
+        from repro import checkpoint as ckpt
+        step = self.stats.chunks
+        ckpt.save_checkpoint(self.checkpoint_dir, step,
+                             {"carry": bucket.carry,
+                              "data": bucket.data},
+                             keep_last=self.keep_last)
+        host = {
+            "format": 1,
+            "engine": {"chunk_rounds": self.chunk_rounds,
+                       "hp_mode": self.hp_mode},
+            "order": ctx["order"],
+            "results": ctx["results"],
+            "bucket_index": ctx["bucket_index"],
+            "bucket_specs": [[spec for spec, _ in items]
+                             for items in ctx["buckets"]],
+            "pending_ids": [spec.job_id for spec, _ in pending],
+            "bucket_host": bucket.snapshot_host(),
+            "stats": {"chunks": self.stats.chunks,
+                      "jobs_completed": self.stats.jobs_completed,
+                      "retries": self.stats.retries,
+                      "quarantined": self.stats.quarantined,
+                      "restarts": self.stats.restarts,
+                      "checkpoints": self.stats.checkpoints + 1},
+            "auto_id": self._auto_id,
+        }
+        tmp = self._state_path(step) + ".tmp"
+        with open(tmp, "wb") as f:
+            pickle.dump(host, f)
+        os.replace(tmp, self._state_path(step))
+        self.stats.checkpoints += 1
+        # prune sidecars alongside the npz files keep_last keeps
+        kept = {f"state_{s:08d}.pkl" for s in
+                ckpt.checkpoint_steps(self.checkpoint_dir)}
+        for f in os.listdir(self.checkpoint_dir):
+            if re.fullmatch(r"state_\d+\.pkl", f) and f not in kept:
+                os.remove(os.path.join(self.checkpoint_dir, f))
+
+    def _restore_run_state(self) -> dict | None:
+        if self.checkpoint_dir is None:
+            return None
+        from repro import checkpoint as ckpt
+        ckpt.sweep_stale(self.checkpoint_dir)
+        host, step = None, None
+        for s in reversed(ckpt.checkpoint_steps(self.checkpoint_dir)):
+            # a crash between the npz and its sidecar leaves a torn
+            # step — fall back to the newest complete pair
+            if os.path.exists(self._state_path(s)):
+                with open(self._state_path(s), "rb") as f:
+                    host = pickle.load(f)
+                step = s
+                break
+        if host is None:
+            return None
+        eng = host["engine"]
+        if eng["chunk_rounds"] != self.chunk_rounds \
+                or eng["hp_mode"] != self.hp_mode:
+            raise ValueError(
+                f"checkpoint at {self.checkpoint_dir!r} was written by "
+                f"an engine with chunk_rounds={eng['chunk_rounds']}, "
+                f"hp_mode={eng['hp_mode']!r}; this engine has "
+                f"chunk_rounds={self.chunk_rounds}, "
+                f"hp_mode={self.hp_mode!r} — bit-exact resumption "
+                f"needs identical chunking, construct the resuming "
+                f"engine to match")
+        for k, v in host["stats"].items():
+            setattr(self.stats, k, v)
+        self.stats.restarts += 1
+        self._auto_id = max(self._auto_id, host["auto_id"])
+        ctx = {
+            "order": list(host["order"]),
+            "buckets": [[(s, build_problem(s)) for s in specs]
+                        for specs in host["bucket_specs"]],
+            "bucket_index": host["bucket_index"],
+            "results": dict(host["results"]),
+            "resume": {"step": step,
+                       "bucket_host": host["bucket_host"],
+                       "pending_ids": host["pending_ids"]},
+        }
+        if self._queue:                      # jobs queued before resume
+            queue, self._queue = self._queue, []
+            ctx["order"] += [spec.job_id for spec in queue]
+            ctx["buckets"] += list(bucketize(queue).values())
+        return ctx
+
+    def _clear_checkpoints(self) -> None:
+        """A completed run owes the disk nothing: drop every step and
+        sidecar so the next run() starts fresh instead of resuming."""
+        if self.checkpoint_dir is None \
+                or not os.path.isdir(self.checkpoint_dir):
+            return
+        from repro import checkpoint as ckpt
+        ckpt.sweep_stale(self.checkpoint_dir)
+        for s in ckpt.checkpoint_steps(self.checkpoint_dir):
+            os.remove(os.path.join(self.checkpoint_dir,
+                                   f"step_{s:08d}.npz"))
+        for f in os.listdir(self.checkpoint_dir):
+            if re.fullmatch(r"state_\d+\.pkl", f):
+                os.remove(os.path.join(self.checkpoint_dir, f))
 
     # -- accounting --------------------------------------------------------
 
@@ -296,7 +598,8 @@ class ServeEngine:
             converged=rec.converged, final_gap=rec.final_gap,
             wire_bytes=int(wire_bytes), wire_floats=int(wire_floats),
             sends=dict(rec.sends), wall_clock_s=rec.wall_s,
-            signature=bucket.signature, metrics=rec.metrics)
+            signature=bucket.signature, metrics=rec.metrics,
+            quarantined=rec.quarantined)
 
     def _finalize_ledger(self, bucket: BucketState) -> None:
         """Charge the bucket ledger with per-job send arrays (ordered

@@ -90,6 +90,10 @@ class JobResult:
     signature: Signature      # bucket the job ran in
     metrics: dict | None = None   # per-round trajectory (rounds, ...)
     #                               when the engine records metrics
+    quarantined: bool = False     # chunk poisoned this job (non-finite
+    #                               iterates); x/y hold the last finite
+    #                               pre-chunk state, rounds the rounds
+    #                               completed before the poisoned chunk
 
 
 def solver_spec(spec: JobSpec) -> SolverSpec:
@@ -151,6 +155,13 @@ def compile_signature(spec: JobSpec, prob: BilevelProblem) -> Signature:
     from repro.core.dagm import dagm_validate
     s = solver_spec(spec)
     dagm_validate(s)
+    if s.faults is not None:
+        raise ValueError(
+            "serve jobs do not thread fault masks yet: a bucket's "
+            "compiled program carries per-slot hyper-parameter operands "
+            "only, so a per-job FaultSpec would be silently ignored — "
+            "run faulted solves through repro.solve with "
+            "tier='reference', or drop SolverSpec.faults")
     import jax
     leaf_shapes = tuple(sorted(
         (jax.tree_util.keystr(path), tuple(leaf.shape))

@@ -122,21 +122,41 @@ def _solve_dagm_reference(prob, net, spec: SolverSpec, *, x0, y0, seed,
     carry0 = dagm_init_carry(prob, W, spec, x0, y0, seed)
     hp = _schedule_hp(spec)
 
+    # faults lower once (host-side) to a per-round mask operand; like
+    # hp, the masks enter the program as traced arrays, so resolving a
+    # different FaultSpec against a held compiled runner costs zero
+    # retraces (the bare solve() closure is still per-call).
+    trace = None
+    masks = None
+    if spec.faults is not None:
+        from repro.faults import lower_faults
+        trace = lower_faults(spec.faults, net, spec.K)
+        masks = jnp.asarray(trace.table_masks(W.sparse), jnp.float32)
+
     # hp enters as a jit *argument*: the program is schedule-agnostic,
     # and — because the serve tier scans the very same traced operands —
     # batched traced-hp runs are bit-exact with this solo program.
     # (The closure itself is per-call: solo solve() does not cache
     # compiles across invocations; sweeps belong on tier="serve".)
     @jax.jit
-    def run(carry, hp):
+    def run(carry, hp, masks):
         return dagm_run_chunk(prob, W, spec, carry, spec.K, metrics_fn,
-                              hp=hp)
+                              hp=hp, masks=masks)
 
     ((x, y), cs), metrics = run(
-        carry0, RoundHP(*(jnp.asarray(a, jnp.float32) for a in hp)))
+        carry0, RoundHP(*(jnp.asarray(a, jnp.float32) for a in hp)),
+        masks)
     W.ledger.charge_states(cs.values())
+    extras = {}
+    if trace is not None:
+        # ledger sends stay nominal (channel counters tick whether or
+        # not a given link carried the payload); the honest wire scale
+        # for the faulted run is the trace's realized-link fraction
+        extras = {"fault_trace": trace,
+                  "fault_alive_fraction": trace.alive_fraction()}
     return SolveResult(x=x, y=y, metrics=metrics, ledger=W.ledger,
-                       channels=cs, method="dagm", tier="reference")
+                       channels=cs, method="dagm", tier="reference",
+                       extras=extras)
 
 
 def _solve_baseline(prob, net, spec: SolverSpec, *, x0, y0, seed

@@ -169,6 +169,9 @@ class SolverSpec:
     momentum: float = 0.9       # ma_dbo tracker momentum
     b: int = 3                  # dgbo Hessian gossip rounds
     N: int = 5                  # dgtbo JHIP iterations
+    faults: Any = None          # repro.faults.FaultSpec (or None): lower
+    #                             a fault trace and run every gossip on
+    #                             the per-round realized W_k
 
     # -- accounting conveniences (mirror the DAGMConfig API) ---------------
 
@@ -247,6 +250,27 @@ def validate_spec(spec: "SolverSpec") -> None:
             "dihgp='exact' solves the penalized system densely and has "
             "no gossip to compress; use 'dense' or 'matrix_free' with "
             f"comm={spec.comm.spec!r}")
+    if spec.faults is not None:
+        from repro.faults import FaultSpec
+        if not isinstance(spec.faults, FaultSpec):
+            raise ValueError(
+                f"SolverSpec.faults must be a repro.faults.FaultSpec "
+                f"(got {type(spec.faults).__name__}); construct one "
+                f"with FaultSpec(drop_prob=..., stragglers=..., "
+                f"churn=..., seed=...)")
+        if spec.method != "dagm":
+            raise ValueError(
+                f"fault injection degrades the DAGM gossip rounds; the "
+                f"baseline methods do not thread per-round edge masks "
+                f"(got method={spec.method!r}) — use method='dagm' or "
+                f"drop SolverSpec.faults")
+        if spec.tier != "reference":
+            raise ValueError(
+                f"fault-masked mixing is a reference-tier feature (got "
+                f"tier={spec.tier!r}): serve buckets share one compiled "
+                f"program whose per-slot operands are hyper-parameters "
+                f"only, and the sharded tier's lax.ppermute gossip has "
+                f"no per-round mask channel yet — use tier='reference'")
     if spec.tier == "sharded" and spec.curvature is None:
         raise ValueError(
             "the sharded tier's scalar-preconditioned DIHGP needs an "
@@ -308,8 +332,8 @@ def dagm_spec(alpha=1e-2, beta=1e-2, gamma=None, K: int = 100,
               M: int = 10, U: int = 3, dihgp: str = "dense",
               curvature: float | None = None, mixing: str = "auto",
               mixing_interpret: bool = True, mixing_dtype: str = "f32",
-              comm: str = "identity", tier: str = "reference"
-              ) -> SolverSpec:
+              comm: str = "identity", tier: str = "reference",
+              faults=None) -> SolverSpec:
     """Convenience constructor mirroring the old DAGMConfig kwargs —
     the one-line migration target for `DAGMConfig(...)` call sites."""
     return SolverSpec(
@@ -317,7 +341,8 @@ def dagm_spec(alpha=1e-2, beta=1e-2, gamma=None, K: int = 100,
         schedule=ScheduleSpec(alpha=alpha, beta=beta, gamma=gamma),
         mixing=MixingSpec(backend=mixing, interpret=mixing_interpret,
                           dtype=mixing_dtype),
-        comm=CommSpec(spec=comm), dihgp=dihgp, curvature=curvature)
+        comm=CommSpec(spec=comm), dihgp=dihgp, curvature=curvature,
+        faults=faults)
 
 
 def sharded_spec(alpha=1e-2, beta=1e-2, M: int = 5, U: int = 3,

@@ -24,11 +24,12 @@ from .weights import (check_assumption_a, max_degree_weights,
                       self_weight_bounds, spectral_gap, uniform_averaging)
 from .structure import (CirculantStructure, SparseStructure,
                         circulant_structure, sparse_structure)
-from .ops import (BACKENDS, MIXING_DTYPES, MixingOp, Network, as_matrix,
-                  fused_neumann_step, fused_neumann_step_c,
-                  laplacian_apply, laplacian_apply_c, make_mixing_op,
-                  make_network, mix_apply, mix_apply_c,
-                  resolve_mixing_dtype, _neumann_update)
+from .ops import (BACKENDS, MIXING_DTYPES, MaskedMixingOp, MixingOp,
+                  Network, as_matrix, fused_neumann_step,
+                  fused_neumann_step_c, laplacian_apply,
+                  laplacian_apply_c, make_mixing_op, make_network,
+                  mix_apply, mix_apply_c, resolve_mixing_dtype,
+                  _neumann_update)
 
 __all__ = [
     "circulant_graph", "complete_graph", "erdos_renyi_graph",
@@ -38,7 +39,8 @@ __all__ = [
     "uniform_averaging",
     "CirculantStructure", "SparseStructure", "circulant_structure",
     "sparse_structure",
-    "BACKENDS", "MIXING_DTYPES", "MixingOp", "Network", "as_matrix",
+    "BACKENDS", "MIXING_DTYPES", "MaskedMixingOp", "MixingOp",
+    "Network", "as_matrix",
     "fused_neumann_step", "fused_neumann_step_c", "laplacian_apply",
     "laplacian_apply_c", "make_mixing_op", "make_network", "mix_apply",
     "mix_apply_c", "resolve_mixing_dtype",

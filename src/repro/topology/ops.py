@@ -71,6 +71,24 @@ actual compressor calls.  `comm="identity"` short-circuits every `*_c`
 call onto the uncompressed code path (bit-identical trajectories, only
 the counters tick).
 
+Fault-masked mixing (`repro.faults`)
+------------------------------------
+`MixingOp.masked(mask)` returns a `MaskedMixingOp` view applying this
+round's realized matrix W_k = W ⊙ M (off-diagonal) with every dropped
+link's weight folded back into the self-weight — so W_k stays symmetric
+and doubly stochastic for symmetric masks (degradation, not
+divergence).  The mask lives in the padded neighbor-table layout of
+`sparse_structure` ((n, k_max) float, 1 = link alive) and is an
+ordinary traced operand: scanning per-round masks through
+`core.dagm.dagm_run_chunk` replays any fault trace through ONE compiled
+program, zero retraces.  The masked view always executes the padded
+row-gather formulation (a mask breaks the shift invariance the
+circulant/Pallas tiers exploit), reusing `kernels.ref
+.sparse_mix_padded_ref` with effective tables — an all-ones mask is
+therefore bit-exact with the fault-free "sparse_gather" padded path.
+`mix_masked` / `laplacian_masked` are one-shot conveniences over the
+view.
+
 All algorithm-level callers (`penalty`, `dihgp`, `dagm`, `baselines`)
 go through the free functions `mix_apply` / `laplacian_apply` /
 `fused_neumann_step` (or their `_c` twins), which accept either a raw W
@@ -219,6 +237,7 @@ class MixingOp:
         self._diag = jnp.diag(self.W)
         self.structure = circulant_structure(W)
         self.sparse = sparse_structure(W)
+        self._masked_cache = None
         if backend == "auto":
             s, sp = self.structure, self.sparse
             if s is not None and 2 * (len(s.offsets) + 1) <= s.n:
@@ -451,6 +470,108 @@ class MixingOp:
                 st.bump()
         mix, st = self.mix_c(h, st)
         return _neumann_update(mix, h, hvp_h, p, d_scalar, beta), st
+
+    # -- fault-masked mixing (repro.faults) --------------------------------
+
+    def _masked_tables(self):
+        """Padded-table jnp constants (w_self, neighbors, weights) — the
+        operand space per-round fault masks degrade (lazily cached; the
+        tables exist even when the resolved backend is dense/circulant,
+        since `sparse_structure` covers any square W with n >= 2)."""
+        if self._masked_cache is None:
+            sp = self.sparse
+            if sp is None:
+                raise ValueError(
+                    f"fault masks need the padded sparse tables, which "
+                    f"require a square mixing matrix with n >= 2 (got "
+                    f"n={self.n})")
+            self._masked_cache = (jnp.asarray(sp.w_self),
+                                  jnp.asarray(sp.neighbors),
+                                  jnp.asarray(sp.weights))
+        return self._masked_cache
+
+    def masked(self, mask) -> "MaskedMixingOp":
+        """This round's degraded view of the op: mask is (n, k_max) in
+        the padded `sparse_structure` table layout (1 = link alive, 0 =
+        dropped; symmetric in edge space — see repro.faults).  Cheap at
+        trace time; build one per scanned round."""
+        return MaskedMixingOp(self, mask)
+
+    def mix_masked(self, y: jnp.ndarray, mask) -> jnp.ndarray:
+        """(W_k ⊗ I) y under a per-round fault mask (see `masked`)."""
+        return self.masked(mask).mix(y)
+
+    def laplacian_masked(self, y: jnp.ndarray, mask) -> jnp.ndarray:
+        """((I − W_k) ⊗ I) y under a per-round fault mask."""
+        return self.masked(mask).laplacian(y)
+
+
+class MaskedMixingOp(MixingOp):
+    """A per-round degraded view of a base MixingOp (see `MixingOp
+    .masked`): applies W_k = W ⊙ M with dropped weight folded into the
+    self-weight, in the padded neighbor-table space.
+
+    Shares the base op's comm policy / ledger / channel bookkeeping by
+    reference and overrides only the gossip algebra; every apply runs
+    the padded row-gather formulation regardless of the base backend
+    (masks break shift invariance, and the Pallas kernels bake their
+    weight tables as compile-time constants — the mask must stay a
+    traced operand for the zero-retrace contract)."""
+
+    def __init__(self, base: MixingOp, mask):
+        self.__dict__.update(base.__dict__)  # view: share, don't rebuild
+        w_self, idx, wts = base._masked_tables()
+        mask = jnp.asarray(mask, wts.dtype)
+        if mask.shape != idx.shape:
+            raise ValueError(
+                f"fault mask shape {mask.shape} does not match the "
+                f"padded neighbor table {tuple(idx.shape)} of "
+                f"{base.name}; lower it with FaultTrace.table_masks")
+        self._m_idx = idx
+        # all-ones mask ⇒ wts·1.0 and w_self+0.0 are bitwise no-ops, so
+        # the unfaulted view reproduces the padded path bit-exactly
+        self._m_wts = wts * mask
+        self._m_wself = w_self + jnp.sum(wts * (1.0 - mask), axis=1)
+
+    def __repr__(self) -> str:
+        return (f"MaskedMixingOp({self.name}, n={self.n}, "
+                f"backend=sparse_gather[masked], dtype={self.dtype})")
+
+    def _apply(self, y: jnp.ndarray, laplacian: bool) -> jnp.ndarray:
+        from repro.kernels.ref import sparse_mix_padded_ref
+        flat = y.reshape(y.shape[0], -1)
+        out_dtype = flat.dtype
+        if self.storage_dtype is not None \
+                and flat.dtype != self.storage_dtype:
+            flat = flat.astype(self.storage_dtype)
+        acc = flat if self.storage_dtype is None \
+            else flat.astype(jnp.float32)
+        out = sparse_mix_padded_ref(acc, self._m_wself, self._m_idx,
+                                    self._m_wts, laplacian=laplacian)
+        if self.storage_dtype is not None:
+            out = out.astype(self.storage_dtype)
+        return out.astype(out_dtype).reshape(y.shape)
+
+    def _apply_c(self, y: jnp.ndarray, st, laplacian: bool):
+        # same compress→mix→decompress contract as the base, but the
+        # never-on-the-wire self term uses the *effective* self-weight
+        # (nominal w_ii plus this round's folded-back dropped weight)
+        from repro.comm import compressed_payload
+        if self.comm.is_identity:
+            return self._apply(y, laplacian), st.bump()
+        y_hat, st = compressed_payload(self.comm, y, st)
+        mixed = self._apply(y_hat, laplacian=False)
+        expand = (slice(None),) + (None,) * (y.ndim - 1)
+        mixed = mixed + self._m_wself[expand].astype(y.dtype) \
+            * (y - y_hat)
+        return (y - mixed) if laplacian else mixed, st
+
+    def neumann_step(self, h, hvp_h, p, d_scalar, beta):
+        if not isinstance(beta, (int, float, np.floating)):
+            hvp_h = beta * hvp_h
+            beta = 1.0
+        return _neumann_update(self._apply(h, laplacian=False), h,
+                               hvp_h, p, d_scalar, beta)
 
 
 def make_mixing_op(net: "Network", backend: str = "auto",

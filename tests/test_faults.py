@@ -1,0 +1,387 @@
+"""repro.faults: fault lowering, masked mixing, faulted solves, and
+the serve engine's crash safety (checkpoint/resume, quarantine, retry).
+"""
+import dataclasses
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import checkpoint as ckpt
+from repro.core.mixing import make_mixing_op, make_network, mix_apply
+from repro.core.problems import quadratic_bilevel
+from repro.faults import FaultSpec, FaultTrace, lower_faults, realized_W
+from repro.solve import dagm_spec, solve
+from repro.solve.spec import validate_spec
+
+
+def _spec(K=12, **kw):
+    kw.setdefault("mixing", "sparse_gather")
+    return dagm_spec(alpha=0.05, beta=0.1, K=K, M=3, U=2,
+                     dihgp="matrix_free", curvature=6.0, **kw)
+
+
+# ---------------------------------------------------------------------------
+# lowering
+# ---------------------------------------------------------------------------
+
+class TestLowering:
+    def test_deterministic_and_seed_sensitive(self):
+        net = make_network("erdos_renyi", 9, r=0.5, seed=0)
+        fs = FaultSpec(drop_prob=0.4, stragglers=(2,), seed=3)
+        t1 = lower_faults(fs, net, 20)
+        t2 = lower_faults(fs, net, 20)
+        assert np.array_equal(t1.edge_masks, t2.edge_masks)
+        t3 = lower_faults(dataclasses.replace(fs, seed=4), net, 20)
+        assert not np.array_equal(t1.edge_masks, t3.edge_masks)
+
+    def test_mask_algebra(self):
+        net = make_network("erdos_renyi", 8, r=0.6, seed=1)
+        fs = FaultSpec(drop_prob=0.5, stragglers=(1,),
+                       churn=((3, 2, 5),), seed=0)
+        tr = lower_faults(fs, net, 8)
+        m = tr.edge_masks
+        assert m.shape == (8, 8, 8) and m.dtype == bool
+        # symmetric, diagonal always True
+        assert np.array_equal(m, m.transpose(0, 2, 1))
+        assert m[:, np.arange(8), np.arange(8)].all()
+        # churned agent fully unlinked during its epoch, back after
+        off = ~np.eye(8, dtype=bool)
+        assert not (m[2:5, 3, :] & off[3]).any()
+        assert (m[5:, 3, :] & net.adj[3] & off[3]).any()
+
+    def test_trivial_spec_is_all_ones(self):
+        net = make_network("ring", 6)
+        fs = FaultSpec()
+        assert fs.is_trivial
+        tr = lower_faults(fs, net, 5)
+        assert tr.edge_masks.all()
+        assert tr.alive_fraction() == 1.0
+
+    def test_alive_fraction_counts_dropped_sends(self):
+        net = make_network("ring", 6)
+        # churn one agent out for the full run: its 2 ring links (4 of
+        # 12 directed sends) are dead every round
+        tr = lower_faults(FaultSpec(churn=((0, 0, 10),)), net, 10)
+        assert tr.alive_fraction() == pytest.approx(8 / 12)
+
+    def test_validation(self):
+        net = make_network("ring", 6)
+        with pytest.raises(ValueError, match="drop_prob"):
+            FaultSpec(drop_prob=1.0)
+        with pytest.raises(ValueError, match="straggle_prob"):
+            FaultSpec(stragglers=(1,), straggle_prob=0.0)
+        with pytest.raises(ValueError, match="leave_round"):
+            FaultSpec(churn=((0, 5, 3),))
+        with pytest.raises(ValueError, match="out of range"):
+            lower_faults(FaultSpec(stragglers=(9,)), net, 4)
+        with pytest.raises(ValueError, match="never fire"):
+            lower_faults(FaultSpec(churn=((0, 7, 9),)), net, 4)
+
+
+# ---------------------------------------------------------------------------
+# masked mixing
+# ---------------------------------------------------------------------------
+
+class TestMaskedMixing:
+    def _setup(self, seed=0):
+        net = make_network("erdos_renyi", 9, r=0.5, seed=seed)
+        op = make_mixing_op(net, backend="sparse_gather")
+        tr = lower_faults(FaultSpec(drop_prob=0.4, stragglers=(2,),
+                                    churn=((5, 0, 3),), seed=seed),
+                          net, 6)
+        y = jax.random.normal(jax.random.PRNGKey(seed), (9, 7))
+        return net, op, tr, y
+
+    def test_masked_mix_matches_realized_W(self):
+        net, op, tr, y = self._setup()
+        tbl = tr.table_masks(op.sparse)
+        for k in range(tr.rounds):
+            Wk = tr.realized_W(net.W, k).astype(np.float32)
+            np.testing.assert_allclose(
+                np.asarray(op.mix_masked(y, tbl[k])),
+                Wk @ np.asarray(y), atol=1e-5, rtol=1e-5)
+            np.testing.assert_allclose(
+                np.asarray(op.laplacian_masked(y, tbl[k])),
+                np.asarray(y) - Wk @ np.asarray(y),
+                atol=1e-5, rtol=1e-5)
+
+    def test_all_ones_mask_is_bitwise_noop(self):
+        _, op, _, y = self._setup()
+        ones = jnp.ones(op.sparse.neighbors.shape, jnp.float32)
+        assert np.array_equal(np.asarray(op.mix_masked(y, ones)),
+                              np.asarray(op.mix(y)))
+
+    def test_isolated_agent_holds_its_value(self):
+        net, op, tr, y = self._setup()
+        tbl = tr.table_masks(op.sparse)
+        # round 0: agent 5 is churned out -> realized self-weight 1
+        out = np.asarray(op.mix_masked(y, tbl[0]))
+        np.testing.assert_allclose(out[5], np.asarray(y)[5], atol=1e-6)
+
+    def test_bad_mask_shape_raises(self):
+        _, op, _, y = self._setup()
+        with pytest.raises(ValueError, match="mask"):
+            op.mix_masked(y, jnp.ones((3, 3), jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# solve() with faults
+# ---------------------------------------------------------------------------
+
+class TestFaultedSolve:
+    def test_solve_reports_fault_extras(self):
+        prob = quadratic_bilevel(8, 3, 6, seed=0)
+        net = make_network("ring", 8)
+        res = solve(prob, net, _spec(faults=FaultSpec(drop_prob=0.3,
+                                                      seed=1)))
+        assert isinstance(res.extras["fault_trace"], FaultTrace)
+        frac = res.extras["fault_alive_fraction"]
+        assert 0.0 < frac < 1.0
+        assert np.isfinite(np.asarray(res.x)).all()
+
+    def test_all_alive_faultspec_bitexact_with_fault_free(self):
+        """The regression contract: a trivial FaultSpec (all-ones
+        masks) must reproduce the fault-free trajectory bit-for-bit."""
+        prob = quadratic_bilevel(8, 3, 6, seed=0)
+        net = make_network("ring", 8)
+        clean = solve(prob, net, _spec())
+        masked = solve(prob, net, _spec(faults=FaultSpec()))
+        assert np.array_equal(np.asarray(clean.x), np.asarray(masked.x))
+        assert np.array_equal(np.asarray(clean.y), np.asarray(masked.y))
+
+    def test_fault_traces_share_one_compile(self):
+        """Masks are traced operands: one jitted chunk program serves
+        every fault schedule with zero retraces."""
+        from repro.core.dagm import (RoundHP, dagm_init_carry,
+                                     dagm_run_chunk)
+        from repro.solve.spec import mixing_kwargs
+        prob = quadratic_bilevel(8, 3, 6, seed=0)
+        net = make_network("ring", 8)
+        spec = _spec(K=6)
+        W = make_mixing_op(net, **mixing_kwargs(spec))
+        carry0 = dagm_init_carry(prob, W, spec, seed=0)
+        sched = spec.schedule.materialize(spec.K)
+        hp = RoundHP(*(jnp.asarray(a, jnp.float32)
+                       for a in (sched.alpha, sched.beta, sched.gamma)))
+        traces = {"n": 0}
+
+        @jax.jit
+        def run(carry, hp, masks):
+            traces["n"] += 1
+            return dagm_run_chunk(prob, W, spec, carry, spec.K,
+                                  hp=hp, masks=masks)
+
+        for fs in (FaultSpec(), FaultSpec(drop_prob=0.3, seed=1),
+                   FaultSpec(drop_prob=0.6, seed=2),
+                   FaultSpec(stragglers=(3,), seed=3)):
+            tr = lower_faults(fs, net, spec.K)
+            masks = jnp.asarray(tr.table_masks(W.sparse), jnp.float32)
+            ((x, _), _), _ = run(carry0, hp, masks)
+            assert np.isfinite(np.asarray(x)).all()
+        assert traces["n"] == 1
+
+    def test_validate_spec_rejects_bad_fault_configs(self):
+        with pytest.raises(ValueError, match="tier"):
+            validate_spec(_spec(faults=FaultSpec(drop_prob=0.1),
+                                tier="serve"))
+        with pytest.raises(ValueError, match="FaultSpec"):
+            validate_spec(_spec(faults={"drop_prob": 0.1}))
+
+    def test_serve_jobs_reject_faults(self):
+        from repro.serve import ServeEngine, JobSpec
+        eng = ServeEngine(chunk_rounds=4)
+        job = JobSpec("quadratic", {"n": 8, "d1": 3, "d2": 6, "seed": 0},
+                      _spec(faults=FaultSpec(drop_prob=0.1)))
+        with pytest.raises(ValueError, match="fault"):
+            eng.submit(job)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint satellites
+# ---------------------------------------------------------------------------
+
+class TestCheckpointHygiene:
+    def test_sweep_stale_and_latest_step_ignore_tmp(self, tmp_path):
+        d = str(tmp_path)
+        ckpt.save_checkpoint(d, 3, {"a": jnp.arange(4.0)})
+        # simulate a crash mid-save at a LATER step
+        with open(os.path.join(d, "step_00000009.npz.tmp.npz"),
+                  "wb") as f:
+            f.write(b"torn")
+        assert ckpt.latest_step(d) == 3
+        assert ckpt.checkpoint_steps(d) == [3]
+        removed = ckpt.sweep_stale(d)
+        assert len(removed) == 1
+        assert not any(f.endswith(".tmp.npz") for f in os.listdir(d))
+        # the next save also sweeps
+        with open(os.path.join(d, "junk.tmp.npz"), "wb") as f:
+            f.write(b"torn")
+        ckpt.save_checkpoint(d, 4, {"a": jnp.arange(4.0)})
+        assert not any(f.endswith(".tmp.npz") for f in os.listdir(d))
+
+    def test_keep_last_pruning(self, tmp_path):
+        d = str(tmp_path)
+        for s in range(6):
+            ckpt.save_checkpoint(d, s, {"a": jnp.ones(2) * s},
+                                 keep_last=3)
+        assert ckpt.checkpoint_steps(d) == [3, 4, 5]
+        with pytest.raises(ValueError, match="keep_last"):
+            ckpt.prune_checkpoints(d, 0)
+
+    def test_restore_roundtrip_with_bf16(self, tmp_path):
+        d = str(tmp_path)
+        tree = {"w": jnp.arange(6.0).reshape(2, 3),
+                "h": jnp.ones((4,), jnp.bfloat16) * 1.5}
+        ckpt.save_checkpoint(d, 0, tree)
+        back = ckpt.restore_checkpoint(d, 0, jax.tree.map(
+            jnp.zeros_like, tree))
+        assert np.array_equal(np.asarray(back["w"]),
+                              np.asarray(tree["w"]))
+        assert back["h"].dtype == jnp.bfloat16
+        assert np.array_equal(np.asarray(back["h"], np.float32),
+                              np.asarray(tree["h"], np.float32))
+
+    def test_restore_shape_mismatch_raises(self, tmp_path):
+        d = str(tmp_path)
+        ckpt.save_checkpoint(d, 0, {"a": jnp.ones((2, 2))})
+        with pytest.raises(ValueError, match="shape mismatch"):
+            ckpt.restore_checkpoint(d, 0, {"a": jnp.ones((3,))})
+
+
+# ---------------------------------------------------------------------------
+# serve engine crash safety
+# ---------------------------------------------------------------------------
+
+def _jobs(n_jobs=4, K=12, poison_slot=None):
+    from repro.serve import JobSpec
+    cfg = _spec(K=K, mixing="auto")
+    specs = []
+    for s in range(n_jobs):
+        c = cfg
+        if s == poison_slot:
+            c = dataclasses.replace(
+                c, schedule=dataclasses.replace(c.schedule, alpha=1e12))
+        specs.append(JobSpec("quadratic",
+                             {"n": 8, "d1": 3, "d2": 6, "seed": s},
+                             c, seed=s, job_id=f"j{s}"))
+    return specs
+
+
+def _engine(**kw):
+    from repro.serve import ServeEngine
+    return ServeEngine(chunk_rounds=4, max_width=4, hp_mode="traced",
+                       **kw)
+
+
+class TestEngineCrashSafety:
+    def test_crash_restore_resume_bitexact(self, tmp_path):
+        from repro.serve import SimulatedCrash
+        d = str(tmp_path)
+        eng = _engine(checkpoint_dir=d, crash_after_chunks=2)
+        eng.submit(_jobs())
+        with pytest.raises(SimulatedCrash):
+            eng.run()
+        assert ckpt.latest_step(d) is not None
+
+        res = _engine(checkpoint_dir=d)
+        results = {r.job_id: r for r in res.run()}
+        assert res.stats.restarts == 1
+        assert not os.listdir(d)          # success clears the dir
+
+        base = _engine()
+        base.submit(_jobs())
+        for r in base.run():
+            got = results[r.job_id]
+            assert np.array_equal(got.x, r.x)
+            assert np.array_equal(got.y, r.y)
+            assert got.rounds == r.rounds and got.sends == r.sends
+
+    def test_resume_rejects_mismatched_chunking(self, tmp_path):
+        from repro.serve import SimulatedCrash
+        d = str(tmp_path)
+        eng = _engine(checkpoint_dir=d, crash_after_chunks=1)
+        eng.submit(_jobs())
+        with pytest.raises(SimulatedCrash):
+            eng.run()
+        from repro.serve import ServeEngine
+        bad = ServeEngine(chunk_rounds=6, max_width=4,
+                          checkpoint_dir=d)
+        with pytest.raises(ValueError, match="chunk_rounds"):
+            bad.run()
+
+    def test_clean_run_leaves_no_checkpoints(self, tmp_path):
+        d = str(tmp_path)
+        eng = _engine(checkpoint_dir=d)
+        eng.submit(_jobs(n_jobs=2))
+        results = eng.run()
+        assert len(results) == 2 and eng.stats.checkpoints > 0
+        assert not os.listdir(d)
+
+    def test_quarantine_rolls_back_and_spares_tenants(self):
+        eng = _engine()
+        eng.submit(_jobs(n_jobs=3, poison_slot=1))
+        results = {r.job_id: r for r in eng.run()}
+        bad = results["j1"]
+        assert bad.quarantined and not bad.converged
+        assert bad.rounds == 0                 # poisoned chunk undone
+        assert np.isfinite(bad.x).all()        # pre-chunk state
+        assert eng.stats.quarantined == 1
+        # healthy tenants are bit-exact with a poison-free bucket...
+        solo = _engine()
+        solo.submit([s for s in _jobs(n_jobs=3) if s.job_id != "j1"])
+        for r in solo.run():
+            assert np.array_equal(results[r.job_id].x, r.x)
+            assert not results[r.job_id].quarantined
+
+    def test_retry_transient_then_succeed(self):
+        eng = _engine(max_chunk_retries=2, retry_backoff_s=0.0)
+        calls = {"n": 0}
+
+        def flaky(*args):
+            calls["n"] += 1
+            if calls["n"] < 3:
+                raise RuntimeError("transient device weather")
+            return "ok"
+
+        assert eng._invoke_chunk(flaky, ()) == "ok"
+        assert eng.stats.retries == 2 and calls["n"] == 3
+
+    def test_retry_gives_up_and_skips_bug_classes(self):
+        eng = _engine(max_chunk_retries=1, retry_backoff_s=0.0)
+
+        def always(*args):
+            raise RuntimeError("hard down")
+        with pytest.raises(RuntimeError, match="hard down"):
+            eng._invoke_chunk(always, ())
+
+        def bug(*args):
+            raise ValueError("shape bug")
+        with pytest.raises(ValueError, match="shape bug"):
+            eng._invoke_chunk(bug, ())
+
+    def test_submit_rejects_duplicate_ids(self):
+        eng = _engine()
+        jobs = _jobs(n_jobs=2)
+        dup = dataclasses.replace(jobs[1], job_id="j0")
+        with pytest.raises(ValueError, match="duplicate job_id"):
+            eng.submit([jobs[0], dup])
+
+    def test_submit_rejects_tol_without_chunk_boundary(self):
+        eng = _engine()                        # chunk_rounds=4
+        job = dataclasses.replace(_jobs(K=13)[0], tol=1e-3)
+        with pytest.raises(ValueError, match="chunk boundary"):
+            eng.submit(job)
+        # the same K without a tol is fine (single-chunk run)
+        eng.submit(_jobs(K=13)[1])
+
+    def test_checkpointing_engine_rejects_callable_family(self,
+                                                          tmp_path):
+        eng = _engine(checkpoint_dir=str(tmp_path))
+        prob = quadratic_bilevel(8, 3, 6, seed=0)
+        job = dataclasses.replace(_jobs()[0], family=lambda **kw: prob,
+                                  problem={})
+        with pytest.raises(ValueError, match="pickle"):
+            eng.submit(job)

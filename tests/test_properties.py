@@ -257,6 +257,48 @@ def test_serve_bucket_reproduces_solo_bitexact(n_jobs, seed, alpha, beta):
     assert per_job.sum() == led.total_bytes
 
 
+# ---------------------------------------------------------------------------
+# repro.faults degradation invariants
+# ---------------------------------------------------------------------------
+
+@given(n=st.integers(4, 16), r=st.floats(0.2, 0.9),
+       seed=st.integers(0, 10_000), drop=st.floats(0.0, 0.8))
+@settings(**SETTINGS)
+def test_fault_masked_metropolis_stays_doubly_stochastic(n, r, seed,
+                                                         drop):
+    """The repro.faults degradation invariant: for ANY symmetric edge
+    mask on ANY Erdős–Rényi Metropolis matrix, the realized W_k (dropped
+    off-diagonal weight folded into the self-weights) stays nonnegative,
+    symmetric, doubly stochastic with self-weights inside Assumption A's
+    [θ, 1] — and the table-space masked mix equals the dense realized-W
+    matmul."""
+    from repro.faults import realized_W
+    net = mx.make_network("erdos_renyi", n, r=r, seed=seed)
+    rng = np.random.default_rng(seed)
+    mask = rng.random((n, n)) >= drop
+    mask = np.triu(mask, 1)
+    mask = mask | mask.T | np.eye(n, dtype=bool)
+
+    Wk = realized_W(net.W, mask)
+    assert np.all(Wk >= -1e-12)
+    np.testing.assert_allclose(Wk, Wk.T, atol=1e-12)
+    np.testing.assert_allclose(Wk.sum(1), np.ones(n), atol=1e-9)
+    np.testing.assert_allclose(Wk.sum(0), np.ones(n), atol=1e-9)
+    theta, _ = net.theta_bounds
+    diag = np.diag(Wk)
+    assert np.all(diag >= theta - 1e-9)
+    assert np.all(diag <= 1.0 + 1e-12)
+
+    op = mx.make_mixing_op(net, backend="sparse_gather")
+    y = jax.random.normal(jax.random.PRNGKey(seed), (n, 8))
+    rows = np.arange(n)[:, None]
+    tbl = mask[rows, op.sparse.neighbors].astype(np.float32)
+    np.testing.assert_allclose(
+        np.asarray(op.mix_masked(y, tbl)),
+        Wk.astype(np.float32) @ np.asarray(y),
+        atol=1e-5, rtol=1e-5)
+
+
 @given(b=st.integers(1, 3), s=st.sampled_from([8, 16]),
        v=st.sampled_from([32, 64]), seed=st.integers(0, 500))
 @settings(**SETTINGS)
