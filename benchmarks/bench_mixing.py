@@ -14,7 +14,14 @@ and, per irregular (Erdős–Rényi) topology:
   * sparse Pallas — the per-row scalar-prefetched gather kernel
                     (interpret-mode validation timing),
 
-plus the fused vs unfused DIHGP Neumann step.  Each row reports the
+plus the fused vs unfused DIHGP Neumann step, the comm-fused quantize+
+mix kernels vs the XLA compress→mix→decompress compose (with modeled
+HBM traffic from benchmarks.roofline.mixing_traffic_model and a
+`retraces` count — 0 means the second call with fresh operands hit the
+jit cache), the row-tiled halo kernels at n = 4096 (past the full-
+stripe VMEM budget), and an end-to-end int8+EF DAGM run fused vs
+unfused (gap ratio must sit inside the bench_comm 1.1× tolerance).
+Each row reports the
 FLOPs of both formulations; `speedup_vs_dense` is measured wall-clock,
 `work_ratio` (= dense FLOPs / sparse FLOPs; n/(2k+1) circulant,
 n²/(nnz+n) irregular) is the FLOPs-proportional speedup the backend
@@ -34,13 +41,21 @@ import os
 import jax
 import jax.numpy as jnp
 
-from repro.core import make_mixing_op, make_network
+from repro.comm import channel_init
+from repro.core import make_mixing_op, make_network, quadratic_bilevel
 from repro.core.mixing import circulant_structure, fused_neumann_step
+from repro.kernels import ops as kops
 from repro.kernels.mixing_matvec import (circulant_mix_matvec,
-                                         sparse_mix_matvec)
+                                         circulant_mix_matvec_halo,
+                                         pick_halo_bn,
+                                         sparse_mix_matvec,
+                                         stripe_vmem_bytes,
+                                         VMEM_BUDGET_BYTES)
+from repro.solve import dagm_spec, solve
 from repro.topology import sparse_structure
 
 from .common import Row, timed
+from .roofline import mixing_traffic_model
 
 SMOKE_AWARE = True   # genuine cheap smoke tier (benchmarks.run contract)
 RESULTS = os.path.join(os.path.dirname(__file__), "results",
@@ -180,6 +195,134 @@ def _bench_fused_neumann(n: int, d: int, iters: int) -> list[Row]:
     ]
 
 
+def _jit_counting_retraces(fn):
+    """jit(fn) plus a live trace counter: `retraces` per bench row is
+    calls_with_fresh_operands − 1 and must be 0 (the fused kernels keep
+    seed/zp/scale as traced operands, so new values never respecialize)."""
+    cnt = {"n": 0}
+
+    def traced(*a):
+        cnt["n"] += 1
+        return fn(*a)
+
+    return jax.jit(traced), cnt
+
+
+def _bench_fused_comm(n: int, d: int, iters: int) -> list[Row]:
+    """Comm-fused kernel vs the XLA compress→mix→decompress compose,
+    through MixingOp.mix_c so dispatch (and the ChannelState protocol)
+    is part of what's timed."""
+    net = make_network("circulant", n, offsets=(1, 2))
+    y = jax.random.normal(jax.random.PRNGKey(n + d), (n, d), jnp.float32)
+    rows = []
+    for spec in ("int8", "int8+ef"):
+        ef = spec.endswith("+ef")
+        model = mixing_traffic_model(n, d, ef=ef)
+        tag = f"mixing/fused_n{n}_d{d}/{spec}"
+        xla_op = make_mixing_op(net, backend="circulant", comm=spec)
+        st0 = channel_init(xla_op.comm, "x", y, jax.random.PRNGKey(0))
+        unfused, c_un = _jit_counting_retraces(
+            lambda z, op=xla_op: op.mix_c(z, st0)[0])
+        with kops.pallas_mode(True):
+            fop = make_mixing_op(net, comm=spec)
+            assert fop._fused_plan(y) is not None
+            fused, c_fu = _jit_counting_retraces(
+                lambda z, op=fop: op.mix_c(z, st0)[0])
+            us_un, us_fu = _paired_best(unfused, fused, y, iters)
+            # second operand value, same shape: must hit the jit cache
+            fused(y + 1.0).block_until_ready()
+            unfused(y + 1.0).block_until_ready()
+        common = {"modeled_unfused_bytes": model["unfused_bytes"],
+                  "modeled_fused_bytes": model["fused_bytes"],
+                  "traffic_reduction": model["traffic_reduction"],
+                  "note": "interpret-mode validation timing"}
+        rows.append(Row(f"{tag}/unfused", us_un,
+                        {**common, "retraces": c_un["n"] - 1}))
+        rows.append(Row(f"{tag}/fused", us_fu,
+                        {**common, "retraces": c_fu["n"] - 1,
+                         "speedup_vs_unfused": round(us_un / us_fu, 3)}))
+    return rows
+
+
+def _bench_halo(n: int, d: int, iters: int) -> list[Row]:
+    """Row-tiled halo kernel rows past (or at smoke size, below) the
+    full-stripe VMEM ceiling: plain laplacian vs the XLA circulant path
+    and the comm-fused int8 variant."""
+    net = make_network("circulant", n, offsets=(1, 2))
+    s = circulant_structure(net.W)
+    y = jax.random.normal(jax.random.PRNGKey(n + d), (n, d), jnp.float32)
+    over = stripe_vmem_bytes(n) > VMEM_BUDGET_BYTES
+    bn = pick_halo_bn(n, h_lo=2, h_hi=2) or min(n, 256)
+    interp = kops.pallas_interpret()
+    tag = f"mixing/halo_n{n}_d{d}"
+    xla_op = make_mixing_op(net, backend="circulant")
+    plain, c_pl = _jit_counting_retraces(
+        lambda z: circulant_mix_matvec_halo(
+            z, w_self=s.w_self, offsets=s.offsets, weights=s.weights,
+            laplacian=True, bn=bn, interpret=interp))
+    us_xla, us_halo = _paired_best(jax.jit(xla_op.laplacian), plain, y,
+                                   iters)
+    plain(y + 1.0).block_until_ready()
+    rows = [Row(f"{tag}/circulant_xla", us_xla,
+                {"full_stripe_exceeds_vmem": over}),
+            Row(f"{tag}/halo_interpret", us_halo,
+                {"bn": bn, "full_stripe_exceeds_vmem": over,
+                 "retraces": c_pl["n"] - 1,
+                 "note": "interpret-mode validation timing"})]
+
+    model = mixing_traffic_model(n, d, ef=False)
+    from repro.comm import row_quant_params
+    zp, sc = row_quant_params(y, 8)
+    seed = jnp.zeros((1,), jnp.int32)
+    fused, c_fu = _jit_counting_retraces(
+        lambda z, zp_, sc_, sd: circulant_mix_matvec_halo(
+            z, zp_, sc_, sd, w_self=s.w_self, offsets=s.offsets,
+            weights=s.weights, bn=bn, interpret=interp, comm="int8"))
+    _, us_fu = timed(lambda z: fused(z, zp, sc, seed), y,
+                     iters=max(1, iters // 10), warmup=1)
+    fused(y + 1.0, zp, sc, seed + 1).block_until_ready()
+    rows.append(Row(f"{tag}/halo_fused_int8_interpret", us_fu,
+                    {"bn": bn, "retraces": c_fu["n"] - 1,
+                     "modeled_fused_bytes": model["fused_bytes"],
+                     "traffic_reduction": model["traffic_reduction"],
+                     "note": "interpret-mode validation timing"}))
+    return rows
+
+
+def _bench_fused_dagm(K: int, M: int, U: int) -> list[Row]:
+    """End-to-end DAGM with int8+EF gossip, fused kernels vs the XLA
+    compose: same key-advance protocol, different stochastic-rounding
+    draws, so the final hypergradient gaps must agree within the
+    bench_comm matched-final-gap tolerance (1.1×)."""
+    prob = quadratic_bilevel(8, 128, 128, seed=0)
+    net = make_network("ring", 8)
+    cfg = dagm_spec(alpha=0.05, beta=0.1, K=K, M=M, U=U,
+                    dihgp="matrix_free", curvature=5.5, comm="int8+ef")
+    x0 = jnp.broadcast_to(
+        2.0 * jax.random.normal(jax.random.PRNGKey(7), (prob.d1,)),
+        (prob.n, prob.d1)).astype(jnp.float32)
+
+    def gap(res):
+        xbar = jnp.mean(res.x, axis=0)
+        return float(jnp.sum(prob.hypergrad(xbar) ** 2))
+
+    res_u, us_u = timed(lambda: solve(prob, net, cfg, x0=x0, seed=0),
+                        iters=1)
+    with kops.pallas_mode(True):
+        res_f, us_f = timed(lambda: solve(prob, net, cfg, x0=x0, seed=0),
+                            iters=1)
+    g_u, g_f = gap(res_u), gap(res_f)
+    ratio = g_f / max(g_u, 1e-30)
+    return [Row(f"mixing/dagm_e2e_int8ef_K{K}/unfused", us_u,
+                {"final_gap": f"{g_u:.3e}"}),
+            Row(f"mixing/dagm_e2e_int8ef_K{K}/fused", us_f,
+                {"final_gap": f"{g_f:.3e}",
+                 "gap_vs_unfused": round(ratio, 3),
+                 "tolerance": 1.1,
+                 "within_tolerance": bool(ratio <= 1.1
+                                          and 1 / ratio <= 1.1)})]
+
+
 def run(budget: str = "small") -> list[Row]:
     write_json = True
     if budget == "full":
@@ -187,25 +330,33 @@ def run(budget: str = "small") -> list[Row]:
                  for d in (1024, 4096, 16384) for hops in (1, 2)]
         er_cases = [(64, 1024, 0.1), (256, 1024, 0.05), (256, 2048, 0.05),
                     (256, 1024, 0.1), (256, 4096, 0.05)]
-        iters, with_pallas = 100, True
+        fused_cases, halo_case = [(64, 4096), (256, 4096)], (4096, 1024)
+        dagm_K, iters, with_pallas = 100, 100, True
     elif budget == "smoke":
-        # scripts/ci.sh tier-2 smoke: exercise every backend row once,
-        # keep the checked-in JSON (measured on a quiet box) untouched
+        # scripts/ci.sh tier-2 smoke: exercise every backend row once
+        # (fused, halo and e2e rows included), keep the checked-in JSON
+        # (measured on a quiet box) untouched
         cases = [(8, 512, 1)]
         er_cases = [(16, 512, 0.3)]
-        iters, with_pallas, write_json = 5, True, False
+        fused_cases, halo_case = [(16, 512)], (64, 256)
+        dagm_K, iters, with_pallas, write_json = 20, 5, True, False
     else:
         cases = [(8, 4096, 1), (64, 4096, 1), (64, 4096, 2),
                  (256, 4096, 1)]
         er_cases = [(256, 1024, 0.05), (256, 2048, 0.05),
                     (256, 1024, 0.1)]
-        iters, with_pallas = 100, True
+        fused_cases, halo_case = [(64, 4096), (256, 4096)], (4096, 1024)
+        dagm_K, iters, with_pallas = 60, 100, True
     rows = []
     for n, d, hops in cases:
         rows.extend(_bench_case(n, d, hops, iters, with_pallas))
     for n, d, r in er_cases:
         rows.extend(_bench_er_case(n, d, r, iters, with_pallas))
     rows.extend(_bench_fused_neumann(64, 4096, iters))
+    for n, d in fused_cases:
+        rows.extend(_bench_fused_comm(n, d, max(2, iters // 10)))
+    rows.extend(_bench_halo(*halo_case, max(1, iters // 20)))
+    rows.extend(_bench_fused_dagm(dagm_K, 5, 3))
 
     if write_json:
         os.makedirs(os.path.dirname(RESULTS), exist_ok=True)

@@ -41,6 +41,12 @@ echo "=== tier 2: bench smoke (mixing backends) ==="
 # benchmarks/results JSON
 python -m benchmarks.run --only mixing --budget smoke
 
+echo "=== tier 2: bench smoke (roofline: comm-fused mixing) ==="
+# modeled HBM traffic (3.0× / 2.5× reduction, unfused vs fused) plus
+# interpret-mode wall-clock validation of both gossip paths; rerun
+# with REPRO_PALLAS_INTERPRET=0 on a TPU to measure compiled kernels
+python -m benchmarks.run --only roofline --budget smoke
+
 echo "=== tier 2: bench smoke (compressed gossip) ==="
 # one tiny DAGM pass per compressor family (identity / bf16 / int8+ef /
 # top_k+ef / rand_k+ef) with ledger byte accounting; no JSON rewrite

@@ -24,7 +24,8 @@ uncompressed trajectories bit-for-bit.
 from .compressors import (BF16_BYTES, Bf16Compressor, CommPolicy,
                           Compressor, F32_BYTES, RandKCompressor,
                           StochasticQuantCompressor, TopKCompressor,
-                          make_compressor, parse_comm_spec)
+                          make_compressor, parse_comm_spec,
+                          row_quant_params)
 from .feedback import (ChannelState, channel_init, channel_keys,
                        compressed_payload, compressed_payload_local,
                        open_channels)
@@ -36,5 +37,5 @@ __all__ = [
     "RandKCompressor", "StochasticQuantCompressor", "TopKCompressor",
     "channel_init", "channel_keys", "compressed_payload",
     "compressed_payload_local", "make_compressor", "open_channels",
-    "parse_comm_spec", "static_ledger",
+    "parse_comm_spec", "row_quant_params", "static_ledger",
 ]

@@ -58,11 +58,40 @@ def _rows(x: Array) -> Array:
     return x.reshape(x.shape[0], -1)
 
 
+def row_quant_params(flat: Array, bits: int) -> tuple[Array, Array]:
+    """Per-row (zero-point, scale) of the `bits`-bit stochastic
+    quantizer, each rounded through bf16 because that is what the wire
+    carries (`QUANT_META_BYTES`).
+
+    Single source of truth for the wire metadata: both
+    `StochasticQuantCompressor.roundtrip` and the fused Pallas mixing
+    kernels (`repro.kernels.mixing_matvec`, `comm=` lowering) call this
+    on the same operand, so the in-kernel quantizer and the XLA
+    roundtrip agree bitwise on zp/scale — the only thing that differs
+    between the two paths is the source of the stochastic-rounding
+    uniforms.  flat: (n, F); returns two (n, 1) f32 arrays.
+    """
+    levels = float(2 ** bits - 1)
+    zp = jnp.min(flat, axis=1, keepdims=True)
+    zp = zp.astype(jnp.bfloat16).astype(jnp.float32)
+    span = jnp.max(flat, axis=1, keepdims=True) - zp
+    scale = jnp.where(span > 0.0, span / levels, 1.0)
+    # inflate by one bf16 ulp before rounding so the top code never
+    # clips by more than stochastic-rounding noise
+    scale = (scale * (1.0 + 2.0 ** -7)).astype(jnp.bfloat16) \
+        .astype(jnp.float32)
+    return zp, scale
+
+
 @dataclasses.dataclass(frozen=True)
 class Compressor:
     """Base: the identity wire (full-precision f32 vectors)."""
     name: str = "identity"
     stochastic: bool = False
+    # a fusable compressor's roundtrip can be computed inside the Pallas
+    # mixing kernels from per-row (zp, scale) metadata alone — see
+    # `row_quant_params` and `repro.kernels.mixing_matvec`
+    fusable: bool = False
 
     def roundtrip(self, x: Array, key=None) -> Array:
         return x
@@ -97,20 +126,22 @@ class StochasticQuantCompressor(Compressor):
     (E⌊z + u⌋ = z), so E[decode] = x up to the bf16 metadata rounding.
     The scale is inflated by one bf16 ulp before rounding so the top
     code never clips by more than stochastic-rounding noise.
+
+    `fusable`: this roundtrip is exactly per-row (zp, scale) metadata +
+    elementwise stochastic rounding, so the Pallas mixing kernels can
+    apply it inside the gather loop (`MixingOp` selects that path when
+    Pallas is enabled — same `row_quant_params` metadata, same payload
+    bytes, in-kernel uniforms instead of `jax.random.uniform`).
     """
     name: str = "int8"
     stochastic: bool = True
+    fusable: bool = True
     bits: int = 8
 
     def roundtrip(self, x: Array, key=None) -> Array:
         levels = float(2 ** self.bits - 1)
         flat = _rows(x).astype(jnp.float32)
-        zp = jnp.min(flat, axis=1, keepdims=True)
-        zp = zp.astype(jnp.bfloat16).astype(jnp.float32)
-        span = jnp.max(flat, axis=1, keepdims=True) - zp
-        scale = jnp.where(span > 0.0, span / levels, 1.0)
-        scale = (scale * (1.0 + 2.0 ** -7)).astype(jnp.bfloat16) \
-            .astype(jnp.float32)
+        zp, scale = row_quant_params(flat, self.bits)
         u = jax.random.uniform(key, flat.shape, jnp.float32)
         q = jnp.clip(jnp.floor((flat - zp) / scale + u), 0.0, levels)
         return (zp + scale * q).astype(x.dtype).reshape(x.shape)
@@ -222,6 +253,14 @@ class CommPolicy:
     @property
     def stochastic(self) -> bool:
         return self.compressor.stochastic
+
+    @property
+    def fusable(self) -> bool:
+        """True when the compress→mix→decompress of this policy can run
+        inside the Pallas mixing kernels (int8/int4 row quantizers, with
+        or without error feedback); identity/bf16/top-k/rand-k gossip
+        keeps today's XLA compose path bitwise-identically."""
+        return self.compressor.fusable
 
 
 def parse_comm_spec(spec: str) -> CommPolicy:

@@ -1,3 +1,4 @@
 """Pallas TPU kernels for the perf-critical compute hot-spots, each with
 a pure-jnp oracle in ref.py and a jit wrapper in ops.py."""
-from .ops import use_pallas, ring_laplacian, attention, wkv
+from .ops import (attention, pallas_interpret, pallas_mode,
+                  ring_laplacian, use_pallas, wkv)

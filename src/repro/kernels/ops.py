@@ -1,15 +1,26 @@
 """Jit'd public entry points for the Pallas kernels.
 
-`use_pallas(True)` switches the hot paths from the pure-jnp oracles
-(CPU default / dry-run path) to the Pallas kernels (TPU target;
-`interpret=True` executes them on CPU for validation).  Tests sweep
-shapes/dtypes through both and assert allclose.
+`pallas_mode(True)` (a context manager) switches the hot paths from the
+pure-jnp oracles (CPU default / dry-run path) to the Pallas kernels
+(TPU target; `interpret=True` executes them on CPU for validation) for
+the duration of the `with` block, restoring the previous mode on exit —
+no state leaks between tests.  `use_pallas(...)` remains as the
+imperative form for scripts that flip the mode for a whole process.
+
+Whether Pallas runs in interpret mode defaults to True (CPU-safe) and
+can be overridden per process with ``REPRO_PALLAS_INTERPRET=0`` for
+real-hardware benchmark runs — `pallas_mode(True)` / `use_pallas(True)`
+with no explicit `interpret=` then compile for the actual TPU, so the
+same benchmark/test invocation works on both targets unchanged.
 
 `repro.topology.ops.MixingOp` consults `pallas_enabled()` so that
 flipping this one switch upgrades every circulant / sparse-gather
 mixing mat-vec in the DAGM hot loop to the Pallas backend as well.
 """
 from __future__ import annotations
+
+import contextlib
+import os
 
 import jax.numpy as jnp
 
@@ -19,10 +30,19 @@ from .mixing_matvec import ring_laplacian_matvec
 from .rwkv6_scan import rwkv6_scan
 
 _USE_PALLAS = False
-_INTERPRET = True        # flip to False on real TPU hardware
+# None = not explicitly set -> fall back to the env default lazily, so
+# REPRO_PALLAS_INTERPRET is honored even when set after import
+_INTERPRET: bool | None = None
 
 
-def use_pallas(enabled: bool, interpret: bool = True) -> None:
+def _env_interpret() -> bool:
+    return os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+def use_pallas(enabled: bool, interpret: bool | None = None) -> None:
+    """Imperative mode switch (whole-process scripts; tests should use
+    `pallas_mode`).  `interpret=None` defers to REPRO_PALLAS_INTERPRET
+    (default interpret=True, i.e. CPU-safe)."""
     global _USE_PALLAS, _INTERPRET
     _USE_PALLAS = enabled
     _INTERPRET = interpret
@@ -30,7 +50,27 @@ def use_pallas(enabled: bool, interpret: bool = True) -> None:
 
 def pallas_enabled() -> tuple[bool, bool]:
     """(enabled, interpret) — read by MixingOp's "auto" backend."""
-    return _USE_PALLAS, _INTERPRET
+    return _USE_PALLAS, pallas_interpret()
+
+
+def pallas_interpret() -> bool:
+    """Effective interpret flag: the explicit `use_pallas`/`pallas_mode`
+    setting if given, else the REPRO_PALLAS_INTERPRET env default."""
+    return _env_interpret() if _INTERPRET is None else _INTERPRET
+
+
+@contextlib.contextmanager
+def pallas_mode(enabled: bool, interpret: bool | None = None):
+    """Scoped Pallas toggle: `with pallas_mode(True): ...` runs the
+    block with Pallas kernels enabled and restores the previous
+    (enabled, interpret) state on exit, exception or not."""
+    global _USE_PALLAS, _INTERPRET
+    saved = (_USE_PALLAS, _INTERPRET)
+    _USE_PALLAS, _INTERPRET = enabled, interpret
+    try:
+        yield
+    finally:
+        _USE_PALLAS, _INTERPRET = saved
 
 
 def ring_laplacian(y, w_self: float, w_edge: float):
@@ -42,7 +82,7 @@ def ring_laplacian(y, w_self: float, w_edge: float):
     if _USE_PALLAS and sub is not None and y.ndim == 2 \
             and y.shape[0] % sub == 0 and y.shape[1] % 128 == 0:
         return ring_laplacian_matvec(y, w_self=w_self, w_edge=w_edge,
-                                     interpret=_INTERPRET)
+                                     interpret=pallas_interpret())
     return ref.ring_laplacian_ref(y, w_self, w_edge)
 
 
@@ -50,7 +90,7 @@ def attention(q, k, v, *, causal: bool = True, window: int = 0):
     """Softmax attention (same-head-count q/k/v)."""
     if _USE_PALLAS and q.shape[1] % 128 == 0:
         return flash_attention(q, k, v, causal=causal, window=window,
-                               interpret=_INTERPRET)
+                               interpret=pallas_interpret())
     return ref.attention_ref(q, k, v, causal=causal, window=window)
 
 
@@ -58,5 +98,5 @@ def wkv(r, k, v, logw, u, *, chunk: int = 64):
     """RWKV6 WKV mix."""
     if _USE_PALLAS and r.shape[1] % chunk == 0:
         return rwkv6_scan(r, k, v, logw, u, chunk=chunk,
-                          interpret=_INTERPRET).astype(jnp.float32)
+                          interpret=pallas_interpret()).astype(jnp.float32)
     return ref.rwkv6_ref(r, k, v, logw, u)[0]

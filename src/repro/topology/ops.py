@@ -71,6 +71,21 @@ actual compressor calls.  `comm="identity"` short-circuits every `*_c`
 call onto the uncompressed code path (bit-identical trajectories, only
 the counters tick).
 
+When the policy is a *fusable* quantizer (int8/int4, ± EF) and the
+Pallas tier is active, the `*_c` calls run the comm-fused kernels
+instead: one VMEM traversal performs compress→mix→decompress (and, on
+the full-stripe circulant tier without EF, the whole Neumann update) —
+same `row_quant_params` wire metadata, same ChannelState advance, same
+payload-byte accounting; only the stochastic-rounding uniforms come
+from the in-kernel counter PRNG instead of `jax.random.uniform`
+(statistically equivalent by the quantizer's unbiasedness).  Identity /
+bf16 / top-k / rand-k policies, bf16 storage, masked views and
+non-tileable shapes keep today's XLA compose path bitwise-identically.
+Oversized agent counts (full stripe past the kernels' VMEM budget)
+switch to the row-tiled halo kernels automatically — `_stripe_plan` /
+`pick_halo_bn` — and every impossible-tier case falls back silently
+with a one-time RuntimeWarning naming the shape.
+
 Fault-masked mixing (`repro.faults`)
 ------------------------------------
 `MixingOp.masked(mask)` returns a `MaskedMixingOp` view applying this
@@ -99,9 +114,11 @@ path end-to-end with no call-site branching.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Sequence
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 from .graphs import (circulant_graph, complete_graph, erdos_renyi_graph,
@@ -189,6 +206,22 @@ BACKENDS = ("auto", "dense", "circulant", "circulant_pallas",
             "sparse_gather", "sparse_gather_pallas")
 
 MIXING_DTYPES = ("f32", "bf16")
+
+# one warning per (op name, kind, detail) — Pallas fallbacks must never
+# raise out of a jitted hot loop, but the user should learn once why a
+# requested tier is not running
+_FALLBACK_WARNED: set = set()
+
+
+def _warn_pallas_fallback(name: str, kind: str, detail: str) -> None:
+    key = (name, kind, detail)
+    if key in _FALLBACK_WARNED:
+        return
+    _FALLBACK_WARNED.add(key)
+    warnings.warn(
+        f"MixingOp({name}): {kind} falling back to the XLA path — "
+        f"{detail} (warned once per op/shape)", RuntimeWarning,
+        stacklevel=3)
 
 
 def resolve_mixing_dtype(name: str):
@@ -316,13 +349,22 @@ class MixingOp:
             if self._pallas_ok(flat):
                 self._interp_now = self.interpret
                 return "circulant_pallas"
+            self._warn_tiles(backend, flat)
             return "dense"
         if backend == "sparse_gather_pallas":
             if self._pallas_ok(flat):
                 self._interp_now = self.interpret
                 return "sparse_gather_pallas"
+            self._warn_tiles(backend, flat)
             return "sparse_gather"
         return backend
+
+    def _warn_tiles(self, backend: str, flat: jnp.ndarray) -> None:
+        n, d = flat.shape
+        _warn_pallas_fallback(
+            self.name, backend,
+            f"shape ({n}, {d}) dtype {flat.dtype} misses the tile "
+            f"constraints (n % sublane == 0, d % 128 == 0)")
 
     def _pallas_ok(self, flat: jnp.ndarray) -> bool:
         n, d = flat.shape
@@ -333,6 +375,34 @@ class MixingOp:
         else:
             return False
         return n % sublane == 0 and d % 128 == 0
+
+    def _stripe_plan(self, flat: jnp.ndarray, *, blocks: int,
+                     circulant: bool):
+        """("full", None) when the full-stripe kernel's resident
+        (n, bd) blocks fit the VMEM budget, ("halo", bn) to run the
+        row-tiled halo kernel, ("xla", None) when no tile qualifies
+        (caller falls back + warns).  `blocks` is the number of live
+        stripe-sized buffers of the chosen kernel variant (3 plain,
+        4 fused, 6 fused+EF)."""
+        from repro.kernels.mixing_matvec import (VMEM_BUDGET_BYTES,
+                                                 halo_extents,
+                                                 pick_halo_bn,
+                                                 stripe_vmem_bytes)
+        n = flat.shape[0]
+        item = flat.dtype.itemsize
+        if stripe_vmem_bytes(n, itemsize=item, blocks=blocks) \
+                <= VMEM_BUDGET_BYTES:
+            return "full", None
+        sublane = 8 if flat.dtype == jnp.float32 else 16
+        if circulant:
+            h_lo, h_hi = halo_extents(self.structure.offsets, n)
+        else:
+            h_lo = h_hi = 0
+        bn = pick_halo_bn(n, sublane=sublane, h_lo=h_lo, h_hi=h_hi,
+                          itemsize=item, blocks=blocks)
+        if bn is None:
+            return "xla", None
+        return "halo", bn
 
     # -- primitives --------------------------------------------------------
 
@@ -354,19 +424,47 @@ class MixingOp:
             # natively; the XLA paths get an explicit f32 upcast below).
             flat = flat.astype(self.storage_dtype)
         path = self._resolve(self.backend, flat)
+        bn = None
+        if path in ("circulant_pallas", "sparse_gather_pallas"):
+            tier, bn = self._stripe_plan(
+                flat, blocks=3, circulant=path == "circulant_pallas")
+            if tier == "xla":
+                _warn_pallas_fallback(
+                    self.name, path,
+                    f"n={flat.shape[0]} full stripe exceeds the VMEM "
+                    f"budget and no halo row tile divides it")
+                path = "circulant" if path == "circulant_pallas" \
+                    else "sparse_gather"
         if path == "circulant_pallas":
-            from repro.kernels.mixing_matvec import circulant_mix_matvec
+            from repro.kernels.mixing_matvec import (
+                circulant_mix_matvec, circulant_mix_matvec_halo)
             s = self.structure
-            out = circulant_mix_matvec(flat, w_self=s.w_self,
-                                       offsets=s.offsets,
-                                       weights=s.weights,
-                                       laplacian=laplacian,
-                                       interpret=self._interp_now)
+            if bn is None:
+                out = circulant_mix_matvec(flat, w_self=s.w_self,
+                                           offsets=s.offsets,
+                                           weights=s.weights,
+                                           laplacian=laplacian,
+                                           interpret=self._interp_now)
+            else:
+                out = circulant_mix_matvec_halo(flat, w_self=s.w_self,
+                                                offsets=s.offsets,
+                                                weights=s.weights,
+                                                laplacian=laplacian,
+                                                bn=bn,
+                                                interpret=self._interp_now)
         elif path == "sparse_gather_pallas":
-            from repro.kernels.mixing_matvec import sparse_mix_matvec
-            out = sparse_mix_matvec(flat, self._sp_wself, self._sp_idx,
-                                    self._sp_wts, laplacian=laplacian,
-                                    interpret=self._interp_now)
+            from repro.kernels.mixing_matvec import (
+                sparse_mix_matvec, sparse_mix_matvec_halo)
+            if bn is None:
+                out = sparse_mix_matvec(flat, self._sp_wself,
+                                        self._sp_idx, self._sp_wts,
+                                        laplacian=laplacian,
+                                        interpret=self._interp_now)
+            else:
+                out = sparse_mix_matvec_halo(flat, self._sp_wself,
+                                             self._sp_idx, self._sp_wts,
+                                             laplacian=laplacian, bn=bn,
+                                             interpret=self._interp_now)
         else:
             acc = flat if self.storage_dtype is None \
                 else flat.astype(jnp.float32)
@@ -439,15 +537,123 @@ class MixingOp:
         self.ledger.register(name, x.shape[1:], self.comm)
         return channel_init(self.comm, name, x, key)
 
+    # a MaskedMixingOp view must never take the fused kernels (the mask
+    # breaks shift invariance and stays a traced operand)
+    _fusable_view = True
+
+    def _fused_plan(self, flat: jnp.ndarray):
+        """(path, bn) when this gossip can run the comm-fused Pallas
+        kernels (one VMEM traversal for compress→mix→decompress), None
+        to keep the XLA compose path: non-fusable policy (identity /
+        bf16 / top-k / rand-k), bf16 storage, non-f32 operand, masked
+        view, shapes the kernels can't tile, or sparse halo + EF (no
+        payload write-back in that variant).  bn=None → full stripe."""
+        if not self._fusable_view or not self.comm.fusable \
+                or self.storage_dtype is not None \
+                or flat.dtype != jnp.float32:
+            return None
+        path = self._resolve(self.backend, flat)
+        if path not in ("circulant_pallas", "sparse_gather_pallas"):
+            return None
+        ef = self.comm.ef
+        tier, bn = self._stripe_plan(flat, blocks=6 if ef else 4,
+                                     circulant=path == "circulant_pallas")
+        if tier == "full":
+            return path, None
+        if tier == "halo":
+            if path == "sparse_gather_pallas" and ef:
+                _warn_pallas_fallback(
+                    self.name, "fused sparse halo",
+                    "'+ef' needs the full-stripe payload write-back; "
+                    "running the XLA compose path")
+                return None
+            return path, bn
+        _warn_pallas_fallback(
+            self.name, "fused " + path,
+            f"n={flat.shape[0]} full stripe exceeds the VMEM budget "
+            f"and no halo row tile divides it")
+        return None
+
+    def _next_seed(self, st):
+        """Advance the channel key exactly as `compressed_payload`
+        does (split; first half becomes the new state key) and derive
+        the traced int32 seed the kernels' counter PRNG consumes from
+        the second half."""
+        key, sub = jax.random.split(st.key)
+        seed = jax.random.randint(sub, (1,), 0,
+                                  jnp.iinfo(jnp.int32).max, jnp.int32)
+        return key, seed
+
+    def _apply_fused(self, y: jnp.ndarray, flat: jnp.ndarray, st,
+                     laplacian: bool, plan):
+        """One fused compress→mix→decompress gossip (see `_fused_plan`).
+
+        Semantics mirror `compressed_payload` + `_apply` exactly: same
+        `row_quant_params` wire metadata, same state advance (key split,
+        sends + 1, hat ← payload under EF) — only the source of the
+        stochastic-rounding uniforms differs (in-kernel counter PRNG
+        instead of `jax.random.uniform`), which the quantizer's
+        unbiasedness contract makes statistically equivalent."""
+        from repro.comm import row_quant_params
+        from repro.kernels.mixing_matvec import (
+            circulant_mix_matvec, circulant_mix_matvec_halo,
+            sparse_mix_matvec, sparse_mix_matvec_halo)
+        path, bn = plan
+        bits = self.comm.compressor.bits
+        ef = self.comm.ef
+        comm = f"int{bits}" + ("+ef" if ef else "")
+        key, seed = self._next_seed(st)
+        hat = st.hat.reshape(flat.shape) if ef else None
+        src = flat - hat if ef else flat
+        zp, scale = row_quant_params(src, bits)
+        if path == "circulant_pallas":
+            s = self.structure
+            kw = dict(w_self=s.w_self, offsets=s.offsets,
+                      weights=s.weights, laplacian=laplacian, comm=comm,
+                      interpret=self._interp_now)
+            if bn is None:
+                res = circulant_mix_matvec(flat, zp, scale, seed, hat,
+                                           **kw)
+            else:
+                res = circulant_mix_matvec_halo(flat, zp, scale, seed,
+                                                hat, bn=bn, **kw)
+        elif bn is None:
+            res = sparse_mix_matvec(flat, self._sp_wself, self._sp_idx,
+                                    self._sp_wts, zp, scale, seed, hat,
+                                    laplacian=laplacian, comm=comm,
+                                    interpret=self._interp_now)
+        else:
+            res = sparse_mix_matvec_halo(flat, self._sp_wself,
+                                         self._sp_idx, self._sp_wts,
+                                         zp, scale, seed,
+                                         laplacian=laplacian, bn=bn,
+                                         comm=comm,
+                                         interpret=self._interp_now)
+        if ef:
+            out, pay = res
+            st = dataclasses.replace(st, hat=pay.reshape(y.shape),
+                                     key=key, sends=st.sends + 1)
+        else:
+            out = res
+            st = dataclasses.replace(st, key=key, sends=st.sends + 1)
+        return out.astype(y.dtype).reshape(y.shape), st
+
     def _apply_c(self, y: jnp.ndarray, st, laplacian: bool):
         """compress→mix→decompress around one gossip of y (n, ...).
 
         The neighbors mix the decoded payload ŷ; the self-weight term
         w_ii·y_i never crosses the wire, so the backend result W·ŷ is
-        corrected by diag(W)·(y − ŷ) before the (I−W) algebra."""
+        corrected by diag(W)·(y − ŷ) before the (I−W) algebra.  When
+        the policy is a fusable quantizer and the Pallas tier is active
+        the whole sequence runs inside the mixing kernel instead
+        (`_fused_plan` / `_apply_fused`)."""
         from repro.comm import compressed_payload
         if self.comm.is_identity:
             return self._apply(y, laplacian), st.bump()
+        flat = y.reshape(y.shape[0], -1)
+        plan = self._fused_plan(flat)
+        if plan is not None:
+            return self._apply_fused(y, flat, st, laplacian, plan)
         y_hat, st = compressed_payload(self.comm, y, st)
         mixed = self._apply(y_hat, laplacian=False)
         expand = (slice(None),) + (None,) * (y.ndim - 1)
@@ -464,10 +670,39 @@ class MixingOp:
 
     def neumann_step_c(self, h, hvp_h, p, d_scalar, beta: float, st):
         """Fused DIHGP step with the W·h gossip compressed; identity
-        policy keeps today's fused path (Pallas tier included)."""
+        policy keeps today's fused path (Pallas tier included).  A
+        fusable non-EF quantizer on the full-stripe circulant tier runs
+        the comm-fused Neumann kernel — quantize + mix + the whole
+        Eq. 14 update in one traversal; EF and the other tiers compose
+        `mix_c` (itself fused when possible) with the XLA update."""
         if self.comm.is_identity:
             return self.neumann_step(h, hvp_h, p, d_scalar, beta), \
                 st.bump()
+        if not self.comm.ef and self.storage_dtype is None:
+            flat = h.reshape(h.shape[0], -1)
+            plan = self._fused_plan(flat)
+            if plan is not None and plan[0] == "circulant_pallas" \
+                    and plan[1] is None:
+                from repro.comm import row_quant_params
+                from repro.kernels.mixing_matvec import \
+                    circulant_neumann_step
+                if not isinstance(beta, (int, float, np.floating)):
+                    hvp_h = beta * hvp_h
+                    beta = 1.0
+                key, seed = self._next_seed(st)
+                bits = self.comm.compressor.bits
+                zp, scale = row_quant_params(flat, bits)
+                s = self.structure
+                out = circulant_neumann_step(
+                    flat, hvp_h.reshape(flat.shape),
+                    p.reshape(flat.shape),
+                    d_scalar.reshape(h.shape[0], 1).astype(jnp.float32),
+                    zp, scale, seed, w_self=s.w_self, offsets=s.offsets,
+                    weights=s.weights, beta=beta, comm=f"int{bits}",
+                    interpret=self._interp_now)
+                st = dataclasses.replace(st, key=key,
+                                         sends=st.sends + 1)
+                return out.reshape(h.shape), st
         mix, st = self.mix_c(h, st)
         return _neumann_update(mix, h, hvp_h, p, d_scalar, beta), st
 
@@ -517,6 +752,8 @@ class MaskedMixingOp(MixingOp):
     (masks break shift invariance, and the Pallas kernels bake their
     weight tables as compile-time constants — the mask must stay a
     traced operand for the zero-retrace contract)."""
+
+    _fusable_view = False     # comm-fused kernels never see a mask
 
     def __init__(self, base: MixingOp, mask):
         self.__dict__.update(base.__dict__)  # view: share, don't rebuild

@@ -92,10 +92,7 @@ def test_rwkv6_scan_state_continuity():
 def test_ops_dispatch():
     from repro.kernels import ops
     y = jax.random.normal(jax.random.PRNGKey(0), (16, 128))
-    ops.use_pallas(True)
-    try:
+    with ops.pallas_mode(True):
         a = ops.ring_laplacian(y, 1 / 3, 1 / 3)
-    finally:
-        ops.use_pallas(False)
     b = ops.ring_laplacian(y, 1 / 3, 1 / 3)
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)

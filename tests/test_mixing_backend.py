@@ -140,8 +140,9 @@ def test_pallas_fallback_paths():
 
 
 def test_use_pallas_upgrades_auto_backend():
-    """kernels.ops.use_pallas(True) flips the auto/circulant tier onto
-    the Pallas kernels for eligible shapes."""
+    """kernels.pallas_mode(True) flips the auto/circulant tier onto
+    the Pallas kernels for eligible shapes — and restores the previous
+    mode on exit."""
     from repro.kernels import ops
     net = make_network("ring", 8)
     op = make_mixing_op(net)                    # auto → circulant
@@ -149,8 +150,7 @@ def test_use_pallas_upgrades_auto_backend():
     base = op.laplacian(y)
     assert op._resolve("circulant", y) == "circulant"
     explicit = make_mixing_op(net, backend="circulant")
-    ops.use_pallas(True)
-    try:
+    with ops.pallas_mode(True):
         assert op._resolve("circulant", y) == "circulant_pallas"
         up = op.laplacian(y)
         # an explicitly requested circulant backend stays on the
@@ -158,8 +158,7 @@ def test_use_pallas_upgrades_auto_backend():
         assert explicit._resolve("circulant", y) == "circulant"
         g = jax.grad(lambda z: jnp.sum(explicit.laplacian(z) ** 2))(y)
         assert np.isfinite(np.asarray(g)).all()
-    finally:
-        ops.use_pallas(False)
+    assert op._resolve("circulant", y) == "circulant"
     np.testing.assert_allclose(np.asarray(base), np.asarray(up),
                                atol=1e-6, rtol=1e-6)
 

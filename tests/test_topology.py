@@ -154,8 +154,7 @@ def test_sparse_pallas_fallback_and_upgrade():
     assert auto._resolve("sparse_gather", y) == "sparse_gather"
     explicit = make_mixing_op(net, backend="sparse_gather")
     star = make_mixing_op(make_network("star", 16))   # auto, skewed
-    ops.use_pallas(True)
-    try:
+    with ops.pallas_mode(True):
         assert auto._resolve("sparse_gather", y) == "sparse_gather_pallas"
         up = auto.laplacian(y)
         # skewed-degree graphs stay on CSR: the padded kernel would be
@@ -165,8 +164,6 @@ def test_sparse_pallas_fallback_and_upgrade():
         assert explicit._resolve("sparse_gather", y) == "sparse_gather"
         g = jax.grad(lambda z: jnp.sum(explicit.laplacian(z) ** 2))(y)
         assert np.isfinite(np.asarray(g)).all()
-    finally:
-        ops.use_pallas(False)
     np.testing.assert_allclose(np.asarray(base), np.asarray(up),
                                atol=1e-5, rtol=1e-5)
 
