@@ -44,6 +44,8 @@ from repro.solve import dagm_spec, solve
 from repro.solve.spec import mixing_kwargs
 from repro.topology import make_network
 
+from repro import obs
+
 from .common import Row
 
 SMOKE_AWARE = True   # genuine cheap smoke tier (benchmarks.run contract)
@@ -73,15 +75,13 @@ class _Runner:
         self.hp = RoundHP(*(jnp.asarray(a, jnp.float32)
                             for a in (sched.alpha, sched.beta,
                                       sched.gamma)))
-        self.traces = 0
+        self._tc = obs.TraceCounter("bench_faults_masked_chunk")
         prob_, W_, spec_ = prob, self.W, spec
 
-        @jax.jit
         def run(carry, hp, masks):
-            self.traces += 1
             return dagm_run_chunk(prob_, W_, spec_, carry, spec_.K,
                                   hp=hp, masks=masks)
-        self._run = run
+        self._run = self._tc.wrap(run)
 
     def ones_masks(self):
         K = self.spec.K
@@ -120,8 +120,8 @@ def _row(tag: str, runner: _Runner, fault: FaultSpec | None,
         "K": spec.K,
         "gap": float(gaps[-1]),
         "alive_fraction": round(float(alive), 4),
-        "traces": runner.traces,
-        "retraces": runner.traces - 1,   # acceptance: 0 on every row
+        "traces": runner._tc.traces,
+        "retraces": runner._tc.retraces,   # acceptance: 0 on every row
     }
     if clean_gaps is not None:
         target = float(clean_gaps[spec.K // 2])

@@ -51,6 +51,7 @@ from repro.kernels.mixing_matvec import (circulant_mix_matvec,
                                          sparse_mix_matvec,
                                          stripe_vmem_bytes,
                                          VMEM_BUDGET_BYTES)
+from repro import obs
 from repro.solve import dagm_spec, solve
 from repro.topology import sparse_structure
 
@@ -195,17 +196,13 @@ def _bench_fused_neumann(n: int, d: int, iters: int) -> list[Row]:
     ]
 
 
-def _jit_counting_retraces(fn):
-    """jit(fn) plus a live trace counter: `retraces` per bench row is
-    calls_with_fresh_operands − 1 and must be 0 (the fused kernels keep
-    seed/zp/scale as traced operands, so new values never respecialize)."""
-    cnt = {"n": 0}
-
-    def traced(*a):
-        cnt["n"] += 1
-        return fn(*a)
-
-    return jax.jit(traced), cnt
+def _counting_jit(fn, name: str):
+    """jit(fn) through the shared `repro.obs.TraceCounter`: `retraces`
+    per bench row is calls_with_fresh_operands − 1 and must be 0 (the
+    fused kernels keep seed/zp/scale as traced operands, so new values
+    never respecialize)."""
+    tc = obs.TraceCounter(name)
+    return tc.wrap(fn), tc
 
 
 def _bench_fused_comm(n: int, d: int, iters: int) -> list[Row]:
@@ -221,13 +218,15 @@ def _bench_fused_comm(n: int, d: int, iters: int) -> list[Row]:
         tag = f"mixing/fused_n{n}_d{d}/{spec}"
         xla_op = make_mixing_op(net, backend="circulant", comm=spec)
         st0 = channel_init(xla_op.comm, "x", y, jax.random.PRNGKey(0))
-        unfused, c_un = _jit_counting_retraces(
-            lambda z, op=xla_op: op.mix_c(z, st0)[0])
+        unfused, c_un = _counting_jit(
+            lambda z, op=xla_op: op.mix_c(z, st0)[0],
+            f"mixing_unfused_{spec}")
         with kops.pallas_mode(True):
             fop = make_mixing_op(net, comm=spec)
             assert fop._fused_plan(y) is not None
-            fused, c_fu = _jit_counting_retraces(
-                lambda z, op=fop: op.mix_c(z, st0)[0])
+            fused, c_fu = _counting_jit(
+                lambda z, op=fop: op.mix_c(z, st0)[0],
+                f"mixing_fused_{spec}")
             us_un, us_fu = _paired_best(unfused, fused, y, iters)
             # second operand value, same shape: must hit the jit cache
             fused(y + 1.0).block_until_ready()
@@ -237,9 +236,9 @@ def _bench_fused_comm(n: int, d: int, iters: int) -> list[Row]:
                   "traffic_reduction": model["traffic_reduction"],
                   "note": "interpret-mode validation timing"}
         rows.append(Row(f"{tag}/unfused", us_un,
-                        {**common, "retraces": c_un["n"] - 1}))
+                        {**common, "retraces": c_un.retraces}))
         rows.append(Row(f"{tag}/fused", us_fu,
-                        {**common, "retraces": c_fu["n"] - 1,
+                        {**common, "retraces": c_fu.retraces,
                          "speedup_vs_unfused": round(us_un / us_fu, 3)}))
     return rows
 
@@ -256,10 +255,11 @@ def _bench_halo(n: int, d: int, iters: int) -> list[Row]:
     interp = kops.pallas_interpret()
     tag = f"mixing/halo_n{n}_d{d}"
     xla_op = make_mixing_op(net, backend="circulant")
-    plain, c_pl = _jit_counting_retraces(
+    plain, c_pl = _counting_jit(
         lambda z: circulant_mix_matvec_halo(
             z, w_self=s.w_self, offsets=s.offsets, weights=s.weights,
-            laplacian=True, bn=bn, interpret=interp))
+            laplacian=True, bn=bn, interpret=interp),
+        "halo_plain")
     us_xla, us_halo = _paired_best(jax.jit(xla_op.laplacian), plain, y,
                                    iters)
     plain(y + 1.0).block_until_ready()
@@ -267,22 +267,23 @@ def _bench_halo(n: int, d: int, iters: int) -> list[Row]:
                 {"full_stripe_exceeds_vmem": over}),
             Row(f"{tag}/halo_interpret", us_halo,
                 {"bn": bn, "full_stripe_exceeds_vmem": over,
-                 "retraces": c_pl["n"] - 1,
+                 "retraces": c_pl.retraces,
                  "note": "interpret-mode validation timing"})]
 
     model = mixing_traffic_model(n, d, ef=False)
     from repro.comm import row_quant_params
     zp, sc = row_quant_params(y, 8)
     seed = jnp.zeros((1,), jnp.int32)
-    fused, c_fu = _jit_counting_retraces(
+    fused, c_fu = _counting_jit(
         lambda z, zp_, sc_, sd: circulant_mix_matvec_halo(
             z, zp_, sc_, sd, w_self=s.w_self, offsets=s.offsets,
-            weights=s.weights, bn=bn, interpret=interp, comm="int8"))
+            weights=s.weights, bn=bn, interpret=interp, comm="int8"),
+        "halo_fused_int8")
     _, us_fu = timed(lambda z: fused(z, zp, sc, seed), y,
                      iters=max(1, iters // 10), warmup=1)
     fused(y + 1.0, zp, sc, seed + 1).block_until_ready()
     rows.append(Row(f"{tag}/halo_fused_int8_interpret", us_fu,
-                    {"bn": bn, "retraces": c_fu["n"] - 1,
+                    {"bn": bn, "retraces": c_fu.retraces,
                      "modeled_fused_bytes": model["fused_bytes"],
                      "traffic_reduction": model["traffic_reduction"],
                      "note": "interpret-mode validation timing"}))

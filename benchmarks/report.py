@@ -1,16 +1,41 @@
-"""Markdown report generator for EXPERIMENTS.md §Dry-run / §Roofline.
+"""Markdown report generator + benchmark regression gate.
+
+Report mode (legacy positional usage) — EXPERIMENTS.md §Dry-run /
+§Roofline tables:
 
     PYTHONPATH=src python -m benchmarks.report dryrun_singlepod.json \
         [dryrun_multipod.json]
 
-Reads the dry-run sweep JSONs and prints the per-(arch × shape) roofline
-table (single-pod) and the multi-pod compile matrix, ready to paste into
-EXPERIMENTS.md.  Keeping the generator in-tree means the tables can be
-regenerated after every perf iteration with one command.
+Gate mode — rerun bench modules and fail (exit 1) on regression
+against the checked-in ``benchmarks/results/bench_<name>.json``
+baselines:
+
+    PYTHONPATH=src python -m benchmarks.report --gate faults[,serve] \
+        [--budget small] [--wall-tolerance 25]
+
+Gate rules, per row (matched to its baseline row by ``name``):
+
+  * every derived key containing "retrace" must be 0 in the fresh run
+    (the zero-retrace acceptance every bench row carries);
+  * ``us_per_call`` may not exceed baseline × ``--wall-tolerance``
+    (slower-only: getting faster never fails the gate — wall clock on
+    a shared box needs a generous multiplicative tolerance);
+  * every derived key containing "bytes" must be *exactly* equal —
+    the byte ledgers are deterministic accounting, not measurements,
+    so any drift is a real protocol change;
+  * every baseline row must still be produced (coverage cannot
+    silently shrink).
+
+``--budget`` must match the budget the baseline was recorded at
+(``small`` for the checked-in files).  Modules rewrite their results
+JSON when rerun at that budget, so the gate snapshots the baseline
+bytes first and restores them after — a gate run leaves the tree
+clean.
 """
 from __future__ import annotations
 
 import json
+import os
 import sys
 
 HW = {"peak_flops": 197e12, "hbm_bw": 819e9, "ici_bw": 50e9}
@@ -97,8 +122,88 @@ def multipod_table(records: list[dict]) -> str:
     return "\n".join(lines)
 
 
+# ---------------------------------------------------------------------------
+# Regression gate
+# ---------------------------------------------------------------------------
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+def _gate_row(fresh, base, tol: float) -> list[str]:
+    """Failure strings for one (fresh, baseline) row pair (empty = ok).
+    `base` is None for rows with no baseline (new rows gate only their
+    own retrace keys)."""
+    fails = []
+    for k, v in fresh["derived"].items():
+        if "retrace" in k and float(v) != 0.0:
+            fails.append(f"{k}={v} (must be 0)")
+    if base is None:
+        return fails
+    wall, base_wall = fresh["us_per_call"], base["us_per_call"]
+    if wall > base_wall * tol:
+        fails.append(f"wall {wall:.1f}us > {tol}x baseline "
+                     f"{base_wall:.1f}us")
+    for k, v in base["derived"].items():
+        if "bytes" not in k:
+            continue
+        got = fresh["derived"].get(k)
+        if got != v:
+            fails.append(f"{k}={got} != baseline {v} (byte ledgers "
+                         f"must be exact)")
+    return fails
+
+
+def gate(names: list[str], budget: str, tol: float) -> int:
+    """Rerun `names` bench modules at `budget`, compare against the
+    checked-in baselines, print per-row verdicts; 1 on any failure."""
+    from .run import MODULES
+    bad = 0
+    for name in names:
+        mod = MODULES.get(name)
+        path = os.path.join(RESULTS_DIR, f"bench_{name}.json")
+        if mod is None or not os.path.exists(path):
+            print(f"GATE FAIL {name}: "
+                  + ("unknown module" if mod is None
+                     else f"no baseline at {path}"))
+            bad += 1
+            continue
+        raw = open(path, "rb").read()       # snapshot: run() rewrites it
+        baseline = {r["name"]: r for r in json.loads(raw)}
+        try:
+            rows = [{"name": r.name, "us_per_call": r.us_per_call,
+                     "derived": r.derived} for r in mod.run(budget)]
+        finally:
+            with open(path, "wb") as f:     # gate runs leave tree clean
+                f.write(raw)
+        fresh = {r["name"]: r for r in rows}
+        for row in rows:
+            fails = _gate_row(row, baseline.get(row["name"]), tol)
+            status = "FAIL " + "; ".join(fails) if fails else "ok"
+            note = "" if row["name"] in baseline else " [no baseline]"
+            print(f"gate {row['name']}{note}: {status}")
+            bad += bool(fails)
+        for missing in sorted(set(baseline) - set(fresh)):
+            print(f"gate {missing}: FAIL baseline row not produced "
+                  f"(coverage shrank)")
+            bad += 1
+    print(f"# gate: {'FAIL' if bad else 'ok'} "
+          f"({bad} failing row(s), tolerance {tol}x, budget {budget})")
+    return 1 if bad else 0
+
+
 def main(argv=None) -> int:
     argv = argv if argv is not None else sys.argv[1:]
+    if "--gate" in argv:
+        import argparse
+        ap = argparse.ArgumentParser(prog="benchmarks.report")
+        ap.add_argument("--gate", required=True,
+                        help="comma-separated bench module names")
+        ap.add_argument("--budget", default="small",
+                        choices=["smoke", "small", "full"])
+        ap.add_argument("--wall-tolerance", type=float, default=25.0)
+        args = ap.parse_args(argv)
+        return gate(args.gate.split(","), args.budget,
+                    args.wall_tolerance)
     single = json.load(open(argv[0]))
     print("## Roofline (single-pod 16×16)\n")
     print(roofline_table(single))

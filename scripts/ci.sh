@@ -63,6 +63,20 @@ echo "=== tier 2: bench smoke (fault injection) ==="
 # fault-free run); no JSON rewrite
 python -m benchmarks.run --only faults --budget smoke
 
+echo "=== tier 2: obs smoke (tracing + flight recorder + exports) ==="
+# 2-job serve run with span tracing and the in-jit flight recorder on;
+# exports the Perfetto trace JSON and a Prometheus snapshot to a
+# tmpdir and asserts both parse (schema-validated spans, zero
+# retraces, per-job flight rows)
+python scripts/obs_smoke.py
+
+echo "=== tier 2: bench regression gate (faults vs checked-in JSON) ==="
+# reruns the faults module at the baseline budget and fails on
+# regression: retraces must stay 0, byte ledgers exactly equal, wall
+# clock within a generous 25x (shared-box tolerance, slower-only);
+# snapshots/restores the checked-in JSON so the tree stays clean
+python -m benchmarks.report --gate faults --wall-tolerance 25
+
 echo "=== tier 2: restart smoke (serve crash safety) ==="
 # kill-and-resume: a subprocess engine dies mid-run via the crash hook,
 # a fresh engine restores from the chunk-boundary checkpoints and must

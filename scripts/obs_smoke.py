@@ -1,0 +1,91 @@
+"""Observability smoke for scripts/ci.sh tier 2.
+
+Records a 2-job serve run with span tracing AND the in-`jit` flight
+recorder on, exports the Chrome/Perfetto trace JSON and a Prometheus
+text snapshot to a tmpdir, and asserts both parse:
+
+  * the trace passes `repro.obs.validate_trace` (required ph/ts/pid/
+    tid fields, well-formed per-track nesting) and contains the
+    engine-lifecycle spans the ISSUE acceptance names — compile
+    (build_chunk_fn), chunk, retire, checkpoint,
+  * the Prometheus snapshot round-trips through `parse_prometheus`
+    and carries the engine's zero-retrace counter
+    (jit_traces_total{name="serve_chunk"} == 1),
+  * every job's flight rows read back with the recorded round count.
+
+Everything runs in-process on tiny quadratic jobs (~seconds); the
+tmpdir is deleted on success.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+JOBS = 2
+K = 8
+
+
+def main() -> int:
+    from repro import obs
+    from repro.serve import JobSpec, ServeEngine
+    from repro.solve import dagm_spec
+
+    obs.reset_metrics()
+    cfg = dagm_spec(alpha=0.05, beta=0.1, K=K, M=3, U=2,
+                    dihgp="matrix_free", curvature=6.0)
+    specs = [JobSpec("quadratic", {"n": 8, "d1": 4, "d2": 8, "seed": s},
+                     cfg, seed=s, job_id=f"job{s}")
+             for s in range(JOBS)]
+
+    with tempfile.TemporaryDirectory(prefix="obs_smoke_") as tmp, \
+            obs.tracing() as tr:
+        eng = ServeEngine(chunk_rounds=4, max_width=2,
+                          hp_mode="traced", checkpoint_dir=tmp,
+                          flight_recorder=obs.RecorderSpec(capacity=K))
+        eng.submit(specs)
+        results = eng.run()
+
+        assert len(results) == JOBS and all(r.converged is not None
+                                            for r in results)
+        assert eng.stats.traces == 1, (
+            f"2-job bucket must compile once, traced "
+            f"{eng.stats.traces}x")
+        for r in results:
+            assert r.flight is not None and len(r.flight) == K, (
+                f"{r.job_id}: flight rows {None if r.flight is None else len(r.flight)} != {K}")
+            rounds = [row["round"] for row in obs.rows_to_dicts(r.flight)]
+            assert rounds == sorted(rounds), "flight rows out of order"
+
+        # --- Perfetto trace export -----------------------------------
+        trace_path = os.path.join(tmp, "serve_trace.json")
+        obs.write_trace(tr, trace_path)
+        events = obs.read_trace(trace_path)   # parses AND validates
+        names = {ev["name"] for ev in events}
+        need = {"engine_run", "build_chunk_fn", "chunk", "retire",
+                "checkpoint", "submit", "admit"}
+        assert need <= names, f"trace missing spans: {need - names}"
+
+        # --- Prometheus snapshot -------------------------------------
+        obs.observe_engine(eng.stats, run="obs_smoke")
+        for sig, led in eng.ledgers.items():
+            led.observe(run="obs_smoke")
+        prom_path = os.path.join(tmp, "metrics.prom")
+        obs.write_prometheus(obs.registry(), prom_path)
+        parsed = obs.parse_prometheus(open(prom_path).read())
+        traces = parsed['jit_traces_total{name="serve_chunk"}']
+        assert traces == 1.0, f"serve_chunk traces {traces} != 1"
+        assert any(k.startswith("comm_wire_bytes_total") for k in parsed)
+        assert parsed['serve_engine_jobs_completed{run="obs_smoke"}'] \
+            == float(JOBS)
+
+    print(f"obs smoke ok: {JOBS} jobs, trace spans "
+          f"{sorted(need)} present, "
+          f"{len(parsed)} prometheus samples, retraces=0")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

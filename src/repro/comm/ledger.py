@@ -220,6 +220,14 @@ class CommLedger:
             out["floats_per_round"] = self.floats_per_round(rounds)
         return out
 
+    def observe(self, reg=None, **labels) -> None:
+        """Publish this ledger's per-channel sends/bytes/floats into a
+        `repro.obs` metrics registry (the process default when `reg` is
+        None) as labeled counters — the obs-side read-out of the same
+        byte-exact accounting, see `repro.obs.observe_ledger`."""
+        from repro.obs import observe_ledger
+        observe_ledger(self, reg, **labels)
+
     def __repr__(self) -> str:
         chans = ", ".join(f"{c.name}:{c.sends}x{c.bytes_per_send}B"
                           for c in self.channels.values())

@@ -315,14 +315,19 @@ def dagm_validate(cfg) -> None:
 
 def dagm_init_carry(prob: BilevelProblem, W, cfg,
                     x0: Array | None = None, y0: Array | None = None,
-                    seed: int = 0):
+                    seed: int = 0, recorder=None):
     """The round-0 chunk carry ((x0, y0), channel states).
 
     This is the single init protocol shared by every tier (a serve
     slot admitting job `seed` holds exactly this carry, so batched
     trajectories match solo runs bit-for-bit): x0 = 0 (the paper's
     analysis assumption), y0 = 0.01·N(0, I) from PRNGKey(seed), comm
-    channels keyed on a stream disjoint from y0's."""
+    channels keyed on a stream disjoint from y0's.
+
+    `recorder` (a `repro.obs.RecorderSpec`) appends a third carry
+    element — the flight recorder's preallocated ring buffer (see
+    `repro.obs.recorder`); None keeps the historical 2-tuple, so
+    existing callers and their compiled programs are untouched."""
     key = jax.random.PRNGKey(seed)
     if x0 is None:   # paper's analysis assumes x_0 = 0
         x0 = jnp.zeros((prob.n, prob.d1), jnp.float32)
@@ -331,6 +336,9 @@ def dagm_init_carry(prob: BilevelProblem, W, cfg,
     from repro.comm import open_channels
     cs0 = open_channels(
         W, {"inner_y": y0, "dihgp_h": y0, "outer_x": x0}, seed)
+    if recorder is not None:
+        from repro.obs.recorder import recorder_init
+        return ((x0, y0), cs0, recorder_init(recorder))
     return ((x0, y0), cs0)
 
 
@@ -348,7 +356,7 @@ def chunk_hp(cfg, rounds: int, start: int = 0) -> RoundHP:
 def dagm_run_chunk(prob: BilevelProblem, W, cfg, carry,
                    rounds: int, metrics_fn: Callable | None = None,
                    hp: RoundHP | None = None, curvature=None,
-                   masks=None):
+                   masks=None, recorder=None):
     """`rounds` outer iterations of Algorithm 2, carry in / carry out.
 
     The round-sliced core shared by `solve`, the legacy `dagm_run`
@@ -378,11 +386,27 @@ def dagm_run_chunk(prob: BilevelProblem, W, cfg, carry,
     retraces.  None keeps today's unmasked scan program (structurally
     unchanged, so existing compiled trajectories stay bit-exact).
 
+    `recorder` (a `repro.obs.RecorderSpec`, matching the carry built by
+    `dagm_init_carry(..., recorder=...)`) extends the carry to ((x, y),
+    channel states, FlightBuffer) and appends one flight row per round
+    from inside the scan — pure `dynamic_update_slice` writes, no host
+    callbacks, so the zero-retrace contract holds.  The iterate/channel
+    algebra is untouched either way: with recorder=None this function
+    builds byte-for-byte the same scan program it did before the
+    recorder existed, and with it on, the (x, y) trajectory is bitwise
+    identical because the recorder only *reads* the round's metrics and
+    counters (tests/test_obs.py pins both).
+
     Returns (carry, metrics) with metrics stacked over the chunk's
     rounds."""
     if hp is None:
         hp = chunk_hp(cfg, rounds)
     hp = RoundHP(*(jnp.asarray(a, jnp.float32) for a in hp))
+
+    if recorder is not None:
+        return _dagm_run_chunk_recorded(prob, W, cfg, carry, rounds,
+                                        metrics_fn, hp, curvature,
+                                        masks)
 
     if masks is None:
         def body(c, hp_t):
@@ -404,6 +428,45 @@ def dagm_run_chunk(prob: BilevelProblem, W, cfg, carry,
                                         curvature=curvature,
                                         mask=mask_t)
         return ((x, y), cs), m
+    return jax.lax.scan(body_m, carry, (hp, masks), length=rounds)
+
+
+def _dagm_run_chunk_recorded(prob, W, cfg, carry, rounds, metrics_fn,
+                             hp, curvature, masks):
+    """The flight-recorded twin of `dagm_run_chunk`'s scans: same round
+    algebra, carry extended with the FlightBuffer, one recorded row per
+    round.  Kept separate so the recorder-off paths above stay
+    literally the historical program."""
+    from repro.obs.recorder import (flight_values, recorder_write,
+                                    wire_constants)
+    bps, offdiag_valid = wire_constants(W)
+
+    if masks is None:
+        def body(c, hp_t):
+            (x, y), cs, rec = c
+            hp_k = RoundHP(*hp_t)
+            x, y, m, cs = dagm_outer_step_c(prob, W, cfg, x, y, cs,
+                                            metrics_fn, hp=hp_k,
+                                            curvature=curvature)
+            rec = recorder_write(rec, flight_values(
+                m, cs, hp_k.gamma, bytes_per_send=bps))
+            return ((x, y), cs, rec), m
+        return jax.lax.scan(body, carry, hp, length=rounds)
+
+    masks = jnp.asarray(masks, jnp.float32)
+
+    def body_m(c, operands):
+        hp_t, mask_t = operands
+        (x, y), cs, rec = c
+        hp_k = RoundHP(*hp_t)
+        x, y, m, cs = dagm_outer_step_c(prob, W, cfg, x, y, cs,
+                                        metrics_fn, hp=hp_k,
+                                        curvature=curvature,
+                                        mask=mask_t)
+        rec = recorder_write(rec, flight_values(
+            m, cs, hp_k.gamma, bytes_per_send=bps, mask=mask_t,
+            offdiag_valid=offdiag_valid))
+        return ((x, y), cs, rec), m
     return jax.lax.scan(body_m, carry, (hp, masks), length=rounds)
 
 

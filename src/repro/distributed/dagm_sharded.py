@@ -426,7 +426,15 @@ def make_sharded_dagm(g_fn: Callable, f_fn: Callable,
         step = shard_map(lambda x, y, b: local_step(x, y, b),
                         mesh=mesh, in_specs=(xs, ys, bs),
                         out_specs=(xs, ys, P()), check_vma=False, **kw)
-    return (jax.jit(step) if jit_step else step), w
+    if not jit_step:
+        return step, w
+    # jit through the shared obs trace counter: the sharded tier's
+    # host-driven round loop calls this step K times, so a retrace
+    # (anything but jit_traces_total{name="sharded_dagm_step"} == 1
+    # per program) would multiply compile cost K-fold — the same
+    # zero-retrace telemetry the serve engine and benches publish
+    from repro.obs import TraceCounter
+    return TraceCounter("sharded_dagm_step").wrap(step), w
 
 
 def open_sharded_channels(cfg, x: Pytree, y: Pytree,

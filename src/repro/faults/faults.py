@@ -143,6 +143,17 @@ class FaultTrace:
         alive = int((self.edge_masks[:K] & off).sum())
         return alive / max(nominal, 1)
 
+    def observe(self, reg=None, **labels) -> None:
+        """Publish this trace's alive fraction and round count into a
+        `repro.obs` metrics registry (the process default when `reg` is
+        None) — the same adapter a faulted solve's extras go through
+        (`repro.obs.observe_fault_extras`)."""
+        from repro.obs import observe_fault_extras
+        observe_fault_extras(
+            {"fault_trace": self,
+             "fault_alive_fraction": self.alive_fraction()},
+            reg, **labels)
+
 
 def lower_faults(spec: FaultSpec, net, K: int) -> FaultTrace:
     """Lower a FaultSpec against a concrete network and round budget.

@@ -1,0 +1,46 @@
+"""repro.obs — the shared observability substrate.
+
+One subsystem, three layers, every tier emits into it:
+
+  spans     host-side phase/lifecycle tracing → Perfetto trace JSON
+            (`tracing()`, `span()`, `synthesize_round_spans`)
+  metrics   labeled counters/gauges/histograms adapting the existing
+            CommLedger / EngineStats / fault-extras instruments, plus
+            the shared `TraceCounter` retrace counter
+  recorder  in-`jit` per-round flight rows (outer gap, penalty, wire
+            bytes, alive fraction) riding the `dagm_run_chunk` carry
+
+Everything is off by default and contractually inert when off: a run
+with observability disabled is bitwise identical to one that predates
+this package (tests/test_obs.py).  See README "Observability" for the
+recording/export workflow.
+"""
+from . import export
+from .export import (TRACE_PID, parse_prometheus, prometheus_text,
+                     read_trace, trace_events, validate_trace,
+                     write_flight_jsonl, write_metrics_jsonl,
+                     write_prometheus, write_trace)
+from .metrics import (MetricsRegistry, TraceCounter, counter_value,
+                      fused_fallback_counter, observe_engine,
+                      observe_fault_extras, observe_ledger, registry,
+                      reset_metrics)
+from .recorder import (FIELDS, FlightBuffer, RecorderSpec,
+                       flight_values, recorder_init, recorder_rows,
+                       recorder_write, rows_to_dicts, wire_constants)
+from .spans import (DEFAULT_TRACK, SpanEvent, Tracer, enable_tracing,
+                    instant, span, synthesize_round_spans, tracer,
+                    tracing)
+
+__all__ = [
+    "DEFAULT_TRACK", "FIELDS", "FlightBuffer", "MetricsRegistry",
+    "RecorderSpec", "SpanEvent", "TRACE_PID", "TraceCounter", "Tracer",
+    "counter_value", "enable_tracing", "export",
+    "fused_fallback_counter", "flight_values", "instant",
+    "observe_engine", "observe_fault_extras", "observe_ledger",
+    "parse_prometheus", "prometheus_text", "read_trace",
+    "recorder_init", "recorder_rows", "recorder_write", "registry",
+    "reset_metrics", "rows_to_dicts", "span", "synthesize_round_spans",
+    "trace_events", "tracer", "tracing", "validate_trace",
+    "wire_constants", "write_flight_jsonl", "write_metrics_jsonl",
+    "write_prometheus", "write_trace",
+]

@@ -1,0 +1,249 @@
+"""Exporters — Perfetto trace JSON, Prometheus text, metrics JSONL.
+
+`write_trace` renders a `Tracer`'s events in the Chrome / Perfetto
+`trace_event` JSON Object Format: complete events (`"ph": "X"` with
+`ts`/`dur`), instant events (`"ph": "i"` with `"s": "t"`), and one
+thread-name metadata event (`"ph": "M"`, `"name": "thread_name"`) per
+logical track so Perfetto labels the rows — drop the file on
+`ui.perfetto.dev` and a multi-tenant serve run opens at solver-semantic
+granularity.  All events share one pid (this is a single-process trace;
+the interesting axis is logical tracks, not OS processes) and each
+named track maps to a stable small tid.
+
+`validate_trace` is the schema check the tests (and the CI smoke) run
+on an exported file: required keys per phase type, numeric ts/dur,
+known pids/tids, and per-track well-formed nesting — complete events on
+one track must form a proper forest (any two either disjoint or
+nested), which is the invariant Perfetto's track builder needs to
+render spans without overlap artifacts.
+
+`write_prometheus` / `parse_prometheus` round-trip a MetricsRegistry
+snapshot through the text exposition format (`# TYPE` / `# HELP`
+comments + `name{label="v"} value` samples); `write_metrics_jsonl`
+emits one self-describing JSON record per sample for log pipelines.
+No third-party client libraries — the formats are simple and the
+container must not grow dependencies.
+"""
+from __future__ import annotations
+
+import json
+import math
+from typing import Any
+
+from .spans import SpanEvent, Tracer
+
+#: Single-process trace: every event shares this pid.
+TRACE_PID = 1
+
+
+def _track_ids(events) -> dict[str, int]:
+    """Stable name → tid map in first-appearance order (tid 1..)."""
+    tids: dict[str, int] = {}
+    for ev in events:
+        if ev.track not in tids:
+            tids[ev.track] = len(tids) + 1
+    return tids
+
+
+def trace_events(tr: "Tracer | list[SpanEvent]") -> list[dict]:
+    """The `traceEvents` list for a tracer (or raw event list):
+    thread-name metadata first, then the recorded spans/instants in
+    recording order."""
+    events = tr.events() if isinstance(tr, Tracer) else list(tr)
+    tids = _track_ids(events)
+    out: list[dict] = [
+        {"ph": "M", "name": "thread_name", "pid": TRACE_PID,
+         "tid": tid, "args": {"name": track}}
+        for track, tid in tids.items()]
+    for ev in events:
+        rec: dict[str, Any] = {
+            "name": ev.name, "cat": ev.cat, "pid": TRACE_PID,
+            "tid": tids[ev.track], "ts": ev.ts_us}
+        if ev.dur_us is None:
+            rec["ph"] = "i"
+            rec["s"] = "t"        # thread-scoped instant
+        else:
+            rec["ph"] = "X"
+            rec["dur"] = ev.dur_us
+        if ev.args:
+            rec["args"] = ev.args
+        out.append(rec)
+    return out
+
+
+def trace_event_json(tr: "Tracer | list[SpanEvent]") -> dict:
+    """The complete JSON-object-format document."""
+    return {"traceEvents": trace_events(tr),
+            "displayTimeUnit": "ms"}
+
+
+def write_trace(tr: "Tracer | list[SpanEvent]", path) -> int:
+    """Write the Perfetto JSON to `path`; returns the event count
+    (metadata included)."""
+    doc = trace_event_json(tr)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+        f.write("\n")
+    return len(doc["traceEvents"])
+
+
+# ---------------------------------------------------------------------------
+# Trace validation (the exported-schema contract the tests pin)
+# ---------------------------------------------------------------------------
+
+def validate_trace(doc: "dict | list") -> list[dict]:
+    """Schema-validate a trace document (parsed JSON dict, or the bare
+    `traceEvents` list).  Raises ValueError naming the first violation;
+    returns the event list on success.
+
+    Checks: required `ph`/`pid`/`tid` everywhere and `ts` on every
+    non-metadata event; numeric, finite, non-negative ts/dur; `"X"`
+    events carry `dur`; and per-(pid, tid) the complete events nest
+    well-formedly (sorted by start, each event either contains or is
+    disjoint from the next — the Perfetto track invariant)."""
+    events = doc.get("traceEvents") if isinstance(doc, dict) else doc
+    if not isinstance(events, list):
+        raise ValueError("trace document has no traceEvents list")
+
+    def _num(ev, key):
+        v = ev.get(key)
+        if not isinstance(v, (int, float)) or isinstance(v, bool) \
+                or not math.isfinite(v) or v < 0:
+            raise ValueError(
+                f"event {ev.get('name')!r}: {key}={v!r} is not a "
+                f"finite non-negative number")
+        return float(v)
+
+    spans: dict[tuple, list[tuple]] = {}
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            raise ValueError(f"traceEvents[{i}] is not an object")
+        for key in ("ph", "pid", "tid"):
+            if key not in ev:
+                raise ValueError(
+                    f"traceEvents[{i}] ({ev.get('name')!r}) lacks "
+                    f"required key {key!r}")
+        ph = ev["ph"]
+        if ph == "M":
+            continue
+        ts = _num(ev, "ts")
+        if "name" not in ev:
+            raise ValueError(f"traceEvents[{i}] lacks a name")
+        if ph == "X":
+            dur = _num(ev, "dur")
+            spans.setdefault((ev["pid"], ev["tid"]), []).append(
+                (ts, ts + dur, ev["name"]))
+        elif ph not in ("i", "I", "B", "E", "C"):
+            raise ValueError(
+                f"event {ev['name']!r}: unknown phase {ph!r}")
+
+    for (pid, tid), ivals in spans.items():
+        # sort by start asc, end desc: a containing span sorts before
+        # its children, so well-formed nesting reduces to a stack walk
+        ivals.sort(key=lambda t: (t[0], -t[1]))
+        stack: list[tuple] = []
+        eps = 1e-6   # float µs jitter tolerance at shared boundaries
+        for s, e, name in ivals:
+            while stack and s >= stack[-1][1] - eps:
+                stack.pop()
+            if stack and e > stack[-1][1] + eps:
+                raise ValueError(
+                    f"track (pid={pid}, tid={tid}): span {name!r} "
+                    f"[{s}, {e}] partially overlaps "
+                    f"{stack[-1][2]!r} [{stack[-1][0]}, "
+                    f"{stack[-1][1]}] — not well-nested")
+            stack.append((s, e, name))
+    return events
+
+
+def read_trace(path) -> list[dict]:
+    """Load + validate an exported trace file."""
+    with open(path) as f:
+        return validate_trace(json.load(f))
+
+
+# ---------------------------------------------------------------------------
+# Metrics sinks
+# ---------------------------------------------------------------------------
+
+def _escape(value: str) -> str:
+    return value.replace("\\", "\\\\").replace("\n", "\\n") \
+                .replace('"', '\\"')
+
+
+def prometheus_text(reg) -> str:
+    """Render a MetricsRegistry snapshot in the Prometheus text
+    exposition format (families sorted by name for stable diffs)."""
+    lines: list[str] = []
+    for fam in sorted(reg.families(), key=lambda f: f.name):
+        if fam.help:
+            lines.append(f"# HELP {fam.name} {fam.help}")
+        lines.append(f"# TYPE {fam.name} {fam.kind}")
+        for s in fam.samples():
+            if s.labels:
+                labels = ",".join(
+                    f'{k}="{_escape(v)}"' for k, v in s.labels)
+                lines.append(f"{s.name}{{{labels}}} {s.value:g}")
+            else:
+                lines.append(f"{s.name} {s.value:g}")
+    return "\n".join(lines) + ("\n" if lines else "")
+
+
+def write_prometheus(reg, path) -> int:
+    """Write the snapshot to `path`; returns the sample-line count."""
+    text = prometheus_text(reg)
+    with open(path, "w") as f:
+        f.write(text)
+    return sum(1 for ln in text.splitlines()
+               if ln and not ln.startswith("#"))
+
+
+def parse_prometheus(text: str) -> dict[str, float]:
+    """Parse exposition text back to {series: value} where series is
+    `name{k="v",...}` exactly as rendered — the round-trip check the CI
+    smoke runs on its own snapshot.  Raises ValueError on malformed
+    sample lines."""
+    out: dict[str, float] = {}
+    for lineno, ln in enumerate(text.splitlines(), 1):
+        ln = ln.strip()
+        if not ln or ln.startswith("#"):
+            continue
+        series, _, value = ln.rpartition(" ")
+        if not series:
+            raise ValueError(f"line {lineno}: no value separator")
+        try:
+            out[series] = float(value)
+        except ValueError as e:
+            raise ValueError(
+                f"line {lineno}: bad sample value {value!r}") from e
+    return out
+
+
+def write_metrics_jsonl(reg, path) -> int:
+    """One JSON record per sample: {"metric", "kind", "labels",
+    "value"}; returns the record count."""
+    n = 0
+    with open(path, "w") as f:
+        for s in reg.samples():
+            json.dump({"metric": s.name, "kind": s.kind,
+                       "labels": dict(s.labels), "value": s.value}, f)
+            f.write("\n")
+            n += 1
+    return n
+
+
+def write_flight_jsonl(rows, path, **extra) -> int:
+    """Flight-recorder rows as JSONL ({field: value} + caller extras
+    like job=...); accepts the (rows, F) array `recorder_rows` returns
+    or an iterable of dicts."""
+    from .recorder import rows_to_dicts
+    import numpy as np
+    if isinstance(rows, np.ndarray):
+        rows = rows_to_dicts(rows)
+    n = 0
+    with open(path, "w") as f:
+        for row in rows:
+            json.dump(dict(row, **extra), f)
+            f.write("\n")
+            n += 1
+    return n

@@ -103,6 +103,9 @@ class RetiredJob:
     metrics: dict | None = None   # per-round trajectory, when recorded
     quarantined: bool = False     # retired by the poison detector, not
     #                               by convergence/budget
+    flight: Any = None            # this slot's flight-recorder rows
+    #                               (oldest-first) when the bucket
+    #                               carries a FlightBuffer
 
 
 class BucketState:
@@ -116,7 +119,8 @@ class BucketState:
     the solo run's); `retire` reads the slot back out."""
 
     def __init__(self, signature: Signature, width: int,
-                 template: BilevelProblem, net: Network, op, spec):
+                 template: BilevelProblem, net: Network, op, spec,
+                 recorder=None):
         self.signature = signature
         self.width = width
         self.template = template
@@ -124,6 +128,9 @@ class BucketState:
         self.op = op
         self.spec = spec                   # SolverSpec; static fields
         #                                    authoritative for the bucket
+        self.recorder = recorder           # obs.RecorderSpec | None —
+        #                                    when set, the carry grows a
+        #                                    per-slot FlightBuffer leaf
         self.has_curvature = spec.curvature is not None
         self.slots: list[JobSpec | None] = [None] * width
         self.active = np.zeros(width, bool)
@@ -140,7 +147,8 @@ class BucketState:
         # padding slots carry the template spec's schedule rows
         self.sched = np.tile(schedule_rows(spec)[None], (width, 1, 1))
         self.curv = np.full((width,), spec.curvature or 0.0, np.float32)
-        carry1 = dagm_init_carry(template, op, spec, seed=0)
+        carry1 = dagm_init_carry(template, op, spec, seed=0,
+                                 recorder=recorder)
         self.carry = jax.tree.map(
             lambda leaf: jnp.broadcast_to(
                 leaf[None], (width,) + leaf.shape), carry1)
@@ -163,7 +171,8 @@ class BucketState:
             lambda stack, leaf: stack.at[slot].set(leaf),
             self.data, prob.data)
         carry1 = dagm_init_carry(prob, self.op, self.spec,
-                                 seed=spec.seed)
+                                 seed=spec.seed,
+                                 recorder=self.recorder)
         self.carry = jax.tree.map(
             lambda stack, leaf: stack.at[slot].set(leaf),
             self.carry, carry1)
@@ -172,12 +181,18 @@ class BucketState:
                quarantined: bool = False) -> RetiredJob:
         """Read a finished job back out of `slot` and free it."""
         spec = self.slots[slot]
-        (x, y), cs = self.carry
+        (x, y), cs = self.carry[0], self.carry[1]
         metrics = None
         if self.metric_log[slot]:
             chunks = self.metric_log[slot]
             metrics = {k: np.concatenate([c[k] for c in chunks])
                        for k in chunks[0]}
+        flight = None
+        if self.recorder is not None:
+            from repro.obs.recorder import FlightBuffer, recorder_rows
+            fb = self.carry[2]
+            flight = recorder_rows(FlightBuffer(
+                rows=fb.rows[slot], count=fb.count[slot]))
         rec = RetiredJob(
             spec=spec,
             x=np.asarray(x[slot]), y=np.asarray(y[slot]),
@@ -185,7 +200,7 @@ class BucketState:
             final_gap=float(final_gap),
             sends={name: int(st.sends[slot]) for name, st in cs.items()},
             wall_s=float(self.wall[slot]), metrics=metrics,
-            quarantined=bool(quarantined))
+            quarantined=bool(quarantined), flight=flight)
         self.retired.append(rec)
         self.slots[slot] = None
         self.active[slot] = False

@@ -73,6 +73,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core.dagm import RoundHP, dagm_run_chunk, dagm_validate
 from repro.topology import make_mixing_op
 
@@ -149,7 +150,8 @@ class ServeEngine:
                  checkpoint_every: int = 1, keep_last: int = 3,
                  max_chunk_retries: int = 2,
                  retry_backoff_s: float = 0.05,
-                 crash_after_chunks: int | None = None):
+                 crash_after_chunks: int | None = None,
+                 flight_recorder=None):
         if hp_mode not in HP_MODES:
             raise ValueError(f"unknown hp_mode {hp_mode!r}; expected "
                              f"one of {HP_MODES}")
@@ -158,12 +160,20 @@ class ServeEngine:
                 f"max_width must be >= 2 (got {max_width}): width-1 "
                 f"buckets compile to an XLA-specialized program that "
                 f"breaks the width-invariance guarantee")
+        if flight_recorder is not None \
+                and not isinstance(flight_recorder, obs.RecorderSpec):
+            raise TypeError(
+                f"flight_recorder must be a repro.obs.RecorderSpec or "
+                f"None, got {type(flight_recorder).__name__}")
         self.chunk_rounds = int(chunk_rounds)
         self.max_width = int(max_width)
         self.hp_mode = hp_mode
         self.metrics_fn = metrics_fn if metrics_fn is not None \
             else _no_metrics
         self.record_metrics = bool(record_metrics)
+        # obs.RecorderSpec | None: every bucket carry grows a per-slot
+        # in-jit FlightBuffer and each JobResult carries its rows
+        self.flight_recorder = flight_recorder
         self.checkpoint_dir = checkpoint_dir
         self.checkpoint_every = max(int(checkpoint_every), 1)
         self.keep_last = int(keep_last)
@@ -183,7 +193,10 @@ class ServeEngine:
         # program (plus its closed-over MixingOp) per snapshot forever.
         self._cache: dict[tuple, object] = {}
         self._cache_capacity = int(cache_capacity)
-        self._trace_log = {"count": 0}
+        # shared repro.obs trace counter: ticks from inside the traced
+        # chunk body, so it counts actual jax traces (cache hits are
+        # silent); `stats.traces` mirrors it for the historical surface
+        self._trace_counter = obs.TraceCounter(name="serve_chunk")
 
     # -- queue -------------------------------------------------------------
 
@@ -212,6 +225,8 @@ class ServeEngine:
                     f"duplicate job_id {spec.job_id!r} in queue")
             queued.add(spec.job_id)
             self._queue.append(spec)
+            obs.instant("submit", cat="serve.lifecycle",
+                        track="engine", job_id=spec.job_id)
             ids.append(spec.job_id)
         return ids
 
@@ -250,8 +265,10 @@ class ServeEngine:
         # metrics_fn is part of the compiled program (the chunk closes
         # over it), so swapping it must miss the cache, not serve a
         # program that still records the old metrics
+        # the flight recorder keys too: it changes the chunk program
+        # (extra carry leaf + the per-round recorder writes)
         key = (bucket.signature, bucket.width, T, self.hp_mode,
-               self.metrics_fn)
+               self.metrics_fn, self.flight_recorder)
         if self.hp_mode == "static":
             key += (bucket.hp_key(T),)
         fn = self._cache.get(key)
@@ -260,7 +277,10 @@ class ServeEngine:
             self._cache[key] = self._cache.pop(key)   # LRU touch
             return fn
         self.stats.cache_misses += 1
-        fn = self._build_chunk_fn(bucket, T)
+        with obs.span("build_chunk_fn", cat="serve.compile",
+                      track="engine", width=bucket.width, rounds=T,
+                      hp_mode=self.hp_mode):
+            fn = self._build_chunk_fn(bucket, T)
         while len(self._cache) >= self._cache_capacity:
             self._cache.pop(next(iter(self._cache)))  # evict oldest
         self._cache[key] = fn
@@ -274,7 +294,8 @@ class ServeEngine:
         op, spec = bucket.op, bucket.spec
         has_curv = bucket.has_curvature
         metrics_fn = self.metrics_fn
-        trace_log = self._trace_log
+        recorder = self.flight_recorder
+        tc = self._trace_counter
         stats = self.stats
 
         def one_job(data_j, hp_j, carry, active):
@@ -283,9 +304,11 @@ class ServeEngine:
             hp = RoundHP(alpha=hp_j["alpha"], beta=hp_j["beta"],
                          gamma=hp_j["gamma"])
             c2, m = dagm_run_chunk(prob_j, op, spec, carry, T,
-                                   metrics_fn, hp=hp, curvature=curv)
+                                   metrics_fn, hp=hp, curvature=curv,
+                                   recorder=recorder)
             # inert padding/retired slots: freeze the whole carry
-            # (state, EF replicas, send counters) behind the mask
+            # (state, EF replicas, send counters — and the flight
+            # buffer, an ordinary pytree leaf) behind the mask
             c2 = jax.tree.map(lambda new, old: jnp.where(active, new, old),
                               c2, carry)
             return c2, m
@@ -298,13 +321,11 @@ class ServeEngine:
                         for k, v in bucket.hp_chunk(T).items()}
 
             def chunk(data, carry, active):
-                trace_log["count"] += 1
-                stats.traces = trace_log["count"]
+                stats.traces = tc.bump()
                 return jax.vmap(one_job)(data, hp_const, carry, active)
         else:
             def chunk(data, hp, carry, active):
-                trace_log["count"] += 1
-                stats.traces = trace_log["count"]
+                stats.traces = tc.bump()
                 return jax.vmap(one_job)(data, hp, carry, active)
 
         return jax.jit(chunk)
@@ -318,18 +339,22 @@ class ServeEngine:
         interrupted run first (bit-exactly) — any newly queued jobs run
         after the restored ones."""
         t0 = time.perf_counter()
-        ctx = self._restore_run_state()
-        if ctx is None:
-            queue, self._queue = self._queue, []
-            ctx = {"order": [spec.job_id for spec in queue],
-                   "buckets": list(bucketize(queue).values()),
-                   "bucket_index": 0, "results": {}, "resume": None}
-        while ctx["bucket_index"] < len(ctx["buckets"]):
-            items = ctx["buckets"][ctx["bucket_index"]]
-            self._run_bucket(items, ctx)
-            ctx["bucket_index"] += 1
-            ctx["resume"] = None
-        self._clear_checkpoints()
+        with obs.span("engine_run", cat="serve", track="engine") as sp:
+            ctx = self._restore_run_state()
+            if ctx is None:
+                queue, self._queue = self._queue, []
+                ctx = {"order": [spec.job_id for spec in queue],
+                       "buckets": list(bucketize(queue).values()),
+                       "bucket_index": 0, "results": {}, "resume": None}
+            while ctx["bucket_index"] < len(ctx["buckets"]):
+                items = ctx["buckets"][ctx["bucket_index"]]
+                self._run_bucket(items, ctx)
+                ctx["bucket_index"] += 1
+                ctx["resume"] = None
+            self._clear_checkpoints()
+            sp.annotate(jobs=len(ctx["order"]),
+                        chunks=self.stats.chunks,
+                        traces=self._trace_counter.count)
         self.stats.wall_s += time.perf_counter() - t0
         return [ctx["results"][jid] for jid in ctx["order"]]
 
@@ -346,13 +371,19 @@ class ServeEngine:
                             comm=sspec.comm.spec)
         width = pad_width(len(items), self.max_width)
         T = chunk_rounds_for(sspec.K, self.chunk_rounds)
-        bucket = BucketState(sig, width, prob0, net, op, sspec)
+        bucket = BucketState(sig, width, prob0, net, op, sspec,
+                             recorder=self.flight_recorder)
+        tr = obs.tracer()
         resume = ctx["resume"]
         if resume is None:
             pending = deque(items)
             for slot in range(width):
                 if pending:
-                    bucket.admit(slot, *pending.popleft())
+                    spec_a, prob_a = pending.popleft()
+                    bucket.admit(slot, spec_a, prob_a)
+                    tr.instant("admit", cat="serve.lifecycle",
+                               track="engine", job_id=spec_a.job_id,
+                               slot=int(slot))
         else:
             # chunk-boundary restore: host bookkeeping from the pickle
             # sidecar, device state through repro.checkpoint — together
@@ -371,16 +402,20 @@ class ServeEngine:
             fn = self._chunk_fn(bucket, T)
             prev_carry = bucket.carry
             t0 = time.perf_counter()
-            if self.hp_mode == "static":
-                carry, metrics = self._invoke_chunk(
-                    fn, (bucket.data, bucket.carry,
-                         bucket.active_mask()))
-            else:
-                hp = {k: jnp.asarray(v)
-                      for k, v in bucket.hp_chunk(T).items()}
-                carry, metrics = self._invoke_chunk(
-                    fn, (bucket.data, hp, bucket.carry,
-                         bucket.active_mask()))
+            with tr.span("chunk", cat="serve.chunk", track="engine",
+                         rounds=T, width=width,
+                         active=int(bucket.active.sum())) as chunk_sp:
+                if self.hp_mode == "static":
+                    carry, metrics = self._invoke_chunk(
+                        fn, (bucket.data, bucket.carry,
+                             bucket.active_mask()))
+                else:
+                    hp = {k: jnp.asarray(v)
+                          for k, v in bucket.hp_chunk(T).items()}
+                    carry, metrics = self._invoke_chunk(
+                        fn, (bucket.data, hp, bucket.carry,
+                             bucket.active_mask()))
+                chunk_sp.annotate(traces=self._trace_counter.count)
             dt = time.perf_counter() - t0
             self.stats.chunks += 1
             bucket.carry = carry
@@ -408,11 +443,21 @@ class ServeEngine:
                 if converged or bucket.rounds[slot] >= sspec.K:
                     rec = bucket.retire(slot, float(gaps[slot]),
                                         converged)
+                    tr.instant("retire", cat="serve.lifecycle",
+                               track="engine",
+                               job_id=rec.spec.job_id, slot=int(slot),
+                               rounds=rec.rounds,
+                               converged=rec.converged)
                     results[rec.spec.job_id] = self._make_result(
                         bucket, rec)
                     self.stats.jobs_completed += 1
                     if pending:
-                        bucket.admit(slot, *pending.popleft())
+                        spec_b, prob_b = pending.popleft()
+                        bucket.admit(slot, spec_b, prob_b)
+                        tr.instant("admit", cat="serve.lifecycle",
+                                   track="engine",
+                                   job_id=spec_b.job_id,
+                                   slot=int(slot), backfill=True)
             self._maybe_checkpoint(bucket, ctx, pending)
 
         self._finalize_ledger(bucket)
@@ -431,17 +476,20 @@ class ServeEngine:
                 out = fn(*args)
                 jax.block_until_ready(out)
                 return out
-            except (RuntimeError, OSError):
+            except (RuntimeError, OSError) as e:
                 if attempt >= self.max_chunk_retries:
                     raise
                 self.stats.retries += 1
+                obs.instant("retry", cat="serve.lifecycle",
+                            track="engine", attempt=attempt,
+                            error=type(e).__name__)
                 time.sleep(self.retry_backoff_s * (2.0 ** attempt))
                 attempt += 1
 
     def _poisoned_slots(self, bucket: BucketState) -> np.ndarray:
         """(width,) bool: active slots whose post-chunk iterates went
         non-finite (divergent hyper-parameters, poisoned data)."""
-        (x, y), _ = bucket.carry
+        (x, y) = bucket.carry[0]
         finite = np.asarray(
             jnp.isfinite(x).all(axis=tuple(range(1, x.ndim)))
             & jnp.isfinite(y).all(axis=tuple(range(1, y.ndim))))
@@ -461,10 +509,17 @@ class ServeEngine:
         for slot in np.nonzero(bad)[0]:
             rec = bucket.retire(slot, float("nan"), False,
                                 quarantined=True)
+            obs.instant("quarantine", cat="serve.lifecycle",
+                        track="engine", job_id=rec.spec.job_id,
+                        slot=int(slot), rounds=rec.rounds)
             results[rec.spec.job_id] = self._make_result(bucket, rec)
             self.stats.quarantined += 1
             if pending:
-                bucket.admit(slot, *pending.popleft())
+                spec_q, prob_q = pending.popleft()
+                bucket.admit(slot, spec_q, prob_q)
+                obs.instant("admit", cat="serve.lifecycle",
+                            track="engine", job_id=spec_q.job_id,
+                            slot=int(slot), backfill=True)
 
     # -- crash checkpoints (repro.checkpoint) ------------------------------
 
@@ -486,6 +541,12 @@ class ServeEngine:
 
     def _save_run_state(self, bucket: BucketState, ctx: dict,
                         pending: deque) -> None:
+        with obs.span("checkpoint", cat="serve.checkpoint",
+                      track="engine", step=self.stats.chunks):
+            self._save_run_state_inner(bucket, ctx, pending)
+
+    def _save_run_state_inner(self, bucket: BucketState, ctx: dict,
+                              pending: deque) -> None:
         from repro import checkpoint as ckpt
         step = self.stats.chunks
         ckpt.save_checkpoint(self.checkpoint_dir, step,
@@ -599,7 +660,7 @@ class ServeEngine:
             wire_bytes=int(wire_bytes), wire_floats=int(wire_floats),
             sends=dict(rec.sends), wall_clock_s=rec.wall_s,
             signature=bucket.signature, metrics=rec.metrics,
-            quarantined=rec.quarantined)
+            quarantined=rec.quarantined, flight=rec.flight)
 
     def _finalize_ledger(self, bucket: BucketState) -> None:
         """Charge the bucket ledger with per-job send arrays (ordered

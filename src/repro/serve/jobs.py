@@ -94,6 +94,9 @@ class JobResult:
     #                               iterates); x/y hold the last finite
     #                               pre-chunk state, rounds the rounds
     #                               completed before the poisoned chunk
+    flight: Any = None            # (rows, len(obs.FIELDS)) flight-
+    #                               recorder rows when the engine was
+    #                               built with flight_recorder=...
 
 
 def solver_spec(spec: JobSpec) -> SolverSpec:

@@ -62,7 +62,7 @@ class SolveResult:
 def solve(problem, network, spec, *, x0=None, y0=None, seed: int = 0,
           metrics_fn: Callable | None = None, mesh=None,
           g_fn: Callable | None = None, f_fn: Callable | None = None,
-          batch=None, serve_engine=None) -> SolveResult:
+          batch=None, serve_engine=None, recorder=None) -> SolveResult:
     """Run `spec` on (problem, network) and return a `SolveResult`.
 
     problem:  a `core.problems.BilevelProblem` (stacked per-agent
@@ -78,6 +78,11 @@ def solve(problem, network, spec, *, x0=None, y0=None, seed: int = 0,
     mesh:     jax Mesh, required by tier="sharded".
     serve_engine: optional pre-built `repro.serve.ServeEngine` to run
               tier="serve" solves through (shares its compile cache).
+    recorder: optional `repro.obs.RecorderSpec` — threads the in-jit
+              flight recorder through the chunk carry and returns the
+              per-round rows in `extras["flight"]` (reference and
+              serve dagm tiers).  None (the default) leaves every
+              program byte-for-byte as before.
     """
     spec = as_solver_spec(spec)
     validate_spec(spec)
@@ -86,17 +91,25 @@ def solve(problem, network, spec, *, x0=None, y0=None, seed: int = 0,
             f"metrics_fn is only supported for method='dagm' (the "
             f"baselines record the fixed default_metrics trace); got "
             f"method={spec.method!r}")
+    if recorder is not None and \
+            (spec.method != "dagm" or spec.tier == "sharded"):
+        raise ValueError(
+            "the flight recorder rides the dagm chunk carry: "
+            "recorder= needs method='dagm' on tier 'reference' or "
+            "'serve' (the sharded tier's host-driven round loop "
+            "already yields per-round metrics)")
     if spec.tier == "reference":
         if spec.method == "dagm":
             return _solve_dagm_reference(problem, network, spec, x0=x0,
                                          y0=y0, seed=seed,
-                                         metrics_fn=metrics_fn)
+                                         metrics_fn=metrics_fn,
+                                         recorder=recorder)
         return _solve_baseline(problem, network, spec, x0=x0, y0=y0,
                                seed=seed)
     if spec.tier == "serve":
         return _solve_serve(problem, network, spec, x0=x0, y0=y0,
                             seed=seed, metrics_fn=metrics_fn,
-                            engine=serve_engine)
+                            engine=serve_engine, recorder=recorder)
     return _solve_sharded(problem, network, spec, x0=x0, y0=y0,
                           seed=seed, metrics_fn=metrics_fn, mesh=mesh,
                           g_fn=g_fn, f_fn=f_fn, batch=batch)
@@ -113,50 +126,103 @@ def _schedule_hp(spec: SolverSpec):
                    gamma=sched.gamma)
 
 
+def _dagm_phases(spec: SolverSpec):
+    """(label, gossip-weight) pairs for the synthesized per-round phase
+    spans: M inner DGD exchanges, U DIHGP Neumann exchanges (0 when the
+    dense-solve backend never gossips h), 1 outer (I−Ẃ)x exchange."""
+    u = 0 if spec.dihgp == "exact" else spec.U
+    return [("inner_dgd", spec.M), ("dihgp_neumann", u),
+            ("outer_step", 1)]
+
+
 def _solve_dagm_reference(prob, net, spec: SolverSpec, *, x0, y0, seed,
-                          metrics_fn) -> SolveResult:
+                          metrics_fn, recorder=None) -> SolveResult:
     from repro.core.dagm import (RoundHP, dagm_init_carry,
                                  dagm_run_chunk)
     from repro.core.mixing import make_mixing_op
-    W = make_mixing_op(net, **mixing_kwargs(spec))
-    carry0 = dagm_init_carry(prob, W, spec, x0, y0, seed)
-    hp = _schedule_hp(spec)
+    from repro import obs
+    tr = obs.tracer()
+    with tr.span("solve", cat="solver", track="solver", method="dagm",
+                 tier="reference", K=spec.K, seed=seed):
+        W = make_mixing_op(net, **mixing_kwargs(spec))
+        with tr.span("init_carry", cat="solver", track="solver"):
+            carry0 = dagm_init_carry(prob, W, spec, x0, y0, seed,
+                                     recorder=recorder)
+        hp = _schedule_hp(spec)
 
-    # faults lower once (host-side) to a per-round mask operand; like
-    # hp, the masks enter the program as traced arrays, so resolving a
-    # different FaultSpec against a held compiled runner costs zero
-    # retraces (the bare solve() closure is still per-call).
-    trace = None
-    masks = None
-    if spec.faults is not None:
-        from repro.faults import lower_faults
-        trace = lower_faults(spec.faults, net, spec.K)
-        masks = jnp.asarray(trace.table_masks(W.sparse), jnp.float32)
+        # faults lower once (host-side) to a per-round mask operand;
+        # like hp, the masks enter the program as traced arrays, so
+        # resolving a different FaultSpec against a held compiled
+        # runner costs zero retraces (the bare solve() closure is
+        # still per-call).
+        trace = None
+        masks = None
+        if spec.faults is not None:
+            from repro.faults import lower_faults
+            with tr.span("lower_faults", cat="solver", track="solver"):
+                trace = lower_faults(spec.faults, net, spec.K)
+                masks = jnp.asarray(trace.table_masks(W.sparse),
+                                    jnp.float32)
 
-    # hp enters as a jit *argument*: the program is schedule-agnostic,
-    # and — because the serve tier scans the very same traced operands —
-    # batched traced-hp runs are bit-exact with this solo program.
-    # (The closure itself is per-call: solo solve() does not cache
-    # compiles across invocations; sweeps belong on tier="serve".)
-    @jax.jit
-    def run(carry, hp, masks):
-        return dagm_run_chunk(prob, W, spec, carry, spec.K, metrics_fn,
-                              hp=hp, masks=masks)
+        # hp enters as a jit *argument*: the program is
+        # schedule-agnostic, and — because the serve tier scans the
+        # very same traced operands — batched traced-hp runs are
+        # bit-exact with this solo program.  (The closure itself is
+        # per-call: solo solve() does not cache compiles across
+        # invocations; sweeps belong on tier="serve".)
+        @jax.jit
+        def run(carry, hp, masks):
+            return dagm_run_chunk(prob, W, spec, carry, spec.K,
+                                  metrics_fn, hp=hp, masks=masks,
+                                  recorder=recorder)
 
-    ((x, y), cs), metrics = run(
-        carry0, RoundHP(*(jnp.asarray(a, jnp.float32) for a in hp)),
-        masks)
-    W.ledger.charge_states(cs.values())
-    extras = {}
-    if trace is not None:
-        # ledger sends stay nominal (channel counters tick whether or
-        # not a given link carried the payload); the honest wire scale
-        # for the faulted run is the trace's realized-link fraction
-        extras = {"fault_trace": trace,
-                  "fault_alive_fraction": trace.alive_fraction()}
-    return SolveResult(x=x, y=y, metrics=metrics, ledger=W.ledger,
-                       channels=cs, method="dagm", tier="reference",
-                       extras=extras)
+        t0 = tr.now_us()
+        out = run(
+            carry0, RoundHP(*(jnp.asarray(a, jnp.float32) for a in hp)),
+            masks)
+        t_disp = tr.now_us()
+        if tr.enabled:
+            # the call above returned once tracing+compile+dispatch
+            # finished; waiting here makes the chunk span cover the
+            # device execution (a sync the result read below would
+            # force anyway — values are unchanged)
+            jax.block_until_ready(out)
+        t1 = tr.now_us()
+
+        flight = None
+        if recorder is not None:
+            ((x, y), cs, rec), metrics = out
+            flight = obs.recorder_rows(rec)
+        else:
+            ((x, y), cs), metrics = out
+        W.ledger.charge_states(cs.values())
+
+        if tr.enabled:
+            tr.add_span("trace_compile", t0, t_disp - t0,
+                        cat="solver.compile", track="solver",
+                        rounds=spec.K)
+            tr.add_span("chunk", t_disp, t1 - t_disp,
+                        cat="solver.chunk", track="solver",
+                        rounds=spec.K)
+            obs.synthesize_round_spans(
+                tr, t0_us=t_disp, dur_us=t1 - t_disp, rounds=spec.K,
+                phases=_dagm_phases(spec), track="solver",
+                round_args=(obs.rows_to_dicts(flight)
+                            if flight is not None else None))
+
+        extras = {}
+        if trace is not None:
+            # ledger sends stay nominal (channel counters tick whether
+            # or not a given link carried the payload); the honest
+            # wire scale for the faulted run is the trace's
+            # realized-link fraction
+            extras = {"fault_trace": trace,
+                      "fault_alive_fraction": trace.alive_fraction()}
+        if flight is not None:
+            extras["flight"] = flight
+        return SolveResult(x=x, y=y, metrics=metrics, ledger=W.ledger,
+                           channels=cs, method="dagm",
+                           tier="reference", extras=extras)
 
 
 def _solve_baseline(prob, net, spec: SolverSpec, *, x0, y0, seed
@@ -206,7 +272,7 @@ def _default_serve_metrics(prob, W, x, y):
 
 
 def _solve_serve(prob, net, spec: SolverSpec, *, x0, y0, seed,
-                 metrics_fn, engine) -> SolveResult:
+                 metrics_fn, engine, recorder=None) -> SolveResult:
     from repro.serve import JobSpec, ServeEngine
     if x0 is not None or y0 is not None:
         raise ValueError(
@@ -215,12 +281,19 @@ def _solve_serve(prob, net, spec: SolverSpec, *, x0, y0, seed,
             "reference-tier feature — use tier='reference' or bake the "
             "init into the problem")
     if engine is None:
-        engine = ServeEngine(record_metrics=True)
+        engine = ServeEngine(record_metrics=True,
+                             flight_recorder=recorder)
     elif not engine.record_metrics:
         raise ValueError(
             "the ServeEngine passed to solve(tier='serve') must be "
             "built with record_metrics=True so the SolveResult can "
             "carry the per-round metric trajectory")
+    elif recorder is not None \
+            and engine.flight_recorder != recorder:
+        raise ValueError(
+            "solve(recorder=...) on a pre-built engine needs the "
+            "engine constructed with the same flight_recorder= spec "
+            "(the recorder buffer is part of every bucket's carry)")
     mf = _default_serve_metrics if metrics_fn is None else metrics_fn
     job = JobSpec(family=_inline_family(prob), problem={},
                   config=dataclasses.replace(spec, tier="reference"),
@@ -232,14 +305,16 @@ def _solve_serve(prob, net, spec: SolverSpec, *, x0, y0, seed,
         (res,) = engine.run()
     finally:
         engine.metrics_fn = prev_mf
+    extras = {"rounds": res.rounds, "converged": res.converged,
+              "final_gap": res.final_gap,
+              "wire_bytes": res.wire_bytes,
+              "wire_floats": res.wire_floats, "sends": res.sends}
+    if recorder is not None:
+        extras["flight"] = res.flight
     return SolveResult(
         x=jnp.asarray(res.x), y=jnp.asarray(res.y), metrics=res.metrics,
         ledger=engine.ledgers[res.signature], channels=None,
-        method="dagm", tier="serve",
-        extras={"rounds": res.rounds, "converged": res.converged,
-                "final_gap": res.final_gap,
-                "wire_bytes": res.wire_bytes,
-                "wire_floats": res.wire_floats, "sends": res.sends})
+        method="dagm", tier="serve", extras=extras)
 
 
 # ---------------------------------------------------------------------------
@@ -303,21 +378,30 @@ def _solve_sharded(prob, net, spec: SolverSpec, *, x0, y0, seed,
         if spec.comm.persist_ef else None
     x, y = x0, y0
     rows = []
-    for k in range(spec.K):
-        hp = ShardedRoundCoeffs(*(jnp.float32(c) for c in
-                                  sharded_round_coeffs(
-                                      float(sched.alpha[k]),
-                                      float(sched.beta[k]),
-                                      spec.curvature, w.w_self)))
-        if channels is not None:
-            x, y, m, channels = step(x, y, batch, channels, hp)
-        elif pol.stochastic:
-            key = jax.random.fold_in(jax.random.PRNGKey(seed ^ 0x5eed),
-                                     k)
-            x, y, m = step(x, y, batch, key, hp)
-        else:
-            x, y, m = step(x, y, batch, hp)
-        rows.append(jax.tree.map(np.asarray, m))
+    from repro import obs
+    tr = obs.tracer()
+    # the sharded tier's round loop is host-driven, so — unlike the
+    # reference/serve scans — these per-round spans are real wall-clock
+    # measurements (each round's metric read below syncs the device)
+    with tr.span("solve", cat="solver", track="solver", method="dagm",
+                 tier="sharded", K=spec.K, seed=seed):
+        for k in range(spec.K):
+            hp = ShardedRoundCoeffs(*(jnp.float32(c) for c in
+                                      sharded_round_coeffs(
+                                          float(sched.alpha[k]),
+                                          float(sched.beta[k]),
+                                          spec.curvature, w.w_self)))
+            with tr.span("outer_round", cat="solver.round",
+                         track="solver", round=k):
+                if channels is not None:
+                    x, y, m, channels = step(x, y, batch, channels, hp)
+                elif pol.stochastic:
+                    key = jax.random.fold_in(
+                        jax.random.PRNGKey(seed ^ 0x5eed), k)
+                    x, y, m = step(x, y, batch, key, hp)
+                else:
+                    x, y, m = step(x, y, batch, hp)
+                rows.append(jax.tree.map(np.asarray, m))
     metrics = {key: np.stack([r[key] for r in rows]) for key in rows[0]}
     local = jax.tree.map(lambda a: a[0], (x0, y0))
     ledger = sharded_comm_ledger(spec, local[0], local[1],

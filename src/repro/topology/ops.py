@@ -214,6 +214,11 @@ _FALLBACK_WARNED: set = set()
 
 
 def _warn_pallas_fallback(name: str, kind: str, detail: str) -> None:
+    # the warning fires once, but the labeled obs counter ticks on
+    # EVERY fallback dispatch — long-running serve processes keep the
+    # degradation visible in metric snapshots after the warning is gone
+    from repro.obs import fused_fallback_counter
+    fused_fallback_counter().labels(op=name, kind=kind).inc()
     key = (name, kind, detail)
     if key in _FALLBACK_WARNED:
         return

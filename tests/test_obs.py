@@ -1,0 +1,387 @@
+"""repro.obs — the observability substrate's contracts.
+
+The load-bearing guarantees, in order of importance:
+
+  * **inert when off / bitwise identical when on** — enabling span
+    tracing + the in-`jit` flight recorder changes NOTHING about a
+    solve's trajectory, on the reference tier and through the serve
+    engine (the recorder rides the carry as a pure extra leaf; the
+    disabled paths are literally the historical code);
+  * **zero additional retraces** — the recorder is part of the compile
+    key, not a per-call respecialization: one program serves the run;
+  * **exported traces are valid Perfetto** — required ph/ts/pid/tid,
+    well-formed per-track nesting (and `validate_trace` REJECTS
+    malformed documents, so the validator itself is load-bearing);
+  * the metrics registry's Prometheus text round-trips, and
+    `TraceCounter` counts traces (not calls).
+"""
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core import make_mixing_op, make_network, quadratic_bilevel
+from repro.solve import dagm_spec, solve
+from repro.solve.spec import mixing_kwargs
+
+
+@pytest.fixture(autouse=True)
+def _fresh_obs():
+    """Each test starts with tracing off and an empty registry."""
+    obs.reset_metrics()
+    obs.tracer().clear()
+    obs.enable_tracing(False)
+    yield
+    obs.reset_metrics()
+    obs.tracer().clear()
+    obs.enable_tracing(False)
+
+
+def _spec(K=6, **kw):
+    kw.setdefault("mixing", "sparse_gather")
+    return dagm_spec(alpha=0.05, beta=0.1, K=K, M=3, U=2,
+                     dihgp="matrix_free", curvature=6.0, **kw)
+
+
+def _problem():
+    return quadratic_bilevel(6, 4, 8, seed=0), make_network("ring", 6)
+
+
+# ---------------------------------------------------------------------------
+# spans
+# ---------------------------------------------------------------------------
+
+def test_tracer_disabled_records_nothing():
+    with obs.span("work", cat="t") as sp:
+        sp.annotate(k=1)
+        obs.instant("tick")
+    assert len(obs.tracer()) == 0
+
+
+def test_span_nesting_and_instants():
+    with obs.tracing() as tr:
+        with obs.span("outer", cat="t", track="tests"):
+            with obs.span("inner", cat="t", track="tests"):
+                obs.instant("tick", track="tests")
+    # spans record on close, instants immediately → completion order
+    names = [e.name for e in tr.events()]
+    assert names == ["tick", "inner", "outer"]
+    tick, inner, outer = tr.events()
+    assert outer.ts_us <= inner.ts_us
+    assert inner.ts_us + inner.dur_us <= outer.ts_us + outer.dur_us \
+        + 1e-6
+    assert tick.dur_us is None
+
+
+def test_span_records_exception_and_reraises():
+    with obs.tracing() as tr:
+        with pytest.raises(RuntimeError):
+            with obs.span("boom", cat="t"):
+                raise RuntimeError("no")
+    (ev,) = tr.events()
+    assert "RuntimeError" in ev.args["error"]
+
+
+def test_synthesize_round_spans_weights_and_args():
+    tr = obs.Tracer(enabled=True)
+    obs.synthesize_round_spans(
+        tr, t0_us=0.0, dur_us=300.0, rounds=3,
+        phases=[("inner", 2), ("outer", 1)],
+        round_args=[{"gap": float(k)} for k in range(3)])
+    rounds = [e for e in tr.events() if e.name == "outer_round"]
+    phases = [e for e in tr.events() if e.name in ("inner", "outer")]
+    assert len(rounds) == 3 and len(phases) == 6
+    assert all(e.args["synthetic"] for e in rounds + phases)
+    assert [e.args["gap"] for e in rounds] == [0.0, 1.0, 2.0]
+    # phase children split each round's 100us by 2:1 weight
+    inner = next(e for e in phases if e.name == "inner")
+    assert inner.dur_us == pytest.approx(100.0 * 2 / 3)
+
+
+# ---------------------------------------------------------------------------
+# metrics / TraceCounter
+# ---------------------------------------------------------------------------
+
+def test_registry_counter_gauge_histogram_roundtrip():
+    reg = obs.MetricsRegistry()
+    reg.counter("c_total", "help").labels(tier="ref").inc(2)
+    reg.gauge("g", "help").labels().set(1.5)
+    h = reg.histogram("h_seconds", "help", buckets=(0.1, 1.0,
+                                                    float("inf")))
+    h.labels(op="mix").observe(0.05)
+    h.labels(op="mix").observe(0.5)
+    parsed = obs.parse_prometheus(obs.prometheus_text(reg))
+    assert parsed['c_total{tier="ref"}'] == 2.0
+    assert parsed["g"] == 1.5
+    assert parsed['h_seconds_bucket{op="mix",le="0.1"}'] == 1.0
+    assert parsed['h_seconds_bucket{op="mix",le="+Inf"}'] == 2.0
+    assert parsed['h_seconds_count{op="mix"}'] == 2.0
+    assert parsed['h_seconds_sum{op="mix"}'] == pytest.approx(0.55)
+
+
+def test_trace_counter_counts_traces_not_calls():
+    tc = obs.TraceCounter("test_fn")
+    f = tc.wrap(lambda x: x * 2)
+    f(jnp.ones(3))
+    f(jnp.zeros(3))          # same shape: cache hit, no tick
+    assert (tc.traces, tc.retraces) == (1, 0)
+    f(jnp.zeros((3, 2)))     # new shape: genuine retrace
+    assert (tc.traces, tc.retraces) == (2, 1)
+    assert obs.counter_value("jit_traces_total", name="test_fn") == 2.0
+
+
+def test_fused_fallback_warning_is_counted():
+    """The warn-once RuntimeWarning dedupes, but the labeled counter
+    ticks on EVERY fallback dispatch — long-running serve processes
+    keep the degradation visible after the warning is gone."""
+    import warnings
+    from repro.topology.ops import _warn_pallas_fallback
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        _warn_pallas_fallback("obs_test_op", "fused_comm", "detail")
+        _warn_pallas_fallback("obs_test_op", "fused_comm", "detail")
+    assert len(caught) == 1      # warn-once
+    assert obs.counter_value("mixing_fused_fallbacks_total",
+                             op="obs_test_op",
+                             kind="fused_comm") == 2.0
+
+
+def test_ledger_and_fault_observe_adapters():
+    prob, net = _problem()
+    spec = _spec(K=4, faults=None)
+    res = solve(prob, net, spec)
+    res.ledger.observe(run="t")
+    parsed = obs.parse_prometheus(obs.prometheus_text(obs.registry()))
+    total = sum(v for k, v in parsed.items()
+                if k.startswith("comm_wire_bytes_total"))
+    assert total == float(res.ledger.total_bytes)
+
+
+# ---------------------------------------------------------------------------
+# flight recorder (unit)
+# ---------------------------------------------------------------------------
+
+def test_recorder_spec_validates():
+    with pytest.raises(ValueError):
+        obs.RecorderSpec(capacity=0)
+
+
+def test_recorder_ring_buffer_wraps_oldest_first():
+    rec = obs.recorder_init(obs.RecorderSpec(capacity=3))
+    for k in range(5):
+        rec = obs.recorder_write(rec, {
+            "outer_gap_sq": float(k), "penalty": 0.0,
+            "wire_bytes": 0.0, "alive_fraction": 1.0})
+    rows = obs.recorder_rows(rec)
+    assert rows.shape == (3, len(obs.FIELDS))
+    # rounds 2,3,4 survive, oldest first
+    assert rows[:, 0].tolist() == [2.0, 3.0, 4.0]
+    assert obs.rows_to_dicts(rows)[0]["outer_gap_sq"] == 2.0
+
+
+def test_recorder_ring_buffer_wrap_property():
+    hypothesis = pytest.importorskip("hypothesis")
+    given, settings = hypothesis.given, hypothesis.settings
+    st = hypothesis.strategies
+
+    @settings(max_examples=20, deadline=None)
+    @given(cap=st.integers(1, 8), writes=st.integers(0, 20))
+    def prop(cap, writes):
+        rec = obs.recorder_init(obs.RecorderSpec(capacity=cap))
+        for k in range(writes):
+            rec = obs.recorder_write(rec, {
+                "outer_gap_sq": 0.0, "penalty": 0.0,
+                "wire_bytes": float(k), "alive_fraction": 1.0})
+        rows = obs.recorder_rows(rec)
+        assert rows.shape[0] == min(writes, cap)
+        # round column is the contiguous tail of the write sequence
+        expect = list(range(max(writes - cap, 0), writes))
+        assert rows[:, 0].tolist() == [float(e) for e in expect]
+
+    prop()
+
+
+def test_wire_constants_marks_padding_invalid():
+    net = make_network("ring", 6)
+    W = make_mixing_op(net, **mixing_kwargs(_spec()))
+    bps, valid = obs.wire_constants(W)
+    assert all(isinstance(v, int) and v > 0 for v in bps.values())
+    assert isinstance(valid, np.ndarray)      # host array, not traced
+    sp = W.sparse
+    real = (np.asarray(sp.neighbors) != np.arange(sp.n)[:, None])
+    assert np.array_equal(valid.astype(bool), real)
+
+
+# ---------------------------------------------------------------------------
+# Perfetto export schema
+# ---------------------------------------------------------------------------
+
+def _export_doc(tr):
+    return obs.export.trace_event_json(tr)
+
+
+def test_exported_trace_validates(tmp_path):
+    with obs.tracing() as tr:
+        with obs.span("a", cat="t"):
+            with obs.span("b", cat="t"):
+                obs.instant("i")
+    path = tmp_path / "trace.json"
+    n = obs.write_trace(tr, path)
+    events = obs.read_trace(path)
+    assert len(events) == n
+    doc = json.loads(path.read_text())
+    for ev in doc["traceEvents"]:
+        assert {"ph", "pid", "tid"} <= set(ev)
+        assert ev["ph"] == "M" or "ts" in ev
+        assert ev["pid"] == obs.TRACE_PID
+        if ev["ph"] == "X":
+            assert ev["dur"] >= 0
+
+
+@pytest.mark.parametrize("mutate, err", [
+    (lambda e: e.pop("ph"), "ph"),
+    (lambda e: e.pop("tid"), "tid"),
+    (lambda e: e.pop("ts"), "ts"),
+    (lambda e: e.pop("dur"), "dur"),
+    (lambda e: e.__setitem__("ts", float("nan")), "finite"),
+])
+def test_validate_trace_rejects_malformed_events(mutate, err):
+    with obs.tracing() as tr:
+        with obs.span("a", cat="t"):
+            pass
+    events = obs.trace_events(tr)
+    ev = next(e for e in events if e["ph"] == "X")
+    mutate(ev)
+    with pytest.raises(ValueError, match=err):
+        obs.validate_trace(events)
+
+
+def test_validate_trace_rejects_malformed_nesting():
+    # two "X" events on one track that partially overlap — impossible
+    # output of a sane tracer, and exactly what nesting checks exist
+    # to catch
+    bad = [
+        {"ph": "X", "name": "a", "pid": 1, "tid": 1, "ts": 0.0,
+         "dur": 10.0},
+        {"ph": "X", "name": "b", "pid": 1, "tid": 1, "ts": 5.0,
+         "dur": 10.0},
+    ]
+    with pytest.raises(ValueError, match="nest"):
+        obs.validate_trace(bad)
+
+
+# ---------------------------------------------------------------------------
+# the bit-exactness + zero-retrace contract (reference tier)
+# ---------------------------------------------------------------------------
+
+def test_reference_solve_bitwise_identical_with_obs_on():
+    prob, net = _problem()
+    spec = _spec(K=6)
+    base = solve(prob, net, spec)
+    with obs.tracing() as tr:
+        res = solve(prob, net, spec,
+                    recorder=obs.RecorderSpec(capacity=16))
+    assert np.array_equal(np.asarray(base.x), np.asarray(res.x))
+    assert np.array_equal(np.asarray(base.y), np.asarray(res.y))
+    for k in base.metrics:
+        assert np.array_equal(np.asarray(base.metrics[k]),
+                              np.asarray(res.metrics[k]))
+
+    flight = res.extras["flight"]
+    assert flight.shape == (spec.K, len(obs.FIELDS))
+    assert flight[:, 0].tolist() == [float(k) for k in range(spec.K)]
+    # in-jit cumulative wire bytes agree with the post-run ledger
+    assert flight[-1, obs.FIELDS.index("wire_bytes")] \
+        == float(res.ledger.total_bytes)
+    assert np.all(flight[:, obs.FIELDS.index("alive_fraction")] == 1.0)
+
+    names = {e.name for e in tr.events()}
+    assert {"solve", "init_carry", "trace_compile", "chunk",
+            "outer_round"} <= names
+    obs.validate_trace(obs.trace_events(tr))
+    rounds = [e for e in tr.events() if e.name == "outer_round"]
+    assert len(rounds) == spec.K
+    assert all(e.args["synthetic"] for e in rounds)
+
+
+def test_reference_faulted_alive_fraction_matches_host_trace():
+    from repro.faults import FaultSpec, lower_faults
+    prob, net = _problem()
+    spec = _spec(K=6, faults=FaultSpec(drop_prob=0.3, seed=1))
+    res = solve(prob, net, spec, recorder=obs.RecorderSpec(capacity=8))
+    flight = res.extras["flight"]
+    trace = lower_faults(spec.faults, net, spec.K)
+    col = flight[:, obs.FIELDS.index("alive_fraction")]
+    assert float(col.mean()) == pytest.approx(trace.alive_fraction(),
+                                              abs=1e-6)
+
+
+def test_recorder_rejects_sharded_tier():
+    prob, net = _problem()
+    with pytest.raises(ValueError, match="recorder"):
+        solve(prob, net, _spec(K=4, tier="sharded"),
+              recorder=obs.RecorderSpec())
+
+
+# ---------------------------------------------------------------------------
+# the bit-exactness + zero-retrace contract (serve tier)
+# ---------------------------------------------------------------------------
+
+def test_serve_solve_bitwise_identical_with_obs_on():
+    prob, net = _problem()
+    spec = _spec(K=8, tier="serve")
+    base = solve(prob, net, spec)
+    obs.reset_metrics()
+    with obs.tracing() as tr:
+        res = solve(prob, net, spec,
+                    recorder=obs.RecorderSpec(capacity=8))
+    assert np.array_equal(np.asarray(base.x), np.asarray(res.x))
+    assert np.array_equal(np.asarray(base.y), np.asarray(res.y))
+    # one fresh engine, one job, one bucket program: exactly one trace
+    assert obs.counter_value("jit_traces_total",
+                             name="serve_chunk") == 1.0
+    flight = res.extras["flight"]
+    assert flight.shape[0] == spec.K
+    names = {e.name for e in tr.events()}
+    assert {"engine_run", "build_chunk_fn", "chunk", "retire",
+            "submit", "admit"} <= names
+    obs.validate_trace(obs.trace_events(tr))
+
+
+def test_serve_engine_checkpoint_span_and_flight(tmp_path):
+    from repro.serve import JobSpec, ServeEngine
+    cfg = _spec(K=8)
+    specs = [JobSpec("quadratic", {"n": 6, "d1": 4, "d2": 8, "seed": s},
+                     cfg, seed=s, job_id=f"j{s}") for s in range(2)]
+    with obs.tracing() as tr:
+        eng = ServeEngine(chunk_rounds=4, max_width=2,
+                          checkpoint_dir=str(tmp_path),
+                          flight_recorder=obs.RecorderSpec(capacity=8))
+        eng.submit(specs)
+        results = eng.run()
+    assert eng.stats.traces == 1
+    for r in results:
+        assert r.flight is not None and r.flight.shape[0] == cfg.K
+        # per-slot recorders: each job's rounds count independently
+        assert r.flight[:, 0].tolist() == [float(k)
+                                           for k in range(cfg.K)]
+    names = {e.name for e in tr.events()}
+    assert "checkpoint" in names
+    obs.validate_trace(obs.trace_events(tr))
+
+
+def test_serve_engine_rejects_non_spec_recorder():
+    from repro.serve import ServeEngine
+    with pytest.raises(TypeError, match="RecorderSpec"):
+        ServeEngine(flight_recorder=16)
+
+
+def test_serve_prebuilt_engine_recorder_mismatch():
+    from repro.serve import ServeEngine
+    prob, net = _problem()
+    eng = ServeEngine(record_metrics=True)   # no recorder
+    with pytest.raises(ValueError, match="flight_recorder"):
+        solve(prob, net, _spec(K=4, tier="serve"), serve_engine=eng,
+              recorder=obs.RecorderSpec())
