@@ -23,6 +23,10 @@ Gate rules, per row (matched to its baseline row by ``name``):
   * every derived key containing "bytes" must be *exactly* equal —
     the byte ledgers are deterministic accounting, not measurements,
     so any drift is a real protocol change;
+  * every derived key containing "latency", "_p50" or "_p99" is a
+    wall-clock-like measurement (the serve SLO row's Poisson p50/p99):
+    slower-only, bounded by the same multiplicative
+    ``--wall-tolerance``;
   * every baseline row must still be produced (coverage cannot
     silently shrink).
 
@@ -144,12 +148,15 @@ def _gate_row(fresh, base, tol: float) -> list[str]:
         fails.append(f"wall {wall:.1f}us > {tol}x baseline "
                      f"{base_wall:.1f}us")
     for k, v in base["derived"].items():
-        if "bytes" not in k:
-            continue
         got = fresh["derived"].get(k)
-        if got != v:
-            fails.append(f"{k}={got} != baseline {v} (byte ledgers "
-                         f"must be exact)")
+        if "bytes" in k:
+            if got != v:
+                fails.append(f"{k}={got} != baseline {v} (byte "
+                             f"ledgers must be exact)")
+        elif "latency" in k or "_p50" in k or "_p99" in k:
+            # measured tail latency: slower-only, like wall clock
+            if got is not None and float(got) > float(v) * tol:
+                fails.append(f"{k}={got} > {tol}x baseline {v}")
     return fails
 
 

@@ -67,15 +67,18 @@ echo "=== tier 2: obs smoke (tracing + flight recorder + exports) ==="
 # 2-job serve run with span tracing and the in-jit flight recorder on;
 # exports the Perfetto trace JSON and a Prometheus snapshot to a
 # tmpdir and asserts both parse (schema-validated spans, zero
-# retraces, per-job flight rows)
+# retraces, per-job flight rows); then replays the same trace through
+# the streaming writer with a tiny rotation threshold and validates
+# every rotated segment + JSONL metrics line
 python scripts/obs_smoke.py
 
-echo "=== tier 2: bench regression gate (faults vs checked-in JSON) ==="
-# reruns the faults module at the baseline budget and fails on
-# regression: retraces must stay 0, byte ledgers exactly equal, wall
-# clock within a generous 25x (shared-box tolerance, slower-only);
-# snapshots/restores the checked-in JSON so the tree stays clean
-python -m benchmarks.report --gate faults --wall-tolerance 25
+echo "=== tier 2: bench regression gate (faults/mixing/serve vs JSON) ==="
+# reruns the faults, mixing and serve modules at the baseline budget
+# and fails on regression: retraces must stay 0, byte ledgers exactly
+# equal, wall clock AND the serve SLO p50/p99 latency keys within a
+# generous 25x (shared-box tolerance, slower-only); snapshots/restores
+# the checked-in JSONs so the tree stays clean
+python -m benchmarks.report --gate faults,mixing,serve --wall-tolerance 25
 
 echo "=== tier 2: restart smoke (serve crash safety) ==="
 # kill-and-resume: a subprocess engine dies mid-run via the crash hook,

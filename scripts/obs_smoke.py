@@ -11,7 +11,12 @@ text snapshot to a tmpdir, and asserts both parse:
   * the Prometheus snapshot round-trips through `parse_prometheus`
     and carries the engine's zero-retrace counter
     (jit_traces_total{name="serve_chunk"} == 1),
-  * every job's flight rows read back with the recorded round count.
+  * every job's flight rows read back with the recorded round count,
+  * the same trace replayed through `StreamingTraceWriter` with a tiny
+    rotation threshold yields multiple segments, every one of which
+    parses through `read_trace` (validation included) and together
+    preserve the event stream; registry snapshots stream through
+    `MetricsJsonlWriter` and every JSONL line parses back.
 
 Everything runs in-process on tiny quadratic jobs (~seconds); the
 tmpdir is deleted on success.
@@ -81,9 +86,48 @@ def main() -> int:
         assert parsed['serve_engine_jobs_completed{run="obs_smoke"}'] \
             == float(JOBS)
 
+        # --- streaming replay: tiny rotation, validate every segment -
+        import json
+
+        stream_dir = os.path.join(tmp, "stream")
+        all_events = tr.events()
+        with obs.StreamingTraceWriter(stream_dir, flush_every=4,
+                                      rotate_events=6) as w:
+            for ev in all_events:
+                w.write_event(ev)
+            assert w.resident <= 4, (
+                f"streaming buffer held {w.resident} > flush_every spans")
+        segments = w.segments
+        assert len(segments) >= 2, (
+            f"tiny rotation threshold produced only {len(segments)} "
+            f"segment(s) for {len(all_events)} events")
+        replayed = []
+        for seg in segments:
+            seg_events = obs.read_trace(seg)   # parses AND validates
+            replayed.extend(ev["name"] for ev in seg_events
+                            if ev.get("ph") != "M")
+        original = [ev.name for ev in all_events]
+        assert replayed == original, (
+            "streamed segments lost or reordered events: "
+            f"{len(replayed)} vs {len(original)}")
+
+        mdir = os.path.join(tmp, "metrics_jsonl")
+        with obs.MetricsJsonlWriter(mdir, rotate_bytes=4096) as mw:
+            for snap in range(3):
+                mw.write_snapshot(obs.registry(), snapshot=snap)
+        n_lines = 0
+        for seg in mw.segments:
+            for line in open(seg):
+                rec = json.loads(line)
+                assert {"metric", "kind", "labels", "value"} <= set(rec)
+                n_lines += 1
+        assert n_lines == mw.total_records and n_lines > 0
+
     print(f"obs smoke ok: {JOBS} jobs, trace spans "
           f"{sorted(need)} present, "
-          f"{len(parsed)} prometheus samples, retraces=0")
+          f"{len(parsed)} prometheus samples, "
+          f"{len(segments)} streamed segments, "
+          f"{n_lines} jsonl metric lines, retraces=0")
     return 0
 
 

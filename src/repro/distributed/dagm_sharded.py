@@ -192,7 +192,8 @@ def dagm_local_round(g_fn: Callable, f_fn: Callable,
                      cfg, w: RingWeights,
                      x: Pytree, y: Pytree, batch: Pytree,
                      key=None, channels: dict | None = None,
-                     hp: ShardedRoundCoeffs | None = None):
+                     hp: ShardedRoundCoeffs | None = None,
+                     flight_gamma=None):
     """One DAGM outer round from a single agent's perspective.
 
     g_fn(x, y, batch) -> scalar local inner loss  (strongly-convex-ish)
@@ -220,7 +221,17 @@ def dagm_local_round(g_fn: Callable, f_fn: Callable,
     scalars — `repro.solve`'s tier="sharded" driver feeds one per round
     so a single compiled step serves a whole (αₖ, βₖ) schedule.  None
     reproduces the config's constants (bit-identical: the coefficients
-    are the very same host-float64 expressions either way)."""
+    are the very same host-float64 expressions either way).
+
+    `flight_gamma` (flight-recorder mode): this round's penalty
+    coefficient γₖ as a traced f32 scalar.  When set, two extra
+    per-agent metrics are emitted for the flight row — `flight_gap_sq`
+    (‖γ·(I−Ẃ)x + β·cross + ∇ₓf‖², this agent's share of the reference
+    tier's Eq. 17b stationarity gap; the sharded update folds the
+    γ·lap term into the Ẃx mixing, so it is reconstructed here) and
+    `flight_consensus_sq` (‖x − x̄‖², whose agent-mean is exactly
+    `consensus_error(x)`).  None — the default — leaves the metrics
+    dict and the traced program untouched."""
     from repro.comm import channel_init
     cfg = _as_sharded_cfg(cfg)
     axis = cfg.axis
@@ -317,6 +328,14 @@ def dagm_local_round(g_fn: Callable, f_fn: Callable,
         "comm_sends": (st_y.sends + st_h.sends + st_x.sends)
         .astype(jnp.float32),
     }  # consensus metric uses full-precision exchange (diagnostic)
+    if flight_gamma is not None:
+        gamma = jnp.asarray(flight_gamma, jnp.float32)
+        gap_t = tadd(tscale(gamma, ring_laplacian(x, cfg.axis, w)),
+                     d_dir)
+        xbar = jax.tree.map(lambda a: jax.lax.pmean(a, axis), x)
+        metrics["flight_gap_sq"] = tdot(gap_t, gap_t).real
+        diff = tsub(x, xbar)
+        metrics["flight_consensus_sq"] = tdot(diff, diff).real
     if channels is not None:
         return x_new, y, metrics, \
             {"inner_y": st_y, "dihgp_h": st_h, "outer_x": st_x}
@@ -327,7 +346,7 @@ def make_sharded_dagm(g_fn: Callable, f_fn: Callable,
                       cfg, mesh: Mesh,
                       x_spec=None, y_spec=None, batch_spec=None,
                       manual_axes=None, jit_step: bool = True,
-                      schedule_hp: bool = False):
+                      schedule_hp: bool = False, recorder=None):
     """Jitted global DAGM step over `mesh`.
 
     `cfg` is a `repro.solve.SolverSpec` (tier="sharded") or a legacy
@@ -357,6 +376,19 @@ def make_sharded_dagm(g_fn: Callable, f_fn: Callable,
     metrics, channels)`` with `channels` from `open_sharded_channels`
     (keys live inside the states, so stochastic policies need no
     per-round key argument in this mode).
+
+    `recorder` (a `repro.obs.RecorderSpec`, needs ``schedule_hp=True``)
+    threads a `FlightBuffer` through the step: the signature grows a
+    trailing ``(gamma, rec)`` pair — this round's penalty coefficient
+    γₖ (replicated f32 scalar) and the buffer — and the step returns
+    the advanced buffer last, having appended one flight row per call
+    (reference-tier field semantics: agent-summed Eq. 17b gap, γₖ ×
+    consensus_error(x), *cumulative* exact wire bytes = round-count ×
+    the one-round `sharded_comm_ledger` charge, alive fraction 1.0 —
+    the sharded tier threads no fault masks).  The write is a pure
+    `recorder_write` on the replicated metrics outside the shard_map
+    body, so it adds no communication; with ``recorder=None`` the
+    historical program is built untouched.
     """
     cfg = _as_sharded_cfg(cfg)
     ax = cfg.axis
@@ -394,6 +426,16 @@ def make_sharded_dagm(g_fn: Callable, f_fn: Callable,
     kw = {}
     if manual != frozenset(mesh.axis_names):
         kw["axis_names"] = manual
+    if recorder is not None:
+        if not schedule_hp:
+            raise ValueError(
+                "the sharded flight recorder needs schedule_hp=True: "
+                "each row carries that round's penalty coefficient γₖ, "
+                "which only exists as a traced operand in schedule "
+                "mode (repro.solve's tier='sharded' driver)")
+        return _make_recorded_step(g_fn, f_fn, cfg, mesh, w, n,
+                                   xs, ys, bs, kw, stochastic,
+                                   squeeze, expand, jit_step), w
     if cfg.persist_ef:
         if schedule_hp:
             step = shard_map(local_step_persist, mesh=mesh,
@@ -435,6 +477,91 @@ def make_sharded_dagm(g_fn: Callable, f_fn: Callable,
     # zero-retrace telemetry the serve engine and benches publish
     from repro.obs import TraceCounter
     return TraceCounter("sharded_dagm_step").wrap(step), w
+
+
+def _make_recorded_step(g_fn, f_fn, cfg, mesh, w, n, xs, ys, bs, kw,
+                        stochastic, squeeze, expand, jit_step):
+    """The flight-recorder twin of `make_sharded_dagm`'s step builder
+    (kept separate so the recorder-off construction stays literally the
+    historical code).  See `make_sharded_dagm` for the signature the
+    returned step exposes."""
+    from repro.obs import TraceCounter
+    from repro.obs.recorder import recorder_write
+    ax = cfg.axis
+
+    def local_flight(x, y, batch, key=None, hp=None, gamma=None):
+        x1, y1, m = dagm_local_round(
+            g_fn, f_fn, cfg, w, squeeze(x), squeeze(y), squeeze(batch),
+            key=key, hp=hp, flight_gamma=gamma)
+        m = jax.tree.map(lambda s: jax.lax.pmean(s, ax), m)
+        return expand(x1), expand(y1), m
+
+    def local_flight_persist(x, y, batch, cs, hp=None, gamma=None):
+        x1, y1, m, cs1 = dagm_local_round(
+            g_fn, f_fn, cfg, w, squeeze(x), squeeze(y), squeeze(batch),
+            channels=squeeze(cs), hp=hp, flight_gamma=gamma)
+        m = jax.tree.map(lambda s: jax.lax.pmean(s, ax), m)
+        return expand(x1), expand(y1), m, expand(cs1)
+
+    def _round_bytes(x, y) -> float:
+        # host constant captured at trace time: one round's exact
+        # ledger charge, from per-agent leaf *shapes* only
+        local = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape[1:], a.dtype),
+            (x, y))
+        return float(sharded_comm_ledger(
+            cfg, local[0], local[1], rounds=1).total_bytes)
+
+    def _write_row(m, gamma, rec, x, y):
+        m = dict(m)
+        # pmean gave agent means; the reference gap is the agent *sum*,
+        # while consensus_error already divides by n — see FIELDS docs
+        gap = m.pop("flight_gap_sq") * np.float32(n)
+        cons = m.pop("flight_consensus_sq")
+        wire = (rec.count + 1).astype(jnp.float32) \
+            * jnp.float32(_round_bytes(x, y))
+        rec = recorder_write(rec, {
+            "outer_gap_sq": gap,
+            "penalty": jnp.asarray(gamma, jnp.float32) * cons,
+            "wire_bytes": wire,
+            "alive_fraction": jnp.ones((), jnp.float32)})
+        return m, rec
+
+    if cfg.persist_ef:
+        core = shard_map(local_flight_persist, mesh=mesh,
+                         in_specs=(xs, ys, bs, P(ax), P(), P()),
+                         out_specs=(xs, ys, P(), P(ax)),
+                         check_vma=False, **kw)
+
+        def step(x, y, batch, cs, hp, gamma, rec):
+            x1, y1, m, cs1 = core(x, y, batch, cs, hp, gamma)
+            m, rec = _write_row(m, gamma, rec, x, y)
+            return x1, y1, m, cs1, rec
+    elif stochastic:
+        core = shard_map(local_flight, mesh=mesh,
+                         in_specs=(xs, ys, bs, P(), P(), P()),
+                         out_specs=(xs, ys, P()), check_vma=False,
+                         **kw)
+
+        def step(x, y, batch, key, hp, gamma, rec):
+            x1, y1, m = core(x, y, batch, key, hp, gamma)
+            m, rec = _write_row(m, gamma, rec, x, y)
+            return x1, y1, m, rec
+    else:
+        core = shard_map(lambda x, y, b, hp, gamma:
+                         local_flight(x, y, b, hp=hp, gamma=gamma),
+                         mesh=mesh, in_specs=(xs, ys, bs, P(), P()),
+                         out_specs=(xs, ys, P()), check_vma=False,
+                         **kw)
+
+        def step(x, y, batch, hp, gamma, rec):
+            x1, y1, m = core(x, y, batch, hp, gamma)
+            m, rec = _write_row(m, gamma, rec, x, y)
+            return x1, y1, m, rec
+
+    if not jit_step:
+        return step
+    return TraceCounter("sharded_dagm_step").wrap(step)
 
 
 def open_sharded_channels(cfg, x: Pytree, y: Pytree,

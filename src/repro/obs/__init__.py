@@ -16,31 +16,34 @@ this package (tests/test_obs.py).  See README "Observability" for the
 recording/export workflow.
 """
 from . import export
-from .export import (TRACE_PID, parse_prometheus, prometheus_text,
+from .export import (MetricsJsonlWriter, StreamingTraceWriter,
+                     TRACE_PID, parse_prometheus, prometheus_text,
                      read_trace, trace_events, validate_trace,
                      write_flight_jsonl, write_metrics_jsonl,
                      write_prometheus, write_trace)
 from .metrics import (MetricsRegistry, TraceCounter, counter_value,
-                      fused_fallback_counter, observe_engine,
-                      observe_fault_extras, observe_ledger, registry,
-                      reset_metrics)
+                      dropped_spans_counter, fused_fallback_counter,
+                      observe_engine, observe_fault_extras,
+                      observe_ledger, registry, reset_metrics)
 from .recorder import (FIELDS, FlightBuffer, RecorderSpec,
                        flight_values, recorder_init, recorder_rows,
                        recorder_write, rows_to_dicts, wire_constants)
-from .spans import (DEFAULT_TRACK, SpanEvent, Tracer, enable_tracing,
-                    instant, span, synthesize_round_spans, tracer,
-                    tracing)
+from .spans import (DEFAULT_MAX_RESIDENT_SPANS, DEFAULT_TRACK,
+                    SpanEvent, Tracer, enable_tracing, instant, span,
+                    synthesize_round_spans, tracer, tracing)
 
 __all__ = [
-    "DEFAULT_TRACK", "FIELDS", "FlightBuffer", "MetricsRegistry",
-    "RecorderSpec", "SpanEvent", "TRACE_PID", "TraceCounter", "Tracer",
-    "counter_value", "enable_tracing", "export",
-    "fused_fallback_counter", "flight_values", "instant",
-    "observe_engine", "observe_fault_extras", "observe_ledger",
-    "parse_prometheus", "prometheus_text", "read_trace",
-    "recorder_init", "recorder_rows", "recorder_write", "registry",
-    "reset_metrics", "rows_to_dicts", "span", "synthesize_round_spans",
-    "trace_events", "tracer", "tracing", "validate_trace",
-    "wire_constants", "write_flight_jsonl", "write_metrics_jsonl",
-    "write_prometheus", "write_trace",
+    "DEFAULT_MAX_RESIDENT_SPANS", "DEFAULT_TRACK", "FIELDS",
+    "FlightBuffer", "MetricsJsonlWriter", "MetricsRegistry",
+    "RecorderSpec", "SpanEvent", "StreamingTraceWriter", "TRACE_PID",
+    "TraceCounter", "Tracer", "counter_value", "dropped_spans_counter",
+    "enable_tracing", "export", "fused_fallback_counter",
+    "flight_values", "instant", "observe_engine",
+    "observe_fault_extras", "observe_ledger", "parse_prometheus",
+    "prometheus_text", "read_trace", "recorder_init", "recorder_rows",
+    "recorder_write", "registry", "reset_metrics", "rows_to_dicts",
+    "span", "synthesize_round_spans", "trace_events", "tracer",
+    "tracing", "validate_trace", "wire_constants",
+    "write_flight_jsonl", "write_metrics_jsonl", "write_prometheus",
+    "write_trace",
 ]

@@ -23,11 +23,24 @@ comments + `name{label="v"} value` samples); `write_metrics_jsonl`
 emits one self-describing JSON record per sample for log pipelines.
 No third-party client libraries — the formats are simple and the
 container must not grow dependencies.
+
+For long-lived processes the batch exporters above are the wrong
+shape — they need every event resident at export time.
+`StreamingTraceWriter` is the incremental counterpart: it subscribes
+to a tracer as a sink (`Tracer.add_sink`), buffers at most
+`flush_every` closed events, and appends them to the current segment
+file on every flush while keeping that file a complete,
+`validate_trace`-clean JSON document at all times (the closing `]}` is
+rewritten in place after each append).  Segments rotate on
+event-count or byte thresholds, so both resident memory *and*
+per-file size stay bounded.  `MetricsJsonlWriter` is the matching
+rotating JSONL sink for registry snapshots.
 """
 from __future__ import annotations
 
 import json
 import math
+import os
 from typing import Any
 
 from .spans import SpanEvent, Tracer
@@ -45,29 +58,36 @@ def _track_ids(events) -> dict[str, int]:
     return tids
 
 
+def _thread_meta(track: str, tid: int) -> dict:
+    return {"ph": "M", "name": "thread_name", "pid": TRACE_PID,
+            "tid": tid, "args": {"name": track}}
+
+
+def _event_record(ev: SpanEvent, tids: dict[str, int]) -> dict:
+    """One SpanEvent as a trace_event JSON object (tid via `tids`)."""
+    rec: dict[str, Any] = {
+        "name": ev.name, "cat": ev.cat, "pid": TRACE_PID,
+        "tid": tids[ev.track], "ts": ev.ts_us}
+    if ev.dur_us is None:
+        rec["ph"] = "i"
+        rec["s"] = "t"        # thread-scoped instant
+    else:
+        rec["ph"] = "X"
+        rec["dur"] = ev.dur_us
+    if ev.args:
+        rec["args"] = ev.args
+    return rec
+
+
 def trace_events(tr: "Tracer | list[SpanEvent]") -> list[dict]:
     """The `traceEvents` list for a tracer (or raw event list):
     thread-name metadata first, then the recorded spans/instants in
     recording order."""
     events = tr.events() if isinstance(tr, Tracer) else list(tr)
     tids = _track_ids(events)
-    out: list[dict] = [
-        {"ph": "M", "name": "thread_name", "pid": TRACE_PID,
-         "tid": tid, "args": {"name": track}}
-        for track, tid in tids.items()]
-    for ev in events:
-        rec: dict[str, Any] = {
-            "name": ev.name, "cat": ev.cat, "pid": TRACE_PID,
-            "tid": tids[ev.track], "ts": ev.ts_us}
-        if ev.dur_us is None:
-            rec["ph"] = "i"
-            rec["s"] = "t"        # thread-scoped instant
-        else:
-            rec["ph"] = "X"
-            rec["dur"] = ev.dur_us
-        if ev.args:
-            rec["args"] = ev.args
-        out.append(rec)
+    out: list[dict] = [_thread_meta(track, tid)
+                       for track, tid in tids.items()]
+    out.extend(_event_record(ev, tids) for ev in events)
     return out
 
 
@@ -163,6 +183,160 @@ def read_trace(path) -> list[dict]:
 
 
 # ---------------------------------------------------------------------------
+# Streaming trace export (bounded resident memory, rotating segments)
+# ---------------------------------------------------------------------------
+
+class StreamingTraceWriter:
+    """Incremental Perfetto writer with bounded resident memory.
+
+    Subscribes to a `Tracer` as an event sink (`attach` / the `tracer=`
+    kwarg) so every *closed* span or instant is handed over immediately;
+    at most `flush_every` events stay buffered before being appended to
+    the current segment file.  The segment is a complete JSON-object-
+    format document after **every** flush — the writer seeks back over
+    the `]}` tail and rewrites it after each append — so a crash, a
+    `kill -9`, or a concurrent reader always sees a `validate_trace`-
+    clean file.  Segments rotate once they hold `rotate_events` events
+    or reach `rotate_bytes` bytes, whichever triggers first (either may
+    be None); rotated paths accumulate on `self.segments`.
+
+    Each segment carries its own thread-name metadata (track → tid maps
+    are per-segment, minted on first appearance), so any single segment
+    opens standalone in `ui.perfetto.dev`.  Only closed spans are ever
+    written, hence a child span can land one segment before its parent —
+    that is a legal forest for `validate_trace` (per-track nesting is
+    checked within each file).
+
+    Usage:
+
+        with obs.tracing() as tr, \\
+                obs.StreamingTraceWriter("otel/", tracer=tr) as w:
+            ... long-lived engine ...
+        # w.segments: rotated trace-*.json files, each valid on its own
+    """
+
+    _TAIL = "\n]}\n"
+
+    def __init__(self, directory, prefix: str = "trace",
+                 flush_every: int = 64,
+                 rotate_events: "int | None" = 4096,
+                 rotate_bytes: "int | None" = None,
+                 tracer: "Tracer | None" = None):
+        self.directory = str(directory)
+        self.prefix = prefix
+        self.flush_every = max(1, int(flush_every))
+        self.rotate_events = int(rotate_events) if rotate_events else None
+        self.rotate_bytes = int(rotate_bytes) if rotate_bytes else None
+        os.makedirs(self.directory, exist_ok=True)
+        #: Paths of every segment opened so far, in order.
+        self.segments: list[str] = []
+        #: Events handed to the writer over its lifetime.
+        self.total_events = 0
+        self._buf: list[SpanEvent] = []
+        self._file = None
+        self._seq = 0
+        self._tids: dict[str, int] = {}
+        self._segment_events = 0
+        self._body_end = 0
+        self._tracer: "Tracer | None" = None
+        if tracer is not None:
+            self.attach(tracer)
+
+    # -- tracer wiring -----------------------------------------------------
+
+    def attach(self, tracer: Tracer) -> "StreamingTraceWriter":
+        self.detach()
+        tracer.add_sink(self.write_event)
+        self._tracer = tracer
+        return self
+
+    def detach(self) -> None:
+        if self._tracer is not None:
+            self._tracer.remove_sink(self.write_event)
+            self._tracer = None
+
+    # -- recording ---------------------------------------------------------
+
+    @property
+    def resident(self) -> int:
+        """Events currently buffered in memory (< `flush_every`)."""
+        return len(self._buf)
+
+    @property
+    def current_segment(self) -> "str | None":
+        return self.segments[-1] if self._file is not None else None
+
+    def write_event(self, ev: SpanEvent) -> None:
+        """Sink entry point; flushes once `flush_every` accumulate."""
+        self._buf.append(ev)
+        if len(self._buf) >= self.flush_every:
+            self.flush()
+
+    def _open_segment(self) -> None:
+        path = os.path.join(
+            self.directory, f"{self.prefix}-{self._seq:05d}.json")
+        self._file = open(path, "w")
+        self._file.write('{"displayTimeUnit": "ms", "traceEvents": [')
+        self._body_end = self._file.tell()
+        self._file.write(self._TAIL)
+        self._file.flush()
+        self._tids = {}
+        self._segment_events = 0
+        self.segments.append(path)
+
+    def flush(self) -> None:
+        """Append buffered events to the current segment, leaving it a
+        complete valid JSON document; rotates if a threshold tripped."""
+        if not self._buf:
+            return
+        if self._file is None:
+            self._open_segment()
+        recs: list[dict] = []
+        for ev in self._buf:
+            if ev.track not in self._tids:
+                tid = self._tids[ev.track] = len(self._tids) + 1
+                recs.append(_thread_meta(ev.track, tid))
+            recs.append(_event_record(ev, self._tids))
+        first = self._segment_events == 0
+        body = "".join(
+            ("\n " if first and i == 0 else ",\n ") + json.dumps(rec)
+            for i, rec in enumerate(recs))
+        self._segment_events += len(recs)
+        self.total_events += len(self._buf)
+        self._buf.clear()
+        f = self._file
+        f.seek(self._body_end)
+        f.write(body)
+        self._body_end = f.tell()
+        f.write(self._TAIL)
+        f.truncate()
+        f.flush()
+        if (self.rotate_events
+                and self._segment_events >= self.rotate_events) or \
+           (self.rotate_bytes
+                and self._body_end + len(self._TAIL) >= self.rotate_bytes):
+            self._close_segment()
+
+    def _close_segment(self) -> None:
+        if self._file is not None:
+            self._file.close()
+            self._file = None
+            self._seq += 1
+
+    def close(self) -> None:
+        """Flush the residue, close the open segment, detach."""
+        self.detach()
+        self.flush()
+        self._close_segment()
+
+    def __enter__(self) -> "StreamingTraceWriter":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+# ---------------------------------------------------------------------------
 # Metrics sinks
 # ---------------------------------------------------------------------------
 
@@ -230,6 +404,64 @@ def write_metrics_jsonl(reg, path) -> int:
             f.write("\n")
             n += 1
     return n
+
+
+class MetricsJsonlWriter:
+    """Rotating JSONL sink for registry snapshots.
+
+    `write_snapshot(reg, **extra)` appends one record per sample (the
+    same `{"metric", "kind", "labels", "value"}` schema as
+    `write_metrics_jsonl`, merged with the caller's `extra` — e.g. a
+    snapshot sequence number or wall-clock stamp) to the current
+    `{prefix}-{seq:05d}.jsonl` segment, then rotates once the segment
+    reaches `rotate_bytes`.  Every line is flushed as written, so
+    partially-rotated directories always tail cleanly."""
+
+    def __init__(self, directory, prefix: str = "metrics",
+                 rotate_bytes: "int | None" = 1 << 20):
+        self.directory = str(directory)
+        self.prefix = prefix
+        self.rotate_bytes = int(rotate_bytes) if rotate_bytes else None
+        os.makedirs(self.directory, exist_ok=True)
+        self.segments: list[str] = []
+        self.total_records = 0
+        self._file = None
+        self._seq = 0
+
+    def write_snapshot(self, reg, **extra) -> int:
+        """Append the registry's current samples; returns the record
+        count written for this snapshot."""
+        if self._file is None:
+            path = os.path.join(
+                self.directory, f"{self.prefix}-{self._seq:05d}.jsonl")
+            self._file = open(path, "w")
+            self.segments.append(path)
+        n = 0
+        for s in reg.samples():
+            rec = {"metric": s.name, "kind": s.kind,
+                   "labels": dict(s.labels), "value": s.value}
+            rec.update(extra)
+            self._file.write(json.dumps(rec) + "\n")
+            n += 1
+        self._file.flush()
+        self.total_records += n
+        if self.rotate_bytes and self._file.tell() >= self.rotate_bytes:
+            self._file.close()
+            self._file = None
+            self._seq += 1
+        return n
+
+    def close(self) -> None:
+        if self._file is not None:
+            self._file.close()
+            self._file = None
+            self._seq += 1
+
+    def __enter__(self) -> "MetricsJsonlWriter":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
 
 def write_flight_jsonl(rows, path, **extra) -> int:

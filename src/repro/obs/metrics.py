@@ -323,6 +323,16 @@ def fused_fallback_counter(reg: MetricsRegistry | None = None
         "MixingOp fused/Pallas fallbacks onto the XLA compose path")
 
 
+def dropped_spans_counter(reg: MetricsRegistry | None = None
+                          ) -> MetricFamily:
+    """The counter `Tracer` ticks when `max_resident_spans` evicts
+    buffered events — nonzero means the trace is incomplete unless a
+    `StreamingTraceWriter` sink persisted the evicted spans first."""
+    return (reg or registry()).counter(
+        "obs_dropped_spans_total",
+        "spans evicted from a Tracer's bounded resident buffer")
+
+
 def counter_value(metric: str, reg: MetricsRegistry | None = None,
                   **labels) -> float:
     """Read one time series back (tests, bench assertions).  First

@@ -45,13 +45,19 @@ Usage:
 """
 from __future__ import annotations
 
+import collections
 import contextlib
 import dataclasses
 import time
-from typing import Any
+from typing import Any, Callable
 
 #: Default logical track for spans that do not name one.
 DEFAULT_TRACK = "main"
+
+#: Default cap on resident (un-exported) events per tracer.  A span is
+#: ~200 bytes host-side, so the default bounds a forgotten-`write_trace`
+#: long-lived engine at ~13 MB before oldest-first eviction kicks in.
+DEFAULT_MAX_RESIDENT_SPANS = 65536
 
 
 @dataclasses.dataclass
@@ -109,7 +115,7 @@ class _LiveSpan:
         tr = self.tracer
         if exc_type is not None:
             self.args["error"] = exc_type.__name__
-        tr._events.append(SpanEvent(
+        tr._record(SpanEvent(
             name=self.name, cat=self.cat,
             ts_us=(self._t0 - tr.epoch) * 1e6,
             dur_us=(t1 - self._t0) * 1e6,
@@ -122,14 +128,64 @@ class Tracer:
 
     Construction is cheap and tracers are independent — tests build
     their own; library instrumentation goes through the module-level
-    default (`tracer()`) guarded by `enabled`."""
+    default (`tracer()`) guarded by `enabled`.
 
-    def __init__(self, enabled: bool = False):
+    Resident memory is *bounded*: at most `max_resident_spans` events
+    stay buffered, and recording past the cap evicts the oldest event
+    (counted on `self.dropped` and published as the
+    `obs_dropped_spans_total` registry counter).  A long-lived engine
+    that never calls `write_trace` therefore plateaus instead of
+    growing without bound; attach a `StreamingTraceWriter` (it
+    registers itself via `add_sink`) to persist every event before it
+    can be evicted.  Pass `max_resident_spans=None` to opt out."""
+
+    def __init__(self, enabled: bool = False,
+                 max_resident_spans: "int | None" =
+                 DEFAULT_MAX_RESIDENT_SPANS):
         self.enabled = bool(enabled)
         self.epoch = time.perf_counter()
-        self._events: list[SpanEvent] = []
+        self._events: collections.deque[SpanEvent] = collections.deque()
+        if max_resident_spans is not None:
+            max_resident_spans = int(max_resident_spans)
+            if max_resident_spans < 1:
+                raise ValueError(
+                    f"max_resident_spans must be a positive event count "
+                    f"or None for unbounded (got {max_resident_spans})")
+        self.max_resident_spans = max_resident_spans
+        self.dropped = 0
+        self._sinks: list[Callable[[SpanEvent], None]] = []
 
     # -- recording ---------------------------------------------------------
+
+    def _record(self, ev: SpanEvent) -> None:
+        """Single funnel for every finished event: feed sinks first
+        (streaming writers see each event exactly once, before any
+        eviction can touch it), then buffer under the resident cap."""
+        for sink in self._sinks:
+            sink(ev)
+        self._events.append(ev)
+        cap = self.max_resident_spans
+        if cap is not None:
+            dropped = 0
+            while len(self._events) > cap:
+                self._events.popleft()
+                dropped += 1
+            if dropped:
+                self.dropped += dropped
+                from .metrics import dropped_spans_counter
+                dropped_spans_counter().inc(dropped)
+
+    def add_sink(self, sink: Callable[[SpanEvent], None]) -> None:
+        """Subscribe `sink(event)` to every subsequently recorded
+        event (used by `StreamingTraceWriter.attach`)."""
+        if sink not in self._sinks:
+            self._sinks.append(sink)
+
+    def remove_sink(self, sink: Callable[[SpanEvent], None]) -> None:
+        try:
+            self._sinks.remove(sink)
+        except ValueError:
+            pass
 
     def span(self, name: str, cat: str = "solver",
              track: str = DEFAULT_TRACK, **args):
@@ -143,7 +199,7 @@ class Tracer:
         """Zero-duration marker (retire, retry, quarantine, ...)."""
         if not self.enabled:
             return
-        self._events.append(SpanEvent(
+        self._record(SpanEvent(
             name=name, cat=cat,
             ts_us=(time.perf_counter() - self.epoch) * 1e6,
             dur_us=None, track=track, args=dict(args)))
@@ -155,7 +211,7 @@ class Tracer:
         entry point (callers own the honesty of the timestamps)."""
         if not self.enabled:
             return
-        self._events.append(SpanEvent(
+        self._record(SpanEvent(
             name=name, cat=cat, ts_us=float(ts_us),
             dur_us=float(dur_us), track=track, args=dict(args)))
 
@@ -173,6 +229,7 @@ class Tracer:
 
     def clear(self) -> None:
         self._events.clear()
+        self.dropped = 0
         self.epoch = time.perf_counter()
 
 

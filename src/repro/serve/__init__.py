@@ -31,11 +31,15 @@ from .jobs import (JobResult, JobSpec, build_network, build_problem,
 from .batching import (WIDTHS, BucketState, bucketize, chunk_rounds_for,
                        pad_width)
 from .engine import HP_MODES, EngineStats, ServeEngine, SimulatedCrash
+from .slo import (SLO_QUANTILES, SLOReport, drive_poisson,
+                  job_latencies, latency_quantiles, observe_latencies,
+                  poisson_arrivals)
 
 __all__ = [
     "BucketState", "EngineStats", "HP_MODES", "JobResult", "JobSpec",
-    "ServeEngine", "SimulatedCrash", "WIDTHS", "bucketize",
-    "build_network", "build_problem", "chunk_rounds_for",
-    "compile_signature", "job_hp", "pad_width", "schedule_rows",
-    "solver_spec",
+    "SLOReport", "SLO_QUANTILES", "ServeEngine", "SimulatedCrash",
+    "WIDTHS", "bucketize", "build_network", "build_problem",
+    "chunk_rounds_for", "compile_signature", "drive_poisson", "job_hp",
+    "job_latencies", "latency_quantiles", "observe_latencies",
+    "pad_width", "poisson_arrivals", "schedule_rows", "solver_spec",
 ]

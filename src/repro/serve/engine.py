@@ -228,7 +228,14 @@ class ServeEngine:
             obs.instant("submit", cat="serve.lifecycle",
                         track="engine", job_id=spec.job_id)
             ids.append(spec.job_id)
+        self._set_queue_gauge()
         return ids
+
+    def _set_queue_gauge(self) -> None:
+        obs.registry().gauge(
+            "serve_queue_depth",
+            "jobs waiting in the ServeEngine queue").set(
+                float(len(self._queue)))
 
     def _validate_submit(self, spec: JobSpec) -> None:
         sspec = solver_spec(spec)     # TypeError for non-config objects
@@ -343,6 +350,7 @@ class ServeEngine:
             ctx = self._restore_run_state()
             if ctx is None:
                 queue, self._queue = self._queue, []
+                self._set_queue_gauge()
                 ctx = {"order": [spec.job_id for spec in queue],
                        "buckets": list(bucketize(queue).values()),
                        "bucket_index": 0, "results": {}, "resume": None}
@@ -398,7 +406,11 @@ class ServeEngine:
             ids = set(resume["pending_ids"])
             pending = deque(it for it in items if it[0].job_id in ids)
 
+        inflight = obs.registry().gauge(
+            "serve_inflight_jobs",
+            "active slots in the currently running bucket")
         while bucket.any_active():
+            inflight.set(float(bucket.active.sum()))
             fn = self._chunk_fn(bucket, T)
             prev_carry = bucket.carry
             t0 = time.perf_counter()
@@ -460,6 +472,7 @@ class ServeEngine:
                                    slot=int(slot), backfill=True)
             self._maybe_checkpoint(bucket, ctx, pending)
 
+        inflight.set(0.0)
         self._finalize_ledger(bucket)
         self.stats.buckets += 1
 

@@ -79,10 +79,12 @@ def solve(problem, network, spec, *, x0=None, y0=None, seed: int = 0,
     serve_engine: optional pre-built `repro.serve.ServeEngine` to run
               tier="serve" solves through (shares its compile cache).
     recorder: optional `repro.obs.RecorderSpec` — threads the in-jit
-              flight recorder through the chunk carry and returns the
-              per-round rows in `extras["flight"]` (reference and
-              serve dagm tiers).  None (the default) leaves every
-              program byte-for-byte as before.
+              flight recorder through the run (the chunk carry on the
+              reference/serve tiers, the shard_map step carry on the
+              sharded tier) and returns the per-round rows in
+              `extras["flight"]` (method="dagm", all three tiers).
+              None (the default) leaves every program byte-for-byte
+              as before.
     """
     spec = as_solver_spec(spec)
     validate_spec(spec)
@@ -91,13 +93,11 @@ def solve(problem, network, spec, *, x0=None, y0=None, seed: int = 0,
             f"metrics_fn is only supported for method='dagm' (the "
             f"baselines record the fixed default_metrics trace); got "
             f"method={spec.method!r}")
-    if recorder is not None and \
-            (spec.method != "dagm" or spec.tier == "sharded"):
+    if recorder is not None and spec.method != "dagm":
         raise ValueError(
-            "the flight recorder rides the dagm chunk carry: "
-            "recorder= needs method='dagm' on tier 'reference' or "
-            "'serve' (the sharded tier's host-driven round loop "
-            "already yields per-round metrics)")
+            "the flight recorder rides the dagm round carry: "
+            "recorder= needs method='dagm' (the baselines record no "
+            "flight rows) — got method=" + repr(spec.method))
     if spec.tier == "reference":
         if spec.method == "dagm":
             return _solve_dagm_reference(problem, network, spec, x0=x0,
@@ -112,7 +112,8 @@ def solve(problem, network, spec, *, x0=None, y0=None, seed: int = 0,
                             engine=serve_engine, recorder=recorder)
     return _solve_sharded(problem, network, spec, x0=x0, y0=y0,
                           seed=seed, metrics_fn=metrics_fn, mesh=mesh,
-                          g_fn=g_fn, f_fn=f_fn, batch=batch)
+                          g_fn=g_fn, f_fn=f_fn, batch=batch,
+                          recorder=recorder)
 
 
 # ---------------------------------------------------------------------------
@@ -322,7 +323,8 @@ def _solve_serve(prob, net, spec: SolverSpec, *, x0, y0, seed,
 # ---------------------------------------------------------------------------
 
 def _solve_sharded(prob, net, spec: SolverSpec, *, x0, y0, seed,
-                   metrics_fn, mesh, g_fn, f_fn, batch) -> SolveResult:
+                   metrics_fn, mesh, g_fn, f_fn, batch,
+                   recorder=None) -> SolveResult:
     from repro.distributed.dagm_sharded import (ShardedRoundCoeffs,
                                                 make_sharded_dagm,
                                                 open_sharded_channels,
@@ -355,7 +357,7 @@ def _solve_sharded(prob, net, spec: SolverSpec, *, x0, y0, seed,
         batch = prob.data
 
     step, w = make_sharded_dagm(g_fn, f_fn, spec, mesh,
-                                schedule_hp=True)
+                                schedule_hp=True, recorder=recorder)
     ax = spec.sharded.axis
     ax_names = ax if isinstance(ax, tuple) else (ax,)
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
@@ -379,6 +381,7 @@ def _solve_sharded(prob, net, spec: SolverSpec, *, x0, y0, seed,
     x, y = x0, y0
     rows = []
     from repro import obs
+    rec = obs.recorder_init(recorder) if recorder is not None else None
     tr = obs.tracer()
     # the sharded tier's round loop is host-driven, so — unlike the
     # reference/serve scans — these per-round spans are real wall-clock
@@ -393,7 +396,20 @@ def _solve_sharded(prob, net, spec: SolverSpec, *, x0, y0, seed,
                                           spec.curvature, w.w_self)))
             with tr.span("outer_round", cat="solver.round",
                          track="solver", round=k):
-                if channels is not None:
+                if rec is not None:
+                    gamma = jnp.float32(sched.gamma[k])
+                    if channels is not None:
+                        x, y, m, channels, rec = step(
+                            x, y, batch, channels, hp, gamma, rec)
+                    elif pol.stochastic:
+                        key = jax.random.fold_in(
+                            jax.random.PRNGKey(seed ^ 0x5eed), k)
+                        x, y, m, rec = step(x, y, batch, key, hp,
+                                            gamma, rec)
+                    else:
+                        x, y, m, rec = step(x, y, batch, hp, gamma,
+                                            rec)
+                elif channels is not None:
                     x, y, m, channels = step(x, y, batch, channels, hp)
                 elif pol.stochastic:
                     key = jax.random.fold_in(
@@ -406,9 +422,12 @@ def _solve_sharded(prob, net, spec: SolverSpec, *, x0, y0, seed,
     local = jax.tree.map(lambda a: a[0], (x0, y0))
     ledger = sharded_comm_ledger(spec, local[0], local[1],
                                  rounds=spec.K)
+    extras = {"ring": w}
+    if rec is not None:
+        extras["flight"] = obs.recorder_rows(rec)
     return SolveResult(x=x, y=y, metrics=metrics, ledger=ledger,
                        channels=channels, method="dagm", tier="sharded",
-                       extras={"ring": w})
+                       extras=extras)
 
 
 def _sharded_policy(spec: SolverSpec):

@@ -318,11 +318,128 @@ def test_reference_faulted_alive_fraction_matches_host_trace():
                                               abs=1e-6)
 
 
-def test_recorder_rejects_sharded_tier():
+def test_recorder_rejects_baseline_methods():
+    # the recorder rides the dagm round carry on all three tiers now —
+    # only the baseline methods (no flight instrumentation) reject it
+    import dataclasses
     prob, net = _problem()
-    with pytest.raises(ValueError, match="recorder"):
-        solve(prob, net, _spec(K=4, tier="sharded"),
-              recorder=obs.RecorderSpec())
+    spec = dataclasses.replace(_spec(K=4), method="ma_dbo")
+    with pytest.raises(ValueError, match="method"):
+        solve(prob, net, spec, recorder=obs.RecorderSpec())
+
+
+# ---------------------------------------------------------------------------
+# bounded resident spans (Tracer eviction)
+# ---------------------------------------------------------------------------
+
+def test_tracer_evicts_oldest_beyond_max_resident():
+    tr = obs.Tracer(enabled=True, max_resident_spans=5)
+    for k in range(12):
+        tr.instant(f"i{k}")
+    events = tr.events()
+    assert len(events) == 5
+    assert [e.name for e in events] == [f"i{k}" for k in range(7, 12)]
+    assert tr.dropped == 7
+    assert obs.counter_value("obs_dropped_spans_total") == 7.0
+    tr.clear()
+    assert tr.dropped == 0 and len(tr) == 0
+
+
+def test_tracer_unbounded_and_validation():
+    tr = obs.Tracer(enabled=True, max_resident_spans=None)
+    for k in range(10):
+        tr.instant(f"i{k}")
+    assert len(tr) == 10 and tr.dropped == 0
+    with pytest.raises(ValueError, match="max_resident_spans"):
+        obs.Tracer(max_resident_spans=0)
+
+
+def test_tracer_sinks_see_events_before_eviction():
+    tr = obs.Tracer(enabled=True, max_resident_spans=2)
+    seen = []
+    tr.add_sink(seen.append)
+    for k in range(6):
+        tr.instant(f"i{k}")
+    # the sink observed every event even though only 2 stayed resident
+    assert [e.name for e in seen] == [f"i{k}" for k in range(6)]
+    assert len(tr) == 2
+    tr.remove_sink(seen.append)
+    tr.instant("after")
+    assert len(seen) == 6
+
+
+# ---------------------------------------------------------------------------
+# streaming exporters
+# ---------------------------------------------------------------------------
+
+def test_streaming_writer_rotates_and_segments_validate(tmp_path):
+    tr = obs.Tracer(enabled=True)
+    with obs.StreamingTraceWriter(tmp_path, flush_every=3,
+                                  rotate_events=6, tracer=tr) as w:
+        for k in range(21):
+            tr.instant(f"i{k}", track=f"t{k % 2}")
+            assert w.resident < 3
+    assert len(w.segments) >= 3
+    assert w.total_events == 21
+    names = []
+    for seg in w.segments:
+        events = obs.read_trace(seg)   # parses AND validates
+        names.extend(e["name"] for e in events if e["ph"] != "M")
+    assert names == [f"i{k}" for k in range(21)]
+
+
+def test_streaming_writer_valid_mid_flush(tmp_path):
+    """Every flush leaves the current segment a complete, valid JSON
+    document — a concurrent reader (or a crash) never sees a torn
+    file."""
+    tr = obs.Tracer(enabled=True)
+    w = obs.StreamingTraceWriter(tmp_path, flush_every=2,
+                                 rotate_events=None, tracer=tr)
+    tr.instant("a")
+    tr.instant("b")            # first flush
+    events = obs.read_trace(w.current_segment)
+    assert [e["name"] for e in events if e["ph"] != "M"] == ["a", "b"]
+    tr.instant("c")
+    tr.instant("d")            # second flush appends in place
+    events = obs.read_trace(w.current_segment)
+    assert [e["name"] for e in events if e["ph"] != "M"] \
+        == ["a", "b", "c", "d"]
+    w.close()
+    assert len(w.segments) == 1
+
+
+def test_streaming_writer_rotate_bytes_and_spans(tmp_path):
+    tr = obs.Tracer(enabled=True)
+    with obs.StreamingTraceWriter(tmp_path, flush_every=1,
+                                  rotate_events=None, rotate_bytes=600,
+                                  tracer=tr) as w:
+        for k in range(8):
+            with tr.span(f"s{k}", cat="t"):
+                pass
+    assert len(w.segments) >= 2
+    for seg in w.segments:
+        for ev in obs.read_trace(seg):
+            if ev["ph"] == "X":
+                assert ev["dur"] >= 0.0
+
+
+def test_metrics_jsonl_writer_rotates_and_parses(tmp_path):
+    reg = obs.MetricsRegistry()
+    reg.counter("c_total", "h").inc()
+    reg.gauge("g", "h").set(2.0)
+    with obs.MetricsJsonlWriter(tmp_path, rotate_bytes=200) as mw:
+        for snap in range(5):
+            n = mw.write_snapshot(reg, snapshot=snap)
+            assert n == 2
+    assert len(mw.segments) >= 2
+    assert mw.total_records == 10
+    recs = []
+    for seg in mw.segments:
+        recs.extend(json.loads(ln) for ln in open(seg))
+    assert len(recs) == 10
+    assert {r["metric"] for r in recs} == {"c_total", "g"}
+    assert {r["snapshot"] for r in recs} == set(range(5))
+    assert all({"kind", "labels", "value"} <= set(r) for r in recs)
 
 
 # ---------------------------------------------------------------------------

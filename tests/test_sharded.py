@@ -422,3 +422,100 @@ def test_solve_sharded_tier(tmp_path):
     assert vals["DEC_FINITE"] == 1
     assert vals["DEC_DIFFERS"] == 1
     assert vals["LEDGER_SENDS"] == 16.0    # (M + U + 1) per round
+
+
+SCRIPT_FLIGHT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, {src!r})
+import jax, jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro import obs
+from repro.core import quadratic_bilevel
+from repro.distributed.dagm_sharded import sharded_comm_ledger
+from repro.solve import dagm_spec, sharded_spec, solve
+from repro.topology import make_network
+
+n, d1, d2, K, curv = 8, 3, 4, 12, 6.0
+prob = quadratic_bilevel(n, d1, d2, seed=0)
+mesh = Mesh(np.array(jax.devices()).reshape(n), ("data",))
+spec = sharded_spec(alpha=0.05, beta=0.1, M=10, U=5, curvature=curv, K=K)
+
+# --- 1. recorder= is bitwise-inert and adds zero retraces ---
+base = solve(prob, None, spec, mesh=mesh, seed=0)
+t0 = obs.counter_value("jit_traces_total", name="sharded_dagm_step")
+res = solve(prob, None, spec, mesh=mesh, seed=0,
+            recorder=obs.RecorderSpec(capacity=32))
+t1 = obs.counter_value("jit_traces_total", name="sharded_dagm_step")
+print("TRACES_DELTA", t1 - t0)
+print("BITSAME", int(np.array_equal(np.asarray(base.x), np.asarray(res.x))
+                     and np.array_equal(np.asarray(base.y),
+                                        np.asarray(res.y))))
+print("METRIC_KEYS_SAME", int(set(res.metrics) == set(base.metrics)))
+
+# --- 2. flight rows: shape, round index, wire == static ledger ---
+fl = res.extras["flight"]
+print("ROWS", fl.shape[0])
+print("COLS", fl.shape[1])
+print("ROUND_OK", int(fl[:, 0].tolist() == [float(k) for k in range(K)]))
+iw = obs.FIELDS.index("wire_bytes")
+ia = obs.FIELDS.index("alive_fraction")
+local = jax.tree.map(lambda a: a[0], (res.x, res.y))
+led = [sharded_comm_ledger(spec, local[0], local[1],
+                           rounds=k + 1).total_bytes for k in range(K)]
+print("WIRE_EXACT", int(all(float(fl[k, iw]) == float(led[k])
+                            for k in range(K))))
+print("ALIVE_OK", int(bool(np.all(fl[:, ia] == 1.0))))
+
+# --- 3. gap/penalty columns agree with the reference-tier recorder
+#        on the same problem, ring, and init ---
+net = make_network("ring", n)
+y0 = 0.01 * jax.random.normal(jax.random.PRNGKey(0), (n, d2), jnp.float32)
+rspec = dagm_spec(alpha=0.05, beta=0.1, K=K, M=10, U=5,
+                  dihgp="matrix_free", curvature=curv)
+rres = solve(prob, net, rspec, x0=jnp.zeros((n, d1), jnp.float32), y0=y0,
+             seed=0, recorder=obs.RecorderSpec(capacity=32))
+rfl = rres.extras["flight"]
+ig = obs.FIELDS.index("outer_gap_sq")
+ip = obs.FIELDS.index("penalty")
+gerr = np.max(np.abs(fl[:, ig] - rfl[:, ig])) / \
+    max(np.max(np.abs(rfl[:, ig])), 1e-12)
+perr = np.max(np.abs(fl[:, ip] - rfl[:, ip])) / \
+    max(np.max(np.abs(rfl[:, ip])), 1e-12)
+print("GAP_RELERR", gerr)
+print("PEN_RELERR", perr)
+print("X_MAXDIFF", float(np.max(np.abs(np.asarray(res.x)
+                                       - np.asarray(rres.x)))))
+"""
+
+
+def test_sharded_flight_recorder(tmp_path):
+    """`solve(tier="sharded", recorder=...)`: recorder-off runs stay
+    bit-identical with zero added retraces, flight rows carry ordered
+    round indices with the wire column exactly equal to the static
+    `sharded_comm_ledger`, and the gap/penalty columns agree with the
+    reference-tier recorder on the same ring and init."""
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    script = SCRIPT_FLIGHT.format(src=os.path.abspath(src))
+    out = subprocess.run([sys.executable, "-c", script],
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    vals = {}
+    for line in out.stdout.splitlines():
+        parts = line.split()
+        if len(parts) == 2:
+            vals[parts[0]] = float(parts[1])
+    assert vals["TRACES_DELTA"] == 1.0   # one compile for the recorded step
+    assert vals["BITSAME"] == 1
+    assert vals["METRIC_KEYS_SAME"] == 1
+    assert vals["ROWS"] == 12 and vals["COLS"] == 5
+    assert vals["ROUND_OK"] == 1
+    assert vals["WIRE_EXACT"] == 1
+    assert vals["ALIVE_OK"] == 1
+    # f32 accumulation across shard_map pmean vs the dense reference
+    assert vals["GAP_RELERR"] < 1e-4
+    assert vals["PEN_RELERR"] < 1e-4
+    assert vals["X_MAXDIFF"] < 1e-5     # same trajectory, two runtimes

@@ -1,0 +1,216 @@
+"""SLO layer tests — Poisson arrivals, latency pairing, quantiles.
+
+The latency numbers the `serve/slo_poisson` bench row and the CI gate
+publish come from `repro.serve.slo`, so the math is pinned here:
+
+  * `poisson_arrivals` is seeded/reproducible and nondecreasing;
+  * `job_latencies` pairs submit/retire instants by job_id against a
+    hand-written schedule (first instant per job wins, unfinished jobs
+    are absent);
+  * `latency_quantiles` matches numpy's linear interpolation on known
+    samples and refuses an empty sample;
+  * `observe_latencies` round-trips through the Prometheus text format
+    with the right cumulative bucket counts;
+  * a hypothesis property: on random Poisson schedules p50 <= p99 and
+    the latency count equals the retire-instant count;
+  * `drive_poisson` end-to-end on a live 4-job engine: every job
+    retires, the report's quantiles agree with its own sample, and the
+    registry gauges land.
+"""
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.obs.spans import SpanEvent
+from repro.serve import (JobSpec, ServeEngine, drive_poisson,
+                         job_latencies, latency_quantiles,
+                         observe_latencies, poisson_arrivals)
+from repro.solve import dagm_spec
+
+
+def _instant(name, ts_us, jid):
+    return SpanEvent(name=name, cat="serve", ts_us=float(ts_us),
+                     dur_us=None, track="engine",
+                     args={"job_id": jid})
+
+
+# ---------------------------------------------------------------------------
+# poisson_arrivals
+# ---------------------------------------------------------------------------
+
+def test_poisson_arrivals_reproducible_and_nondecreasing():
+    a = poisson_arrivals(64, rate_hz=10.0, seed=3)
+    b = poisson_arrivals(64, rate_hz=10.0, seed=3)
+    np.testing.assert_array_equal(a, b)
+    assert a.shape == (64,)
+    assert np.all(np.diff(a) >= 0) and np.all(a > 0)
+    # different seed, different draw
+    c = poisson_arrivals(64, rate_hz=10.0, seed=4)
+    assert not np.array_equal(a, c)
+    # mean inter-arrival gap ~ 1/rate (law of large numbers, loose)
+    gaps = np.diff(poisson_arrivals(20_000, rate_hz=10.0, seed=0))
+    assert abs(gaps.mean() - 0.1) < 0.01
+
+
+def test_poisson_arrivals_validates_inputs():
+    assert poisson_arrivals(0, 5.0).shape == (0,)
+    with pytest.raises(ValueError, match="non-negative"):
+        poisson_arrivals(-1, 5.0)
+    with pytest.raises(ValueError, match="rate_hz"):
+        poisson_arrivals(4, 0.0)
+    with pytest.raises(ValueError, match="rate_hz"):
+        poisson_arrivals(4, -2.0)
+
+
+# ---------------------------------------------------------------------------
+# job_latencies on a hand-written schedule
+# ---------------------------------------------------------------------------
+
+def test_job_latencies_known_schedule():
+    events = [
+        _instant("submit", 1_000, "j0"),
+        _instant("submit", 2_000, "j1"),
+        _instant("retire", 31_000, "j0"),    # 30 ms
+        _instant("retire", 52_000, "j1"),    # 50 ms
+        _instant("submit", 60_000, "j2"),    # never retires
+    ]
+    lat = job_latencies(events)
+    assert lat == pytest.approx({"j0": 0.030, "j1": 0.050})
+    assert "j2" not in lat
+
+
+def test_job_latencies_first_instant_wins_and_ignores_spans():
+    events = [
+        _instant("submit", 1_000, "j0"),
+        _instant("submit", 9_000, "j0"),          # duplicate: ignored
+        SpanEvent(name="retire", cat="serve", ts_us=2_000.0,
+                  dur_us=5.0, track="engine",
+                  args={"job_id": "j0"}),         # a span, not an instant
+        _instant("retire", 11_000, "j0"),
+        _instant("retire", 99_000, "j0"),         # duplicate: ignored
+        _instant("checkpoint", 5_000, "j0"),      # unrelated lifecycle
+    ]
+    lat = job_latencies(events)
+    assert lat == pytest.approx({"j0": 0.010})
+
+
+def test_job_latencies_accepts_tracer():
+    with obs.tracing() as tr:
+        tr.instant("submit", track="engine", job_id="a")
+        tr.instant("retire", track="engine", job_id="a")
+    lat = job_latencies(tr)
+    assert set(lat) == {"a"} and lat["a"] >= 0.0
+
+
+# ---------------------------------------------------------------------------
+# latency_quantiles
+# ---------------------------------------------------------------------------
+
+def test_latency_quantiles_known_values():
+    vals = [float(v) for v in range(1, 11)]        # 1..10
+    q = latency_quantiles(vals)
+    assert q[0.5] == pytest.approx(5.5)
+    assert q[0.99] == pytest.approx(9.91)
+    # order-independent
+    q2 = latency_quantiles(list(reversed(vals)))
+    assert q2 == pytest.approx(q)
+    # degenerate single sample: every quantile is that sample
+    q1 = latency_quantiles([0.25])
+    assert q1[0.5] == q1[0.99] == 0.25
+
+
+def test_latency_quantiles_rejects_empty():
+    with pytest.raises(ValueError, match="no completed jobs"):
+        latency_quantiles([])
+
+
+# ---------------------------------------------------------------------------
+# observe_latencies → Prometheus round-trip
+# ---------------------------------------------------------------------------
+
+def test_observe_latencies_prometheus_roundtrip():
+    reg = obs.MetricsRegistry()
+    # known placement against DEFAULT_BUCKETS edges
+    # (0.001, 0.005, 0.01, 0.05, 0.1, 0.5, 1.0, 5.0, 10.0, +Inf)
+    vals = [0.003, 0.004, 0.02, 0.3, 2.0]
+    quants = observe_latencies(vals, reg=reg, run="t")
+    assert quants[0.5] == pytest.approx(np.quantile(vals, 0.5))
+
+    parsed = obs.parse_prometheus(obs.prometheus_text(reg))
+    pre = 'serve_job_latency_seconds'
+    assert parsed[f'{pre}_count{{run="t"}}'] == 5.0
+    assert parsed[f'{pre}_sum{{run="t"}}'] == pytest.approx(sum(vals))
+    # cumulative bucket counts at a few edges
+    assert parsed[f'{pre}_bucket{{run="t",le="0.005"}}'] == 2.0
+    assert parsed[f'{pre}_bucket{{run="t",le="0.05"}}'] == 3.0
+    assert parsed[f'{pre}_bucket{{run="t",le="0.5"}}'] == 4.0
+    assert parsed[f'{pre}_bucket{{run="t",le="+Inf"}}'] == 5.0
+    assert parsed[f'serve_job_latency_p50_seconds{{run="t"}}'] == \
+        pytest.approx(quants[0.5])
+    assert parsed[f'serve_job_latency_p99_seconds{{run="t"}}'] == \
+        pytest.approx(quants[0.99])
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property: random Poisson schedules
+# ---------------------------------------------------------------------------
+
+def test_property_p50_le_p99_and_counts_match():
+    hypothesis = pytest.importorskip("hypothesis")
+    given, settings = hypothesis.given, hypothesis.settings
+    st = hypothesis.strategies
+
+    @given(n=st.integers(1, 40), seed=st.integers(0, 10_000),
+           rate=st.floats(0.5, 500.0))
+    @settings(max_examples=30, deadline=None)
+    def prop(n, seed, rate):
+        submits = poisson_arrivals(n, rate, seed=seed)
+        rng = np.random.default_rng(seed + 1)
+        service = rng.exponential(scale=0.01, size=n)
+        events = []
+        for j, (s, d) in enumerate(zip(submits, service)):
+            events.append(_instant("submit", s * 1e6, f"j{j}"))
+            events.append(_instant("retire", (s + d) * 1e6, f"j{j}"))
+        lat = job_latencies(events)
+        retires = sum(1 for ev in events if ev.name == "retire")
+        assert len(lat) == retires == n
+        q = latency_quantiles(lat.values())
+        assert q[0.5] <= q[0.99]
+        np.testing.assert_allclose(
+            sorted(lat.values()), sorted(service), rtol=1e-9)
+
+    prop()
+
+
+# ---------------------------------------------------------------------------
+# drive_poisson end-to-end on a live engine
+# ---------------------------------------------------------------------------
+
+def test_drive_poisson_end_to_end():
+    obs.reset_metrics()
+    cfg = dagm_spec(alpha=0.05, beta=0.1, K=6, M=3, U=2,
+                    dihgp="matrix_free", curvature=6.0)
+    specs = [JobSpec("quadratic", {"n": 6, "d1": 3, "d2": 6, "seed": s},
+                     cfg, seed=s, job_id=f"slo{s}") for s in range(4)]
+    eng = ServeEngine(chunk_rounds=3, max_width=4, hp_mode="traced")
+    rep = drive_poisson(eng, specs, rate_hz=400.0, seed=11, run="t")
+
+    assert rep.jobs == 4 and rep.retired == 4
+    assert len(rep.results) == 4
+    assert rep.waves >= 1 and rep.peak_queue_depth >= 1
+    assert rep.latencies_s.shape == (4,)
+    assert np.all(rep.latencies_s > 0)
+    # report quantiles agree with its own sample
+    q = latency_quantiles(rep.latencies_s)
+    assert rep.p50_s == pytest.approx(q[0.5])
+    assert rep.p99_s == pytest.approx(q[0.99])
+    assert rep.p50_s <= rep.p99_s
+    assert rep.throughput_jobs_s > 0
+
+    parsed = obs.parse_prometheus(obs.prometheus_text(obs.registry()))
+    assert parsed['serve_job_latency_seconds_count{run="t"}'] == 4.0
+    assert parsed['serve_peak_queue_depth{run="t"}'] == \
+        float(rep.peak_queue_depth)
+    # the engine's own gauges drained back to idle
+    assert parsed["serve_queue_depth"] == 0.0
+    assert parsed["serve_inflight_jobs"] == 0.0
