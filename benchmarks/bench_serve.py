@@ -32,6 +32,16 @@ arrival stream (`repro.serve.slo.drive_poisson`), published alongside
 the engine's queue-depth/in-flight gauges and gated on p99 with the
 slower-only wall-clock tolerance.
 
+The `serve/slo_async` row drives the SAME seeded schedule through the
+always-on `repro.serve.admission.AdmissionLoop` — jobs join buckets at
+chunk boundaries instead of waiting out wave barriers — and is the
+admission subsystem's acceptance number: p50 AND p99 strictly below
+the wave-mode row, `retraces_across_waves: 0` (one bucket program
+serves the whole stream), every job bit-exact vs its solo run.  The
+`serve/packed_k_bucket` row pins K-packing: a mixed K∈{20,40} queue
+runs as ONE bucket and ONE trace, each job retiring at its own budget,
+bit-exact.
+
 Budgets: "smoke" (scripts/ci.sh tier 2: one tiny bucket + cache-hit
 check, no JSON rewrite), "small" (checked-in results: 64-job and
 16-job buckets + continuous batching + the Poisson SLO row), "full"
@@ -244,6 +254,89 @@ def _slo_poisson_row(n_jobs: int = 24, rate_hz: float = 150.0,
     })
 
 
+def _slo_async_row(wave_row: Row, n_jobs: int = 24,
+                   rate_hz: float = 150.0, seed: int = 7) -> Row:
+    """The admission-loop acceptance row: the SAME seeded Poisson
+    schedule as `serve/slo_poisson`, but jobs enter the always-on
+    `AdmissionLoop` the moment they arrive and join the live bucket at
+    the next chunk boundary — no wave barrier, so the measured tail
+    drops while the math stays bit-identical.  The bucket width is
+    fixed per loop, so the whole stream is served by ONE chunk program
+    (`retraces_across_waves` must be 0)."""
+    from repro import obs
+    from repro.serve import drive_poisson_async
+    from repro.serve.admission import AdmissionLoop
+    obs.tracer().clear()
+    specs = _quad_specs(n_jobs, K=20, d2=16)
+    loop = AdmissionLoop(chunk_rounds=10, max_width=8,
+                         hp_mode="traced")
+    t0 = time.perf_counter()
+    rep = drive_poisson_async(loop, specs, rate_hz=rate_hz, seed=seed,
+                              run="bench_serve_async")
+    wall = time.perf_counter() - t0
+    bit = all(
+        np.array_equal(np.asarray(r.x), np.asarray(
+            solve(build_problem(s), build_network(s), s.config,
+                  seed=s.seed).x))
+        for s, r in zip(specs, rep.results))
+    wave = wave_row.derived
+    return Row("serve/slo_async", wall * 1e6, {
+        "jobs": n_jobs,
+        "rate_hz": rate_hz,
+        "retired": rep.retired,
+        "waves": rep.waves,
+        "latency_p50_ms": round(rep.p50_s * 1e3, 2),
+        "latency_p99_ms": round(rep.p99_s * 1e3, 2),
+        "throughput_jobs_s": round(rep.throughput_jobs_s, 2),
+        "peak_queue_depth": rep.peak_queue_depth,
+        "traces": loop.stats.traces,
+        "retraces_across_waves": loop.stats.traces - 1,
+        "bitexact_vs_solo": bool(bit),
+        "beats_wave_p50": bool(rep.p50_s * 1e3
+                               < wave["latency_p50_ms"]),
+        "beats_wave_p99": bool(rep.p99_s * 1e3
+                               < wave["latency_p99_ms"]),
+    })
+
+
+def _packed_k_row() -> Row:
+    """K-packing contract: jobs identical in everything but their
+    round budget K share ONE bucket and ONE compiled chunk program
+    (the pack signature replaces K with a sentinel; schedules pad to
+    the bucket capacity and each slot retires at its own budget), and
+    every job stays bit-exact with its solo run."""
+    from repro.serve.admission import AdmissionLoop
+    cfg20 = dagm_spec(alpha=0.05, beta=0.1, K=20, M=5, U=3,
+                      dihgp="matrix_free", curvature=6.0)
+    cfg40 = dataclasses.replace(cfg20, K=40)
+    specs = [JobSpec("quadratic", {"n": 8, "d1": 4, "d2": 16, "seed": s},
+                     cfg20 if s % 2 else cfg40, seed=s)
+             for s in range(16)]
+    loop = AdmissionLoop(chunk_rounds=10, max_width=8,
+                         hp_mode="traced")
+    loop.submit(specs)
+    t0 = time.perf_counter()
+    results = loop.run()
+    wall = time.perf_counter() - t0
+    bit = all(
+        np.array_equal(np.asarray(r.x), np.asarray(
+            solve(build_problem(s), build_network(s), s.config,
+                  seed=s.seed).x))
+        for s, r in zip(specs, results))
+    rounds = np.asarray([r.rounds for r in results])
+    return Row("serve/packed_k_bucket", wall * 1e6, {
+        "jobs": len(specs),
+        "k_values": sorted({int(s.config.K) for s in specs}),
+        "buckets": loop.stats.buckets,
+        "traces": loop.stats.traces,
+        "retraces_in_pack": loop.stats.traces - 1,
+        "min_rounds": int(rounds.min()),
+        "max_rounds": int(rounds.max()),
+        "bitexact_vs_solo": bool(bit),
+        "jobs_per_s": round(len(specs) / wall, 2),
+    })
+
+
 def _continuous_row() -> Row:
     """Mixed-deadline queue through a narrow bucket: loose-tol jobs
     retire mid-flight and the queue backfills their slots."""
@@ -294,7 +387,12 @@ def run(budget: str = "small") -> list[Row]:
     # ---- mid-flight retirement + backfill ----
     rows.append(_continuous_row())
     # ---- SLO under Poisson load: p50/p99, not just batch jobs/s ----
-    rows.append(_slo_poisson_row())
+    wave_row = _slo_poisson_row()
+    rows.append(wave_row)
+    # ---- same schedule through the always-on admission loop ----
+    rows.append(_slo_async_row(wave_row))
+    # ---- mixed-K queue packed into one bucket / one trace ----
+    rows.append(_packed_k_row())
 
     if budget == "full":
         rows.append(_bucket_row("bucket32_quad_d128",

@@ -74,16 +74,21 @@ python scripts/obs_smoke.py
 
 echo "=== tier 2: bench regression gate (faults/mixing/serve vs JSON) ==="
 # reruns the faults, mixing and serve modules at the baseline budget
-# and fails on regression: retraces must stay 0, byte ledgers exactly
-# equal, wall clock AND the serve SLO p50/p99 latency keys within a
-# generous 25x (shared-box tolerance, slower-only); snapshots/restores
-# the checked-in JSONs so the tree stays clean
+# and fails on regression: retraces must stay 0 (including the
+# admission loop's serve/slo_async retraces_across_waves — one bucket
+# program must serve the whole Poisson stream), byte ledgers exactly
+# equal, wall clock AND the serve SLO p50/p99 latency keys — both the
+# wave-mode serve/slo_poisson row and the always-on serve/slo_async
+# row — within a generous 25x (shared-box tolerance, slower-only);
+# snapshots/restores the checked-in JSONs so the tree stays clean
 python -m benchmarks.report --gate faults,mixing,serve --wall-tolerance 25
 
 echo "=== tier 2: restart smoke (serve crash safety) ==="
-# kill-and-resume: a subprocess engine dies mid-run via the crash hook,
-# a fresh engine restores from the chunk-boundary checkpoints and must
-# finish bit-exactly equal to an uninterrupted baseline
+# kill-and-resume, twice: a subprocess wave engine dies mid-run via
+# the crash hook and a fresh engine restores bit-exactly; then an
+# AdmissionLoop dies mid-admission (2 jobs in flight, 2 queued but
+# never admitted) and the fresh loop recovers BOTH halves off the
+# loop_*.pkl sidecar, finishing all jobs bit-exactly
 python scripts/restart_smoke.py
 
 echo "=== tier 2: example smoke (quickstart on repro.solve) ==="

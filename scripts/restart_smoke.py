@@ -1,6 +1,8 @@
 """Kill-and-resume restart smoke for the serve engine's crash safety.
 
-Protocol (scripts/ci.sh tier 2):
+Protocol (scripts/ci.sh tier 2), run twice:
+
+**Wave engine** —
 
 1. spawn THIS script as a subprocess in --phase crash mode: an engine
    with a checkpoint directory and the deterministic crash hook
@@ -12,6 +14,13 @@ Protocol (scripts/ci.sh tier 2):
    produce final iterates bit-exactly equal to an uninterrupted
    baseline run — byte-for-byte x, y, rounds and per-channel sends,
 3. success clears the checkpoint directory.
+
+**Admission loop** — the same kill, mid-admission: an `AdmissionLoop`
+with `bucket_width=2` takes 4 submits (2 admitted into the bucket, 2
+still queued-but-unadmitted), crashes after chunk 1, and the fresh
+loop must recover BOTH halves off the `loop_*.pkl` sidecar — the
+in-flight carries and the never-admitted queue entries — then finish
+all 4 jobs bit-exactly vs an uncheckpointed baseline loop.
 
 The subprocess boundary is the point: the resumed engine shares no
 process state (no compile cache, no Python objects) with the crashed
@@ -46,6 +55,13 @@ def _engine(ckpt_dir, **kw):
                        checkpoint_dir=ckpt_dir, **kw)
 
 
+def _loop(ckpt_dir, **kw):
+    from repro.serve.admission import AdmissionLoop
+    return AdmissionLoop(chunk_rounds=4, max_width=2, bucket_width=2,
+                         hp_mode="traced", checkpoint_dir=ckpt_dir,
+                         telemetry=False, **kw)
+
+
 def crash_phase(ckpt_dir: str) -> int:
     """Run until the hook kills chunk 2, then exit CRASH_EXIT."""
     from repro.serve import SimulatedCrash
@@ -59,22 +75,38 @@ def crash_phase(ckpt_dir: str) -> int:
     return 1
 
 
-def main() -> int:
-    ckpt_dir = tempfile.mkdtemp(prefix="restart_smoke_")
+def crash_admission_phase(ckpt_dir: str) -> int:
+    """Kill the admission loop after chunk 1: jobs 0-1 are in flight,
+    jobs 2-3 are still queued and have never touched a bucket."""
+    from repro.serve import SimulatedCrash
+    loop = _loop(ckpt_dir, checkpoint_every=1, crash_after_chunks=1)
+    loop.submit(_specs())
+    try:
+        loop.pump()
+    except SimulatedCrash:
+        return CRASH_EXIT
+    print("ERROR: admission crash hook never fired", file=sys.stderr)
+    return 1
 
-    # the crashing run lives in its own interpreter
+
+def _spawn_crash(phase: str, ckpt_dir: str) -> None:
     proc = subprocess.run(
-        [sys.executable, os.path.abspath(__file__), "--phase", "crash",
+        [sys.executable, os.path.abspath(__file__), "--phase", phase,
          ckpt_dir],
         env={**os.environ,
              "PYTHONPATH": os.pathsep.join(
                  [os.path.join(os.path.dirname(__file__), "..", "src"),
                   os.environ.get("PYTHONPATH", "")])})
     assert proc.returncode == CRASH_EXIT, \
-        f"crash phase exited {proc.returncode}, wanted {CRASH_EXIT}"
+        f"{phase} phase exited {proc.returncode}, wanted {CRASH_EXIT}"
     left = sorted(os.listdir(ckpt_dir))
-    assert left, "crashed engine left no checkpoints behind"
-    print(f"crash phase left {len(left)} checkpoint files")
+    assert left, f"crashed {phase} run left no checkpoints behind"
+    print(f"{phase} phase left {len(left)} checkpoint files")
+
+
+def _wave_smoke() -> None:
+    ckpt_dir = tempfile.mkdtemp(prefix="restart_smoke_")
+    _spawn_crash("crash", ckpt_dir)
 
     # resume in a fresh engine: everything it knows came off disk
     eng = _engine(ckpt_dir)
@@ -101,11 +133,54 @@ def main() -> int:
     print(f"restart smoke OK: {JOBS} jobs bit-exact after "
           f"kill -> restore -> resume (restarts=1)")
     os.rmdir(ckpt_dir)
+
+
+def _admission_smoke() -> None:
+    ckpt_dir = tempfile.mkdtemp(prefix="restart_smoke_adm_")
+    _spawn_crash("crash-admission", ckpt_dir)
+
+    # the fresh loop must see the never-admitted jobs in its queue
+    loop = _loop(ckpt_dir)
+    loop._maybe_restore()
+    queued = loop.queue.job_ids()
+    assert queued == ["job2", "job3"], \
+        f"queued-but-unadmitted jobs lost in the crash: {queued}"
+    assert loop.stats.restarts == 1, \
+        f"expected exactly one restart, got {loop.stats.restarts}"
+    loop.pump()
+    loop.step()   # idle tick clears the checkpoints
+    assert not os.listdir(ckpt_dir), \
+        "drained loop must clear its checkpoints"
+
+    from repro.serve.admission import AdmissionLoop
+    base = AdmissionLoop(chunk_rounds=4, max_width=2, bucket_width=2,
+                         hp_mode="traced")
+    base.submit(_specs())
+    baseline = {r.job_id: r for r in base.run()}
+
+    import numpy as np
+    for jid, b in baseline.items():
+        r = loop.result(jid)
+        assert np.array_equal(np.asarray(r.x), np.asarray(b.x)) \
+            and np.array_equal(np.asarray(r.y), np.asarray(b.y)), \
+            f"{jid}: resumed iterates drifted from baseline"
+        assert r.rounds == b.rounds and r.sends == b.sends, \
+            f"{jid}: rounds/sends mismatch after resume"
+    print(f"admission restart smoke OK: {JOBS} jobs (2 in flight, "
+          f"2 queued-unadmitted) bit-exact after kill -> restore")
+    os.rmdir(ckpt_dir)
+
+
+def main() -> int:
+    _wave_smoke()
+    _admission_smoke()
     return 0
 
 
 if __name__ == "__main__":
-    if len(sys.argv) == 4 and sys.argv[1] == "--phase" \
-            and sys.argv[2] == "crash":
-        sys.exit(crash_phase(sys.argv[3]))
+    if len(sys.argv) == 4 and sys.argv[1] == "--phase":
+        if sys.argv[2] == "crash":
+            sys.exit(crash_phase(sys.argv[3]))
+        if sys.argv[2] == "crash-admission":
+            sys.exit(crash_admission_phase(sys.argv[3]))
     sys.exit(main())

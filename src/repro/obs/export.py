@@ -428,28 +428,48 @@ class MetricsJsonlWriter:
         self._file = None
         self._seq = 0
 
-    def write_snapshot(self, reg, **extra) -> int:
-        """Append the registry's current samples; returns the record
-        count written for this snapshot."""
+    def _segment(self):
         if self._file is None:
             path = os.path.join(
                 self.directory, f"{self.prefix}-{self._seq:05d}.jsonl")
             self._file = open(path, "w")
             self.segments.append(path)
+        return self._file
+
+    def _maybe_rotate(self) -> None:
+        if self.rotate_bytes and self._file.tell() >= self.rotate_bytes:
+            self._file.close()
+            self._file = None
+            self._seq += 1
+
+    def write_snapshot(self, reg, **extra) -> int:
+        """Append the registry's current samples; returns the record
+        count written for this snapshot."""
+        f = self._segment()
         n = 0
         for s in reg.samples():
             rec = {"metric": s.name, "kind": s.kind,
                    "labels": dict(s.labels), "value": s.value}
             rec.update(extra)
-            self._file.write(json.dumps(rec) + "\n")
+            f.write(json.dumps(rec) + "\n")
             n += 1
-        self._file.flush()
+        f.flush()
         self.total_records += n
-        if self.rotate_bytes and self._file.tell() >= self.rotate_bytes:
-            self._file.close()
-            self._file = None
-            self._seq += 1
+        self._maybe_rotate()
         return n
+
+    def write_record(self, rec: dict, **extra) -> None:
+        """Append one arbitrary JSON-safe record to the sink — the
+        escape hatch for structured non-registry payloads (e.g.
+        `repro.serve.SLOReport.as_record()`), sharing the snapshot
+        stream's segments, flushing and rotation."""
+        merged = dict(rec)
+        merged.update(extra)
+        f = self._segment()
+        f.write(json.dumps(merged) + "\n")
+        f.flush()
+        self.total_records += 1
+        self._maybe_rotate()
 
     def close(self) -> None:
         if self._file is not None:

@@ -17,6 +17,14 @@ queued jobs backfill their slots).  Per-job results report rounds,
 convergence, wall-clock share and exact wire bytes from the bucket
 `CommLedger`'s per-slot send counters.
 
+The `admission` subpackage turns the wave-mode engine into an
+always-on service: `AdmissionLoop` accepts `submit()` at any time
+(jobs join at the next chunk boundary), packs near-miss signatures
+that differ only in K into shared buckets, schedules priority/deadline
+classes with bit-exact chunk-boundary preemption, and meters
+per-tenant wire-byte quotas — `drive_poisson_async` measures its tail
+latency on the same seeded schedule as `drive_poisson`.
+
     from repro.serve import JobSpec, ServeEngine
     eng = ServeEngine(chunk_rounds=10)
     eng.submit([JobSpec("ho_regression", {"n": 8, "d": 16, "seed": s},
@@ -26,20 +34,25 @@ convergence, wall-clock share and exact wire bytes from the bucket
     results = eng.run()
 """
 from .jobs import (JobResult, JobSpec, build_network, build_problem,
-                   compile_signature, job_hp, schedule_rows,
-                   solver_spec)
-from .batching import (WIDTHS, BucketState, bucketize, chunk_rounds_for,
-                       pad_width)
+                   compile_signature, job_hp, pack_signature,
+                   schedule_rows, solver_spec)
+from .batching import (WIDTHS, BucketState, PreemptedState, bucketize,
+                       chunk_rounds_for, pad_schedule, pad_width)
 from .engine import HP_MODES, EngineStats, ServeEngine, SimulatedCrash
 from .slo import (SLO_QUANTILES, SLOReport, drive_poisson,
-                  job_latencies, latency_quantiles, observe_latencies,
-                  poisson_arrivals)
+                  drive_poisson_async, job_latencies, latency_quantiles,
+                  observe_latencies, poisson_arrivals)
+from .admission import (AdmissionLoop, AdmissionQueue, DEFAULT_CLASSES,
+                        PriorityClass, QuotaExceeded, TenantLedger)
 
 __all__ = [
-    "BucketState", "EngineStats", "HP_MODES", "JobResult", "JobSpec",
-    "SLOReport", "SLO_QUANTILES", "ServeEngine", "SimulatedCrash",
-    "WIDTHS", "bucketize", "build_network", "build_problem",
-    "chunk_rounds_for", "compile_signature", "drive_poisson", "job_hp",
-    "job_latencies", "latency_quantiles", "observe_latencies",
-    "pad_width", "poisson_arrivals", "schedule_rows", "solver_spec",
+    "AdmissionLoop", "AdmissionQueue", "BucketState", "DEFAULT_CLASSES",
+    "EngineStats", "HP_MODES", "JobResult", "JobSpec", "PreemptedState",
+    "PriorityClass", "QuotaExceeded", "SLOReport", "SLO_QUANTILES",
+    "ServeEngine", "SimulatedCrash", "TenantLedger", "WIDTHS",
+    "bucketize", "build_network", "build_problem", "chunk_rounds_for",
+    "compile_signature", "drive_poisson", "drive_poisson_async",
+    "job_hp", "job_latencies", "latency_quantiles", "observe_latencies",
+    "pack_signature", "pad_schedule", "pad_width", "poisson_arrivals",
+    "schedule_rows", "solver_spec",
 ]

@@ -42,6 +42,9 @@ from repro.topology import Network
 from .jobs import (JobSpec, Signature, compile_signature, job_hp,
                    schedule_rows, solver_spec)
 
+__all__ = ["WIDTHS", "BucketState", "PreemptedState", "RetiredJob",
+           "bucketize", "chunk_rounds_for", "pad_schedule", "pad_width"]
+
 #: Bucket widths (powers of two, floor 2 — see module docstring).
 WIDTHS = (2, 4, 8, 16, 32, 64)
 
@@ -72,6 +75,23 @@ def chunk_rounds_for(K: int, requested: int) -> int:
         if K % t == 0:
             return t
     return K
+
+
+def pad_schedule(rows: np.ndarray, K: int) -> np.ndarray:
+    """Pad (K_j, 3) schedule rows to a bucket's (K, 3) by repeating the
+    last row.  The padding rows sit past the job's round budget — the
+    slot retires (budget) or is frozen (mask) before any of them is
+    scanned, so the values are inert; repeating the last row keeps them
+    finite and well-conditioned for padding slots that do compute."""
+    rows = np.asarray(rows, np.float32)
+    if rows.shape[0] > K:
+        raise ValueError(
+            f"schedule has {rows.shape[0]} rows but the bucket budget "
+            f"is K={K} — a job cannot out-run its bucket")
+    if rows.shape[0] == K:
+        return rows
+    pad = np.repeat(rows[-1:], K - rows.shape[0], axis=0)
+    return np.concatenate([rows, pad], axis=0)
 
 
 def bucketize(specs) -> dict:
@@ -108,6 +128,27 @@ class RetiredJob:
     #                               carries a FlightBuffer
 
 
+@dataclasses.dataclass
+class PreemptedState:
+    """A mid-flight job lifted out of its slot at a chunk boundary.
+
+    Holds everything `BucketState.admit(..., resume=)` needs to put the
+    job back bit-exactly: the host copy of the slot's carry slice (the
+    exact chunk-boundary state — iterates, channel error-feedback
+    replicas, send counters, flight buffer), the rounds already run and
+    the accounting that travels with them.  Pure numpy/host data, so it
+    pickles through the admission loop's checkpoint sidecar; the
+    admission loop additionally spools `carry` through
+    `repro.checkpoint` (`spool_step`) when checkpointing is on."""
+    spec: JobSpec
+    carry: Any                    # host (np-leaf) carry slice
+    rounds: int
+    wall: float
+    metric_log: list
+    spool_step: int | None = None   # repro.checkpoint step under the
+    #                                 loop's preempt/ subdir, when set
+
+
 class BucketState:
     """Device-resident state of one in-flight bucket.
 
@@ -120,7 +161,7 @@ class BucketState:
 
     def __init__(self, signature: Signature, width: int,
                  template: BilevelProblem, net: Network, op, spec,
-                 recorder=None):
+                 recorder=None, bucket_K: int | None = None):
         self.signature = signature
         self.width = width
         self.template = template
@@ -128,6 +169,11 @@ class BucketState:
         self.op = op
         self.spec = spec                   # SolverSpec; static fields
         #                                    authoritative for the bucket
+        # schedule capacity of the bucket: spec.K for homogeneous
+        # buckets, the pack max for K-packed buckets (admission loop) —
+        # every slot's schedule rows are padded to this length and each
+        # slot retires at its OWN budget (below)
+        self.K = int(bucket_K if bucket_K is not None else spec.K)
         self.recorder = recorder           # obs.RecorderSpec | None —
         #                                    when set, the carry grows a
         #                                    per-slot FlightBuffer leaf
@@ -135,6 +181,9 @@ class BucketState:
         self.slots: list[JobSpec | None] = [None] * width
         self.active = np.zeros(width, bool)
         self.rounds = np.zeros(width, np.int64)
+        # per-slot round budget: solver_spec(job).K, ≤ self.K — the
+        # retire threshold for K-packed buckets
+        self.budget = np.full(width, self.K, np.int64)
         self.wall = np.zeros(width, np.float64)
         self.retired: list[RetiredJob] = []
         # per-slot chunk metric slices (engine appends when recording)
@@ -145,7 +194,9 @@ class BucketState:
             lambda leaf: jnp.broadcast_to(
                 leaf[None], (width,) + leaf.shape), template.data)
         # padding slots carry the template spec's schedule rows
-        self.sched = np.tile(schedule_rows(spec)[None], (width, 1, 1))
+        self.sched = np.tile(
+            pad_schedule(schedule_rows(spec), self.K)[None],
+            (width, 1, 1))
         self.curv = np.full((width,), spec.curvature or 0.0, np.float32)
         carry1 = dagm_init_carry(template, op, spec, seed=0,
                                  recorder=recorder)
@@ -155,27 +206,58 @@ class BucketState:
 
     # -- slot lifecycle ----------------------------------------------------
 
-    def admit(self, slot: int, spec: JobSpec, prob: BilevelProblem
-              ) -> None:
-        """Write one job's round-0 state into `slot`."""
+    def admit(self, slot: int, spec: JobSpec, prob: BilevelProblem,
+              resume: PreemptedState | None = None) -> None:
+        """Write one job's state into `slot`: round-0 (fresh admit,
+        exactly `dagm_init_carry`'s output) or the preserved
+        chunk-boundary state of a preempted job (`resume`) — either
+        way the slot's forward trajectory is the solo run's."""
         assert not self.active[slot], f"slot {slot} still active"
         self.slots[slot] = spec
         self.active[slot] = True
-        self.rounds[slot] = 0
-        self.wall[slot] = 0.0
-        self.metric_log[slot] = []
-        self.sched[slot] = job_hp(spec)
+        self.budget[slot] = solver_spec(spec).K
+        self.sched[slot] = pad_schedule(job_hp(spec), self.K)
         if self.has_curvature:
             self.curv[slot] = np.float32(solver_spec(spec).curvature)
         self.data = jax.tree.map(
             lambda stack, leaf: stack.at[slot].set(leaf),
             self.data, prob.data)
-        carry1 = dagm_init_carry(prob, self.op, self.spec,
-                                 seed=spec.seed,
-                                 recorder=self.recorder)
+        if resume is None:
+            self.rounds[slot] = 0
+            self.wall[slot] = 0.0
+            self.metric_log[slot] = []
+            carry1 = dagm_init_carry(prob, self.op, self.spec,
+                                     seed=spec.seed,
+                                     recorder=self.recorder)
+        else:
+            self.rounds[slot] = int(resume.rounds)
+            self.wall[slot] = float(resume.wall)
+            self.metric_log[slot] = list(resume.metric_log)
+            carry1 = resume.carry
         self.carry = jax.tree.map(
-            lambda stack, leaf: stack.at[slot].set(leaf),
+            lambda stack, leaf: stack.at[slot].set(jnp.asarray(leaf)),
             self.carry, carry1)
+
+    def preempt(self, slot: int) -> PreemptedState:
+        """Lift a mid-flight job out of `slot` at a chunk boundary.
+
+        Returns the exact host copy of the slot's chunk-boundary state;
+        `admit(..., resume=)` restores it into any slot of a bucket
+        running the same program (f32/int leaves round-trip through
+        numpy exactly, so the resumed trajectory is bit-identical to
+        the uninterrupted one)."""
+        assert self.active[slot], f"slot {slot} not active"
+        spec = self.slots[slot]
+        carry = jax.tree.map(lambda leaf: np.asarray(leaf[slot]),
+                             self.carry)
+        state = PreemptedState(
+            spec=spec, carry=carry, rounds=int(self.rounds[slot]),
+            wall=float(self.wall[slot]),
+            metric_log=list(self.metric_log[slot]))
+        self.slots[slot] = None
+        self.active[slot] = False
+        self.metric_log[slot] = []
+        return state
 
     def retire(self, slot: int, final_gap: float, converged: bool,
                quarantined: bool = False) -> RetiredJob:
@@ -219,6 +301,7 @@ class BucketState:
             "slots": list(self.slots),
             "active": self.active.copy(),
             "rounds": self.rounds.copy(),
+            "budget": self.budget.copy(),
             "wall": self.wall.copy(),
             "sched": self.sched.copy(),
             "curv": self.curv.copy(),
@@ -230,6 +313,9 @@ class BucketState:
         self.slots = list(snap["slots"])
         self.active = np.asarray(snap["active"], bool).copy()
         self.rounds = np.asarray(snap["rounds"], np.int64).copy()
+        self.budget = np.asarray(
+            snap.get("budget", np.full(self.width, self.K)),
+            np.int64).copy()
         self.wall = np.asarray(snap["wall"], np.float64).copy()
         self.sched = np.asarray(snap["sched"], np.float32).copy()
         self.curv = np.asarray(snap["curv"], np.float32).copy()
@@ -250,8 +336,8 @@ class BucketState:
         (slots mid-flight and freshly-backfilled slots differ).
         Inactive slots are clamped into range — their carry is frozen
         behind the mask, so the values they scan are irrelevant."""
-        K = self.spec.K
-        return np.minimum(self.rounds, max(K - T, 0)).astype(np.int64)
+        return np.minimum(self.rounds,
+                          max(self.K - T, 0)).astype(np.int64)
 
     def hp_chunk(self, T: int) -> dict:
         """The chunk's hyper-parameter operands: per-slot (T,) α/β/γ

@@ -406,75 +406,101 @@ class ServeEngine:
             ids = set(resume["pending_ids"])
             pending = deque(it for it in items if it[0].job_id in ids)
 
+        def backfill(bkt, slot):
+            if not pending:
+                return False
+            spec_b, prob_b = pending.popleft()
+            bkt.admit(slot, spec_b, prob_b)
+            tr.instant("admit", cat="serve.lifecycle", track="engine",
+                       job_id=spec_b.job_id, slot=int(slot),
+                       backfill=True)
+            return True
+
         inflight = obs.registry().gauge(
             "serve_inflight_jobs",
             "active slots in the currently running bucket")
         while bucket.any_active():
             inflight.set(float(bucket.active.sum()))
-            fn = self._chunk_fn(bucket, T)
-            prev_carry = bucket.carry
-            t0 = time.perf_counter()
-            with tr.span("chunk", cat="serve.chunk", track="engine",
-                         rounds=T, width=width,
-                         active=int(bucket.active.sum())) as chunk_sp:
-                if self.hp_mode == "static":
-                    carry, metrics = self._invoke_chunk(
-                        fn, (bucket.data, bucket.carry,
-                             bucket.active_mask()))
-                else:
-                    hp = {k: jnp.asarray(v)
-                          for k, v in bucket.hp_chunk(T).items()}
-                    carry, metrics = self._invoke_chunk(
-                        fn, (bucket.data, hp, bucket.carry,
-                             bucket.active_mask()))
-                chunk_sp.annotate(traces=self._trace_counter.count)
-            dt = time.perf_counter() - t0
-            self.stats.chunks += 1
-            bucket.carry = carry
-
-            ran = bucket.active.copy()   # slots that ran this chunk
-            bad = self._poisoned_slots(bucket)
-            if bad.any():
-                self._quarantine(bucket, prev_carry, bad, results,
-                                 pending)
-            # freshly backfilled slots (quarantine replacements) start
-            # at the NEXT chunk; only surviving runners earn this one
-            active = np.nonzero(ran & ~bad)[0]
-            bucket.rounds[active] += T
-            bucket.wall[active] += dt / max(len(active), 1)
-            if self.record_metrics:
-                host = jax.tree.map(np.asarray, metrics)
-                for slot in active:
-                    bucket.metric_log[slot].append(
-                        {k: v[slot] for k, v in host.items()})
-            gaps = np.asarray(metrics["hypergrad_est_norm_sq"])[:, -1]
-            for slot in active:
-                spec = bucket.slots[slot]
-                converged = spec.tol is not None \
-                    and float(gaps[slot]) <= spec.tol
-                if converged or bucket.rounds[slot] >= sspec.K:
-                    rec = bucket.retire(slot, float(gaps[slot]),
-                                        converged)
-                    tr.instant("retire", cat="serve.lifecycle",
-                               track="engine",
-                               job_id=rec.spec.job_id, slot=int(slot),
-                               rounds=rec.rounds,
-                               converged=rec.converged)
-                    results[rec.spec.job_id] = self._make_result(
-                        bucket, rec)
-                    self.stats.jobs_completed += 1
-                    if pending:
-                        spec_b, prob_b = pending.popleft()
-                        bucket.admit(slot, spec_b, prob_b)
-                        tr.instant("admit", cat="serve.lifecycle",
-                                   track="engine",
-                                   job_id=spec_b.job_id,
-                                   slot=int(slot), backfill=True)
+            self._advance_bucket(bucket, T, results, backfill)
             self._maybe_checkpoint(bucket, ctx, pending)
 
         inflight.set(0.0)
         self._finalize_ledger(bucket)
         self.stats.buckets += 1
+
+    def _advance_bucket(self, bucket: BucketState, T: int,
+                        results: dict, backfill) -> None:
+        """One T-round chunk + the boundary processing that follows:
+        poison quarantine, rounds/wall/metrics accounting, retirement
+        of converged/budget-exhausted slots, and backfill.
+
+        This is the shared scheduling primitive: `run()`'s wave loop
+        and `repro.serve.admission`'s always-on loop both advance
+        buckets through it.  `backfill(bucket, slot) -> bool` fills a
+        freed slot from whatever queue the caller owns (the wave
+        pending deque, the admission queue); each retirement also hits
+        the `_on_retired` hook (a no-op here — the admission loop uses
+        it for completion events and tenant quota charging)."""
+        tr = obs.tracer()
+        fn = self._chunk_fn(bucket, T)
+        prev_carry = bucket.carry
+        t0 = time.perf_counter()
+        with tr.span("chunk", cat="serve.chunk", track="engine",
+                     rounds=T, width=bucket.width,
+                     active=int(bucket.active.sum())) as chunk_sp:
+            if self.hp_mode == "static":
+                carry, metrics = self._invoke_chunk(
+                    fn, (bucket.data, bucket.carry,
+                         bucket.active_mask()))
+            else:
+                hp = {k: jnp.asarray(v)
+                      for k, v in bucket.hp_chunk(T).items()}
+                carry, metrics = self._invoke_chunk(
+                    fn, (bucket.data, hp, bucket.carry,
+                         bucket.active_mask()))
+            chunk_sp.annotate(traces=self._trace_counter.count)
+        dt = time.perf_counter() - t0
+        self.stats.chunks += 1
+        bucket.carry = carry
+
+        ran = bucket.active.copy()   # slots that ran this chunk
+        bad = self._poisoned_slots(bucket)
+        if bad.any():
+            self._quarantine(bucket, prev_carry, bad, results,
+                             backfill)
+        # freshly backfilled slots (quarantine replacements) start
+        # at the NEXT chunk; only surviving runners earn this one
+        active = np.nonzero(ran & ~bad)[0]
+        bucket.rounds[active] += T
+        bucket.wall[active] += dt / max(len(active), 1)
+        if self.record_metrics:
+            host = jax.tree.map(np.asarray, metrics)
+            for slot in active:
+                bucket.metric_log[slot].append(
+                    {k: v[slot] for k, v in host.items()})
+        gaps = np.asarray(metrics["hypergrad_est_norm_sq"])[:, -1]
+        for slot in active:
+            spec = bucket.slots[slot]
+            converged = spec.tol is not None \
+                and float(gaps[slot]) <= spec.tol
+            if converged or bucket.rounds[slot] >= bucket.budget[slot]:
+                rec = bucket.retire(slot, float(gaps[slot]),
+                                    converged)
+                tr.instant("retire", cat="serve.lifecycle",
+                           track="engine",
+                           job_id=rec.spec.job_id, slot=int(slot),
+                           rounds=rec.rounds,
+                           converged=rec.converged)
+                result = self._make_result(bucket, rec)
+                results[rec.spec.job_id] = result
+                self.stats.jobs_completed += 1
+                self._on_retired(rec, result)
+                backfill(bucket, slot)
+
+    def _on_retired(self, rec, result: JobResult) -> None:
+        """Retirement hook (wave mode: nothing beyond the results dict
+        the caller already owns).  `repro.serve.admission` overrides it
+        to resolve completion events and charge tenant quotas."""
 
     # -- fault tolerance ---------------------------------------------------
 
@@ -509,7 +535,7 @@ class ServeEngine:
         return bucket.active & ~finite
 
     def _quarantine(self, bucket: BucketState, prev_carry, bad,
-                    results: dict, pending: deque) -> None:
+                    results: dict, backfill) -> None:
         """Roll the poisoned slots back to their pre-chunk state (the
         other tenants keep the chunk's results), retire them as
         quarantined and backfill.  Rounds/sends roll back with the
@@ -525,14 +551,11 @@ class ServeEngine:
             obs.instant("quarantine", cat="serve.lifecycle",
                         track="engine", job_id=rec.spec.job_id,
                         slot=int(slot), rounds=rec.rounds)
-            results[rec.spec.job_id] = self._make_result(bucket, rec)
+            result = self._make_result(bucket, rec)
+            results[rec.spec.job_id] = result
             self.stats.quarantined += 1
-            if pending:
-                spec_q, prob_q = pending.popleft()
-                bucket.admit(slot, spec_q, prob_q)
-                obs.instant("admit", cat="serve.lifecycle",
-                            track="engine", job_id=spec_q.job_id,
-                            slot=int(slot), backfill=True)
+            self._on_retired(rec, result)
+            backfill(bucket, slot)
 
     # -- crash checkpoints (repro.checkpoint) ------------------------------
 

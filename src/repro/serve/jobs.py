@@ -63,6 +63,11 @@ class JobSpec:
               ‖∇̂F‖²; a job whose last chunked round reaches it retires
               early and its slot is backfilled from the queue.
     job_id:   caller's handle (auto-assigned when None).
+    tenant:   billing identity for `repro.serve.admission` quota
+              ledgers; never part of the compile signature.
+    klass:    priority-class name (`admission.classes`) consumed by the
+              async admission loop; the wave-mode engine ignores it.
+              Never part of the compile signature.
     """
     family: Any
     problem: dict
@@ -72,6 +77,8 @@ class JobSpec:
     seed: int = 0
     tol: float | None = None
     job_id: str | None = None
+    tenant: str = "default"
+    klass: str = "standard"
 
 
 @dataclasses.dataclass
@@ -155,6 +162,23 @@ def compile_signature(spec: JobSpec, prob: BilevelProblem) -> Signature:
     path, same loop bounds.  Per-job data values, seeds, curvature
     bounds and schedule *values* deliberately stay out (they are the
     sweep axes)."""
+    return _signature(spec, prob, k_entry=None)
+
+
+def pack_signature(spec: JobSpec, prob: BilevelProblem) -> Signature:
+    """`compile_signature` with the round budget K replaced by a
+    sentinel: the near-miss bucket key for `repro.serve.admission`'s
+    K-packing.  Jobs that differ ONLY in K share a pack signature —
+    the chunk program scans T rounds regardless of K, so packing them
+    into one bucket (budget K padded to the pack max, each slot
+    retiring at its own budget) reuses a single trace across
+    heterogeneous round budgets.  Everything else that shapes the
+    trace still keys the bucket."""
+    return _signature(spec, prob, k_entry="K:packed")
+
+
+def _signature(spec: JobSpec, prob: BilevelProblem,
+               k_entry) -> Signature:
     from repro.core.dagm import dagm_validate
     s = solver_spec(spec)
     dagm_validate(s)
@@ -182,5 +206,5 @@ def compile_signature(spec: JobSpec, prob: BilevelProblem) -> Signature:
         graph = (spec.graph,) + tuple(sorted(spec.graph_kwargs.items()))
     return (spec.family, prob.n, prob.d1, prob.d2, leaf_shapes, graph,
             s.mixing.backend, s.mixing.dtype, s.mixing.interpret,
-            s.comm.spec, s.dihgp, s.K, s.M, s.U,
-            s.curvature is not None)
+            s.comm.spec, s.dihgp, s.K if k_entry is None else k_entry,
+            s.M, s.U, s.curvature is not None)

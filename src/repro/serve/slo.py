@@ -59,19 +59,25 @@ def poisson_arrivals(n: int, rate_hz: float, seed: int = 0) -> np.ndarray:
 
 
 def job_latencies(events, *, start: str = "submit",
-                  end: str = "retire") -> dict[str, float]:
+                  end: str = "retire",
+                  since: float | None = None) -> dict[str, float]:
     """Pair lifecycle instants by `args["job_id"]` → latency seconds.
 
     `events` is a `Tracer` or a raw SpanEvent list.  The first `start`
     instant and the first `end` instant per job id win (job ids are
     unique per engine run); jobs with no `end` yet are simply absent —
-    the caller decides whether in-flight jobs matter."""
+    the caller decides whether in-flight jobs matter.  `since` (tracer
+    µs, compare `Tracer.now_us`) ignores instants recorded before it —
+    how a long-lived service's driver scopes one measurement window out
+    of an always-on tracer without clearing it."""
     if hasattr(events, "events"):
         events = events.events()
     starts: dict[str, float] = {}
     ends: dict[str, float] = {}
     for ev in events:
         if ev.dur_us is not None or "job_id" not in ev.args:
+            continue
+        if since is not None and ev.ts_us < since:
             continue
         jid = ev.args["job_id"]
         if ev.name == start and jid not in starts:
@@ -135,6 +141,18 @@ class SLOReport:
     throughput_jobs_s: float      # retired / wall
     results: list                 # JobResults in completion-wave order
 
+    def as_record(self) -> dict:
+        """JSON-safe dict for `obs.MetricsJsonlWriter.write_record` —
+        the whole report minus `results` (JobResults hold device
+        arrays; the metrics sink wants numbers), latencies as a plain
+        list."""
+        rec = {f.name: getattr(self, f.name)
+               for f in dataclasses.fields(self)
+               if f.name != "results"}
+        rec["latencies_s"] = [float(v) for v in self.latencies_s]
+        rec["kind"] = "slo_report"
+        return rec
+
 
 def drive_poisson(engine, specs: Iterable, rate_hz: float,
                   seed: int = 0, reg=None, **labels) -> SLOReport:
@@ -185,6 +203,60 @@ def drive_poisson(engine, specs: Iterable, rate_hz: float,
     return SLOReport(
         jobs=len(specs), retired=int(vals.size), wall_s=wall,
         rate_hz=float(rate_hz), waves=waves,
+        peak_queue_depth=peak_queue, latencies_s=vals,
+        p50_s=quants[0.5], p99_s=quants[0.99],
+        throughput_jobs_s=float(vals.size) / max(wall, 1e-9),
+        results=results)
+
+
+def drive_poisson_async(loop, specs: Iterable, rate_hz: float,
+                        seed: int = 0, reg=None,
+                        **labels) -> SLOReport:
+    """`drive_poisson` against an `admission.AdmissionLoop`: the SAME
+    seeded arrival schedule, but jobs are submitted to the always-on
+    loop the moment they arrive and join buckets at the next chunk
+    boundary — no wave barrier, so a job's latency no longer includes
+    waiting out every earlier arrival's full run.  `waves` is 0 by
+    construction; the before/after against `drive_poisson` on the same
+    schedule is the admission loop's headline number."""
+    specs = list(specs)
+    arrivals = poisson_arrivals(len(specs), rate_hz, seed)
+    submitted: list[str] = []
+    peak_queue = 0
+    own_thread = not loop.running
+    with obs.tracing() as tr:
+        since = tr.now_us()
+        if own_thread:
+            loop.start()
+        try:
+            t0 = time.perf_counter()
+            for i, spec in enumerate(specs):
+                wait = arrivals[i] - (time.perf_counter() - t0)
+                if wait > 0:
+                    time.sleep(wait)
+                ids = loop.submit(spec)
+                for jid in ids:
+                    tr.instant("arrival", cat="serve.slo", track="load",
+                               job_id=jid,
+                               scheduled_s=float(arrivals[i]))
+                submitted.extend(ids)
+                peak_queue = max(peak_queue, len(loop.queue))
+            results = [loop.result(jid) for jid in submitted]
+            wall = time.perf_counter() - t0
+        finally:
+            if own_thread:
+                loop.stop()
+        lat = job_latencies(tr.events(), since=since)
+    vals = np.array([lat[jid] for jid in submitted if jid in lat])
+    quants = observe_latencies(vals, reg=reg, **labels)
+    reg = reg or obs.registry()
+    reg.gauge(
+        "serve_peak_queue_depth",
+        "max queued jobs observed at a Poisson wave boundary"
+    ).labels(**labels).set(float(peak_queue))
+    return SLOReport(
+        jobs=len(specs), retired=int(vals.size), wall_s=wall,
+        rate_hz=float(rate_hz), waves=0,
         peak_queue_depth=peak_queue, latencies_s=vals,
         p50_s=quants[0.5], p99_s=quants[0.99],
         throughput_jobs_s=float(vals.size) / max(wall, 1e-9),

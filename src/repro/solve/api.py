@@ -78,6 +78,10 @@ def solve(problem, network, spec, *, x0=None, y0=None, seed: int = 0,
     mesh:     jax Mesh, required by tier="sharded".
     serve_engine: optional pre-built `repro.serve.ServeEngine` to run
               tier="serve" solves through (shares its compile cache).
+              A `repro.serve.admission.AdmissionLoop` works too: the
+              solve is submitted into the live service and joins a
+              bucket at the next chunk boundary, sharing slots with
+              whatever jobs the loop is already running.
     recorder: optional `repro.obs.RecorderSpec` — threads the in-jit
               flight recorder through the run (the chunk carry on the
               reference/serve tiers, the shard_map step carry on the

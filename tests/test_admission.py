@@ -1,0 +1,533 @@
+"""repro.serve.admission — always-on loop contracts.
+
+Pins the subsystem's four claims: async admission at chunk boundaries
+is bit-exact vs solo runs under ANY interleaving of submits and
+boundary admits (property-tested), K-packed buckets share one trace
+while each slot retires at its own budget, priority preemption
+checkpoints and resumes carries bit-exactly (including through a
+crash), and tenant quotas reject/deprioritize on exact ledger bytes.
+"""
+import dataclasses
+import glob
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core import DAGMConfig, dagm_run
+from repro.serve import (JobSpec, SimulatedCrash, build_network,
+                         build_problem)
+from repro.serve.admission import (DEFAULT_CLASSES, AdmissionLoop,
+                                   DEPRIORITIZED_PRIORITY,
+                                   PriorityClass, QuotaExceeded,
+                                   TenantLedger, admission_key,
+                                   compatible, pack_chunk_rounds,
+                                   plan_bucket, resolve_class)
+
+CFG = DAGMConfig(alpha=0.05, beta=0.1, K=20, M=5, U=3,
+                 dihgp="matrix_free", curvature=6.0)
+
+
+def quad_spec(data_seed, K=20, **kw):
+    return JobSpec("quadratic", {"n": 6, "d1": 4, "d2": 8,
+                                 "seed": data_seed},
+                   dataclasses.replace(CFG, K=K), seed=data_seed, **kw)
+
+
+def solo(spec):
+    return dagm_run(build_problem(spec), build_network(spec),
+                    spec.config, seed=spec.seed)
+
+
+def assert_bitexact(result, spec):
+    ref = solo(spec)
+    assert np.array_equal(np.asarray(result.x), np.asarray(ref.x))
+    assert np.array_equal(np.asarray(result.y), np.asarray(ref.y))
+
+
+# ---------------------------------------------------------------------------
+# classes / quotas / packing units
+# ---------------------------------------------------------------------------
+
+def test_admission_key_total_order():
+    # priority first (higher drains first), then deadline, then seq
+    assert admission_key(100, None, 5) < admission_key(10, 0.1, 0)
+    assert admission_key(10, 1.0, 9) < admission_key(10, 2.0, 0)
+    assert admission_key(10, None, 0) > admission_key(10, 99.0, 1)
+    assert admission_key(10, None, 0) < admission_key(10, None, 1)
+
+
+def test_priority_class_validation():
+    with pytest.raises(ValueError, match="non-empty"):
+        PriorityClass("", 1)
+    with pytest.raises(ValueError, match="deadline_s"):
+        PriorityClass("x", 1, deadline_s=0.0)
+    with pytest.raises(ValueError, match="unknown priority class"):
+        resolve_class(DEFAULT_CLASSES, "platinum")
+
+
+def test_tenant_ledger_modes():
+    led = TenantLedger(budgets={"a": 100}, mode="reject")
+    assert led.remaining("a") == 100
+    assert led.budget("other") is None          # unmetered by default
+    led.charge("a", 60)
+    assert led.admit("a", 10) == 10             # still under budget
+    led.charge("a", 60)
+    assert led.over_budget("a")
+    with pytest.raises(QuotaExceeded, match="120 spent of 100"):
+        led.admit("a", 10)
+    assert led.admit("other", 10) == 10         # unmetered passes
+
+    soft = TenantLedger(budgets={"a": 1}, mode="deprioritize")
+    soft.charge("a", 5)
+    assert soft.admit("a", 10) == DEPRIORITIZED_PRIORITY
+
+    with pytest.raises(ValueError, match="unknown quota mode"):
+        TenantLedger(mode="meter")
+
+
+def test_pack_chunk_rounds_and_compatible():
+    assert pack_chunk_rounds([20, 40], 10) == 10
+    assert pack_chunk_rounds([20, 30], 10) == 10
+    assert pack_chunk_rounds([6, 9], 10) == 3
+    assert pack_chunk_rounds([5, 7], 10) is None   # no common divisor >= 2
+    assert pack_chunk_rounds([1, 8], 10) is None   # K=1 can't chunk
+    assert compatible(20, 10, 40, 20)
+    assert not compatible(0, 10, 40, 20)           # nothing left to run
+    assert not compatible(15, 10, 40, 15)          # misses the boundary
+    assert not compatible(20, 10, 20, 40)          # rows overflow capacity
+
+
+def test_plan_bucket_prefers_widest_pack():
+    E = dataclasses.make_dataclass("E", ["budget", "remaining"])
+    T, K_max, adm = plan_bucket([E(20, 20), E(40, 40), E(30, 30)], 10)
+    assert (T, K_max) == (10, 40) and len(adm) == 3
+    # no common divisor: plan around the head, pick up who fits
+    T, K_max, adm = plan_bucket([E(20, 20), E(7, 7)], 10)
+    assert T == 10 and [e.budget for e in adm] == [20]
+
+
+# ---------------------------------------------------------------------------
+# async admission: mid-flight submits, bit-exact vs solo
+# ---------------------------------------------------------------------------
+
+def test_midflight_submit_joins_at_chunk_boundary():
+    loop = AdmissionLoop(chunk_rounds=10, max_width=2, bucket_width=2,
+                         hp_mode="traced")
+    first = [quad_spec(0), quad_spec(1)]
+    loop.submit(first)
+    loop.step()                       # both in flight, one chunk done
+    late = quad_spec(2)
+    (jid,) = loop.submit(late)        # arrives while bucket is hot
+    loop.pump()
+    assert_bitexact(loop.result(jid), late)
+    for i, s in enumerate(first):
+        assert_bitexact(loop.result(f"job{i}"), s)
+    # one bucket program served all three jobs across the join
+    assert loop.stats.cache_misses == 1
+
+
+def test_interleaved_submits_bitexact_seeded():
+    """Randomized interleaving of submit() against scheduler steps —
+    every job must match its solo run bitwise no matter when it
+    arrived (the no-hypothesis twin of the property test below)."""
+    rng = np.random.default_rng(42)
+    for trial in range(3):
+        n = int(rng.integers(3, 7))
+        ks = rng.choice([10, 20], size=n)
+        specs = [quad_spec(100 * trial + i, K=int(k))
+                 for i, k in enumerate(ks)]
+        loop = AdmissionLoop(chunk_rounds=10, max_width=2,
+                             bucket_width=2, hp_mode="traced")
+        ids = []
+        i = 0
+        while i < len(specs) or ids and not all(
+                loop._done[j].is_set() for j in ids):
+            if i < len(specs) and (not ids or rng.random() < 0.5):
+                ids.extend(loop.submit(specs[i]))
+                i += 1
+            else:
+                loop.step()
+        for jid, spec in zip(ids, specs):
+            assert_bitexact(loop.result(jid), spec)
+
+
+def test_interleaving_property_hypothesis():
+    pytest.importorskip(
+        "hypothesis",
+        reason="property tests need hypothesis "
+               "(pip install -r requirements.txt)")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.lists(st.tuples(st.booleans(),
+                              st.sampled_from([10, 20])),
+                    min_size=1, max_size=5))
+    def prop(plan):
+        specs = [quad_spec(i, K=k) for i, (_, k) in enumerate(plan)]
+        loop = AdmissionLoop(chunk_rounds=10, max_width=2,
+                             bucket_width=2, hp_mode="traced")
+        ids = []
+        for step_first, _ in plan:
+            if step_first:
+                loop.step()
+        for spec in specs:
+            ids.extend(loop.submit(spec))
+            if len(ids) % 2:
+                loop.step()           # interleave boundary admits
+        loop.pump()
+        for jid, spec in zip(ids, specs):
+            assert_bitexact(loop.result(jid), spec)
+
+    prop()
+
+
+def test_run_returns_submission_order():
+    specs = [quad_spec(s) for s in range(3)]
+    loop = AdmissionLoop(chunk_rounds=10, max_width=4,
+                         hp_mode="traced")
+    ids = loop.submit(specs)
+    results = loop.run()
+    assert [r.job_id for r in results] == ids
+
+
+def test_duplicate_and_unknown_job_ids():
+    loop = AdmissionLoop(chunk_rounds=10, max_width=2,
+                         hp_mode="traced")
+    loop.submit(quad_spec(0, job_id="mine"))
+    with pytest.raises(ValueError, match="duplicate job_id"):
+        loop.submit(quad_spec(1, job_id="mine"))
+    with pytest.raises(KeyError, match="unknown job_id"):
+        loop.result("nobody")
+
+
+# ---------------------------------------------------------------------------
+# K-packing: one bucket, one trace, per-slot retirement
+# ---------------------------------------------------------------------------
+
+def test_packed_k_single_bucket_bitexact():
+    specs = [quad_spec(s, K=20 if s % 2 else 40) for s in range(6)]
+    loop = AdmissionLoop(chunk_rounds=10, max_width=4,
+                         hp_mode="traced")
+    ids = loop.submit(specs)
+    results = loop.run()
+    assert loop.stats.buckets == 1          # K=20 and K=40 packed
+    assert loop.stats.cache_misses == 1     # one chunk program
+    for spec, r in zip(specs, results):
+        assert r.rounds == spec.config.K    # own budget, not the max
+        assert_bitexact(r, spec)
+    assert sorted(ids) == sorted(r.job_id for r in results)
+
+
+def test_packing_off_buckets_by_k():
+    specs = [quad_spec(0, K=20), quad_spec(1, K=40)]
+    loop = AdmissionLoop(chunk_rounds=10, max_width=2, packing=False,
+                         hp_mode="traced")
+    loop.submit(specs)
+    results = loop.run()
+    assert loop.stats.buckets == 2          # exact-signature grouping
+    for spec, r in zip(specs, results):
+        assert_bitexact(r, spec)
+
+
+def test_incompatible_k_stays_queued_then_runs():
+    # K=7 has no common chunk length with K=20 at T=10; it must wait
+    # for its own bucket, not corrupt the packed one
+    specs = [quad_spec(0, K=20), quad_spec(1, K=7)]
+    loop = AdmissionLoop(chunk_rounds=10, max_width=2,
+                         hp_mode="traced")
+    loop.submit(specs)
+    results = loop.run()
+    assert loop.stats.buckets == 2
+    for spec, r in zip(specs, results):
+        assert r.rounds == spec.config.K
+        assert_bitexact(r, spec)
+
+
+# ---------------------------------------------------------------------------
+# priority classes and preemption
+# ---------------------------------------------------------------------------
+
+def test_priority_drains_before_submission_order():
+    loop = AdmissionLoop(chunk_rounds=10, max_width=2, bucket_width=2,
+                         hp_mode="traced")
+    batch = dataclasses.replace(quad_spec(0), klass="batch")
+    rt = dataclasses.replace(quad_spec(1), klass="realtime")
+    loop.submit([batch, rt])
+    entries = loop.queue.ordered()
+    assert [e.spec.job_id for e in entries] == ["job1", "job0"]
+
+
+def test_preemption_is_bitexact_and_counted():
+    obs.reset_metrics()
+    loop = AdmissionLoop(chunk_rounds=10, max_width=2, bucket_width=2,
+                         hp_mode="traced")
+    victims = [dataclasses.replace(quad_spec(s, K=40), klass="batch")
+               for s in (0, 1)]
+    loop.submit(victims)
+    loop.step()                                  # both at 10 rounds
+    rt = dataclasses.replace(quad_spec(2, K=20), klass="realtime")
+    (rt_id,) = loop.submit(rt)
+    loop.pump()
+    assert obs.counter_value("serve_preemptions_total") >= 1
+    assert_bitexact(loop.result(rt_id), rt)
+    for i, v in enumerate(victims):              # resumed, not re-run
+        r = loop.result(f"job{i}")
+        assert r.rounds == 40
+        assert_bitexact(r, v)
+
+
+def test_equal_priority_never_preempts():
+    obs.reset_metrics()
+    loop = AdmissionLoop(chunk_rounds=10, max_width=2, bucket_width=2,
+                         hp_mode="traced")
+    loop.submit([quad_spec(s, K=40) for s in (0, 1)])
+    loop.step()
+    loop.submit(quad_spec(2, K=20))              # same "standard" class
+    loop.pump()
+    assert obs.counter_value("serve_preemptions_total") == 0.0
+
+
+def test_realtime_is_not_preemptible():
+    obs.reset_metrics()
+    loop = AdmissionLoop(
+        chunk_rounds=10, max_width=2, bucket_width=2,
+        hp_mode="traced",
+        classes={**DEFAULT_CLASSES,
+                 "ultra": PriorityClass("ultra", 200)})
+    rts = [dataclasses.replace(quad_spec(s, K=40), klass="realtime")
+           for s in (0, 1)]
+    loop.submit(rts)
+    loop.step()
+    loop.submit(dataclasses.replace(quad_spec(2, K=20), klass="ultra"))
+    loop.pump()
+    assert obs.counter_value("serve_preemptions_total") == 0.0
+
+
+def test_preempt_checkpoint_resume_bitexact(tmp_path):
+    """Preempted carry spools through repro.checkpoint, the loop
+    crashes, and the resumed job still matches an uninterrupted run
+    bitwise — the subsystem's strongest exactness claim."""
+    victims = [dataclasses.replace(quad_spec(s, K=40), klass="batch")
+               for s in (0, 1)]
+    rt = dataclasses.replace(quad_spec(2, K=20), klass="realtime")
+    base = AdmissionLoop(chunk_rounds=10, max_width=2, bucket_width=2,
+                         hp_mode="traced")
+    base.submit(victims + [rt])
+    ref = {r.job_id: r for r in base.run()}
+
+    d = str(tmp_path / "svc")
+    crash = AdmissionLoop(chunk_rounds=10, max_width=2, bucket_width=2,
+                          hp_mode="traced", checkpoint_dir=d,
+                          checkpoint_every=1, crash_after_chunks=2,
+                          telemetry=False)
+    crash.submit(victims)
+    crash.step()                      # chunk 1 before the rt arrival
+    crash.submit(rt)                  # preempts at the next boundary
+    with pytest.raises(SimulatedCrash):
+        crash.pump()
+    assert glob.glob(os.path.join(d, "preempt", "step_*.npz"))
+
+    fresh = AdmissionLoop(chunk_rounds=10, max_width=2, bucket_width=2,
+                          hp_mode="traced", checkpoint_dir=d,
+                          telemetry=False)
+    fresh.pump()
+    assert fresh.stats.restarts == 1
+    for jid, r in ref.items():
+        got = fresh.result(jid)
+        assert got.rounds == r.rounds
+        assert np.array_equal(np.asarray(got.x), np.asarray(r.x))
+        assert np.array_equal(np.asarray(got.y), np.asarray(r.y))
+
+
+def test_queued_unadmitted_jobs_survive_crash(tmp_path):
+    specs = [quad_spec(s) for s in range(4)]
+    base = AdmissionLoop(chunk_rounds=10, max_width=2, bucket_width=2,
+                         hp_mode="traced")
+    base.submit(specs)
+    ref = base.run()
+
+    d = str(tmp_path / "svc")
+    crash = AdmissionLoop(chunk_rounds=10, max_width=2, bucket_width=2,
+                          hp_mode="traced", checkpoint_dir=d,
+                          checkpoint_every=1, crash_after_chunks=1,
+                          telemetry=False)
+    crash.submit(specs)
+    with pytest.raises(SimulatedCrash):
+        crash.pump()
+
+    fresh = AdmissionLoop(chunk_rounds=10, max_width=2, bucket_width=2,
+                          hp_mode="traced", checkpoint_dir=d,
+                          telemetry=False)
+    fresh._maybe_restore()
+    assert fresh.queue.job_ids() == ["job2", "job3"]   # never admitted
+    fresh.pump()
+    for i, r in enumerate(ref):
+        got = fresh.result(f"job{i}")
+        assert np.array_equal(np.asarray(got.x), np.asarray(r.x))
+    # a drained loop owes the disk nothing
+    fresh.step()
+    assert not glob.glob(os.path.join(d, "step_*.npz"))
+    assert not glob.glob(os.path.join(d, "loop_*.pkl"))
+    assert not os.path.isdir(os.path.join(d, "preempt"))
+
+
+def test_restore_rejects_mismatched_chunking(tmp_path):
+    d = str(tmp_path / "svc")
+    crash = AdmissionLoop(chunk_rounds=10, max_width=2,
+                          hp_mode="traced", checkpoint_dir=d,
+                          checkpoint_every=1, crash_after_chunks=1,
+                          telemetry=False)
+    crash.submit([quad_spec(0, K=20)])
+    with pytest.raises(SimulatedCrash):
+        crash.pump()
+    other = AdmissionLoop(chunk_rounds=5, max_width=2,
+                          hp_mode="traced", checkpoint_dir=d,
+                          telemetry=False)
+    with pytest.raises(ValueError, match="chunk_rounds=10"):
+        other._maybe_restore()
+
+
+# ---------------------------------------------------------------------------
+# tenant quotas
+# ---------------------------------------------------------------------------
+
+def test_quota_exhaustion_rejects_submit():
+    obs.reset_metrics()
+    led = TenantLedger(budgets={"acme": 1})
+    loop = AdmissionLoop(chunk_rounds=10, max_width=2, quotas=led,
+                         hp_mode="traced")
+    loop.submit(dataclasses.replace(quad_spec(0), tenant="acme"))
+    loop.pump()
+    assert led.spent("acme") > 0                 # exact ledger bytes
+    with pytest.raises(QuotaExceeded, match="acme"):
+        loop.submit(dataclasses.replace(quad_spec(1), tenant="acme"))
+    assert obs.counter_value("serve_quota_rejections_total",
+                             tenant="acme") == 1.0
+    # other tenants are unaffected
+    loop.submit(dataclasses.replace(quad_spec(2), tenant="beta"))
+    loop.pump()
+    assert_bitexact(loop.result("job2"), quad_spec(2))
+
+
+def test_quota_deprioritize_runs_last():
+    led = TenantLedger(budgets={"acme": 1}, mode="deprioritize")
+    led.charge("acme", 5)                        # already over budget
+    loop = AdmissionLoop(chunk_rounds=10, max_width=2, bucket_width=2,
+                         quotas=led, hp_mode="traced")
+    over = dataclasses.replace(quad_spec(0), tenant="acme")
+    normal = dataclasses.replace(quad_spec(1), tenant="beta",
+                                 klass="batch")
+    loop.submit([over, normal])
+    ordered = [e.spec.job_id for e in loop.queue.ordered()]
+    assert ordered == ["job1", "job0"]           # batch(0) > clamped
+    loop.pump()
+    assert_bitexact(loop.result("job0"), over)   # still runs, and runs right
+
+
+def test_quota_spent_survives_restart(tmp_path):
+    d = str(tmp_path / "svc")
+    led = TenantLedger(budgets={"acme": 10_000_000})
+    crash = AdmissionLoop(chunk_rounds=10, max_width=2, quotas=led,
+                          hp_mode="traced", checkpoint_dir=d,
+                          checkpoint_every=1, crash_after_chunks=2,
+                          telemetry=False)
+    crash.submit([dataclasses.replace(quad_spec(s), tenant="acme")
+                  for s in range(2)])
+    with pytest.raises(SimulatedCrash):
+        crash.pump()
+    spent = led.spent("acme")
+    assert spent > 0                             # chunk-2 boundary retired
+    led2 = TenantLedger(budgets={"acme": 10_000_000})
+    fresh = AdmissionLoop(chunk_rounds=10, max_width=2, quotas=led2,
+                          hp_mode="traced", checkpoint_dir=d,
+                          telemetry=False)
+    fresh._maybe_restore()
+    assert led2.spent("acme") == spent
+
+
+# ---------------------------------------------------------------------------
+# service thread + telemetry
+# ---------------------------------------------------------------------------
+
+def test_threaded_service_as_completed():
+    specs = [quad_spec(s) for s in range(4)]
+    with AdmissionLoop(chunk_rounds=10, max_width=4,
+                       hp_mode="traced") as svc:
+        ids = svc.submit(specs[:2])
+        time.sleep(0.01)                         # overlap with running work
+        ids += svc.submit(specs[2:])
+        got = {r.job_id for r in svc.as_completed(ids, timeout=300)}
+    assert got == set(ids)
+    for jid, spec in zip(ids, specs):
+        assert_bitexact(svc.result(jid), spec)
+
+
+def test_submit_from_background_thread():
+    loop = AdmissionLoop(chunk_rounds=10, max_width=2,
+                         hp_mode="traced").start()
+    try:
+        ids: list = []
+
+        def feeder():
+            for s in range(3):
+                ids.extend(loop.submit(quad_spec(s)))
+                time.sleep(0.005)
+
+        t = threading.Thread(target=feeder)
+        t.start()
+        t.join()
+        loop.drain(timeout=300)
+        for jid, s in zip(ids, range(3)):
+            assert_bitexact(loop.result(jid), quad_spec(s))
+    finally:
+        loop.stop()
+
+
+def test_telemetry_default_on_with_checkpoint_dir(tmp_path):
+    """Satellite: a checkpointing loop opens its own streaming trace +
+    metrics writers under <checkpoint_dir>/telemetry with no caller
+    plumbing, and closes them into valid artifacts."""
+    d = str(tmp_path / "svc")
+    loop = AdmissionLoop(chunk_rounds=10, max_width=2,
+                         hp_mode="traced", checkpoint_dir=d,
+                         checkpoint_every=1)
+    loop.submit([quad_spec(s) for s in range(2)])
+    loop.pump()
+    loop.stop()                                   # close telemetry
+    tdir = os.path.join(d, "telemetry")
+    traces = glob.glob(os.path.join(tdir, "serve-trace-*.json"))
+    metrics = glob.glob(os.path.join(tdir, "serve-metrics-*.jsonl"))
+    assert traces and metrics
+    evs = obs.read_trace(traces[0])
+    names = {e["name"] for e in evs if e.get("ph") in ("i", "I")}
+    assert "submit" in names and "retire" in names
+
+    off = AdmissionLoop(chunk_rounds=10, max_width=2,
+                        hp_mode="traced",
+                        checkpoint_dir=str(tmp_path / "quiet"),
+                        telemetry=False)
+    off.submit(quad_spec(9))
+    off.pump()
+    off.stop()
+    assert not glob.glob(os.path.join(str(tmp_path / "quiet"),
+                                      "telemetry", "*"))
+
+
+def test_solve_api_accepts_admission_loop():
+    from repro.core.problems import quadratic_bilevel
+    from repro.topology import make_network
+    from repro.solve import dagm_spec, solve
+    prob = quadratic_bilevel(6, 4, 8, seed=0)
+    net = make_network("ring", 6)
+    spec = dagm_spec(alpha=0.05, beta=0.1, K=20, M=5, U=3,
+                     dihgp="matrix_free", curvature=6.0, tier="serve")
+    loop = AdmissionLoop(chunk_rounds=10, max_width=2,
+                         hp_mode="traced", record_metrics=True)
+    res = solve(prob, net, spec, seed=3, serve_engine=loop)
+    ref = solve(prob, net, dataclasses.replace(spec, tier="reference"),
+                seed=3)
+    assert np.array_equal(np.asarray(res.x), np.asarray(ref.x))

@@ -214,3 +214,62 @@ def test_drive_poisson_end_to_end():
     # the engine's own gauges drained back to idle
     assert parsed["serve_queue_depth"] == 0.0
     assert parsed["serve_inflight_jobs"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# since= windows and SLOReport serialization
+# ---------------------------------------------------------------------------
+
+def test_job_latencies_since_scopes_the_window():
+    events = [
+        _instant("submit", 10.0, "old"), _instant("retire", 20.0, "old"),
+        _instant("submit", 110.0, "new"), _instant("retire", 150.0, "new"),
+    ]
+    assert set(job_latencies(events)) == {"old", "new"}
+    win = job_latencies(events, since=100.0)
+    assert set(win) == {"new"}
+    assert win["new"] == pytest.approx(40e-6)
+    # a submit before the window never pairs with a retire inside it
+    split = [_instant("submit", 50.0, "x"), _instant("retire", 150.0, "x")]
+    assert job_latencies(split, since=100.0) == {}
+
+
+def test_slo_report_as_record_jsonl_roundtrip(tmp_path):
+    import json
+    from repro.serve import SLOReport
+    rep = SLOReport(jobs=3, retired=3, wall_s=1.5, rate_hz=100.0,
+                    waves=2, peak_queue_depth=2,
+                    latencies_s=np.array([0.1, 0.2, 0.3]),
+                    p50_s=0.2, p99_s=0.298,
+                    throughput_jobs_s=2.0, results=[object()])
+    rec = rep.as_record()
+    assert rec["kind"] == "slo_report"
+    assert "results" not in rec                 # device arrays stay out
+    assert rec["latencies_s"] == [0.1, 0.2, 0.3]
+    w = obs.MetricsJsonlWriter(str(tmp_path), prefix="m")
+    w.write_record(rec, run="t")
+    w.close()
+    (path,) = list((tmp_path).glob("m-*.jsonl"))
+    (line,) = path.read_text().splitlines()
+    back = json.loads(line)
+    assert back["p99_s"] == rec["p99_s"] and back["run"] == "t"
+
+
+def test_drive_poisson_async_end_to_end():
+    from repro.serve import drive_poisson_async
+    from repro.serve.admission import AdmissionLoop
+    obs.reset_metrics()
+    cfg = dagm_spec(alpha=0.05, beta=0.1, K=6, M=3, U=2,
+                    dihgp="matrix_free", curvature=6.0)
+    specs = [JobSpec("quadratic", {"n": 6, "d1": 3, "d2": 6, "seed": s},
+                     cfg, seed=s, job_id=f"aslo{s}") for s in range(4)]
+    loop = AdmissionLoop(chunk_rounds=3, max_width=4, hp_mode="traced")
+    rep = drive_poisson_async(loop, specs, rate_hz=400.0, seed=11,
+                              run="ta")
+    assert rep.jobs == 4 and rep.retired == 4 and rep.waves == 0
+    assert [r.job_id for r in rep.results] == [s.job_id for s in specs]
+    assert np.all(rep.latencies_s > 0)
+    assert not loop.running                      # the driver owned it
+    parsed = obs.parse_prometheus(obs.prometheus_text(obs.registry()))
+    assert parsed['serve_job_latency_seconds_count{run="ta"}'] == 4.0
+    assert parsed["serve_queue_depth"] == 0.0
